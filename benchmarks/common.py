@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: timing, device-count bootstrap, reporting.
+
+CPU-host wall times are meaningful only RELATIVELY (layout A vs layout B on
+identical fake-device meshes); every benchmark therefore also reports the
+analytic TPU-v5e projection (bytes / link bandwidth, flops / peak) derived
+from the same buffer accounting the roofline uses.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "benchmarks"
+
+# TPU v5e model (per task spec)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+def ensure_devices(n: int):
+    """Must be called before jax import in the bench entrypoint."""
+    os.environ.setdefault("XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
+
+
+def timeit(fn, *args, warmup=1, iters=2):
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def write_result(name: str, payload: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def table(rows: list[dict], cols: list[str], title: str):
+    print(f"\n== {title} ==")
+    widths = {c: max(len(c), *(len(str(r.get(c, ''))) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))

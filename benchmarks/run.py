@@ -1,0 +1,43 @@
+"""Benchmark harness entrypoint: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only name]
+
+  memory    — Eq. 3 buffer-footprint reduction (deepep vs nccl_ep layouts)
+  ll        — Figs 7-8 LL dispatch/combine vs rank count
+  modes     — Table III LL/HT/baseline crossover by batch size
+  serving   — Table VII end-to-end serving metrics by EP backend
+
+Each sub-benchmark needs its own fake-device count, so they run as separate
+processes; results land in results/benchmarks/*.json.
+"""
+import argparse
+import subprocess
+import sys
+
+BENCHES = ["memory", "ll", "modes", "serving"]
+MODULES = {
+    "memory": "benchmarks.bench_memory",
+    "ll": "benchmarks.bench_ll_kernels",
+    "modes": "benchmarks.bench_modes",
+    "serving": "benchmarks.bench_serving",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=BENCHES)
+    args = ap.parse_args()
+    failed = []
+    for name in ([args.only] if args.only else BENCHES):
+        print(f"\n########## benchmark: {name} ##########", flush=True)
+        r = subprocess.run([sys.executable, "-m", MODULES[name]])
+        if r.returncode != 0:
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED benchmarks: {failed}")
+        sys.exit(1)
+    print("\nAll benchmarks complete. Results in results/benchmarks/.")
+
+
+if __name__ == "__main__":
+    main()

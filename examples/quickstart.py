@@ -1,0 +1,49 @@
+"""Quickstart: the unified EP API in ~40 lines.
+
+Creates an 8-rank EP group, routes tokens with a real top-k router, runs
+dispatch -> per-expert transform -> combine, and shows the mode switch
+(LL <-> HT <-> baseline) changing NOTHING at the call sites — the paper's
+headline property.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
+                        ep_dispatch, ep_combine)
+from repro.core.routing import RouterConfig, route
+
+E, K, T, H, N = 32, 4, 16, 64, 8
+mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+router_w = jnp.asarray(rng.randn(H, E) * 0.1, jnp.float32)
+
+for mode in ("ll", "ht", "baseline"):
+    group = ep_create_group(
+        EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                      top_k=K, mode=mode, payload_dtype=jnp.float32),
+        ep_size=N)
+
+    def step(x):
+        xt = x[0]
+        r = route(xt @ router_w, RouterConfig(num_experts=E, top_k=K))
+        handle = ep_create_handle(group, r.topk_idx, r.topk_weights)
+        expert_in, counts = ep_dispatch(group, handle, xt)     # [L, A, H]
+        expert_out = jnp.tanh(expert_in)                        # "expert FFN"
+        y = ep_combine(group, handle, expert_out)               # [T, H]
+        return y[None], counts[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P("data"),
+                              out_specs=(P("data"), P("data"))))
+    y, counts = f(x)
+    print(f"mode={mode:9s} out={y.shape} tokens/expert: "
+          f"min={int(counts.min())} max={int(counts.max())} "
+          f"total={int(counts.sum())} (== N*T*K = {N*T*K})")
+print("same call sites, three algorithms — ep mode is a group-creation knob.")

@@ -1,0 +1,71 @@
+"""Staged execution (send_only + ep_complete): the paper's double-buffered
+LL overlap (§III-B, §IV). Two micro-batches are pipelined so the dispatch
+collective of batch i+1 is exposed to XLA concurrently with the expert GEMM
+of batch i — the dataflow the paper realizes with double buffers and staged
+sends.
+
+  PYTHONPATH=src python examples/staged_overlap.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
+                        ep_dispatch, ep_combine, ep_complete)
+from repro.core.routing import RouterConfig, route
+
+E, K, T, H, N = 16, 4, 32, 128, 8
+mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+group = ep_create_group(EpGroupConfig(
+    num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K, mode="ll",
+    payload_dtype=jnp.float32), ep_size=N)
+rng = np.random.RandomState(0)
+router_w = jnp.asarray(rng.randn(H, E) * 0.1, jnp.float32)
+
+
+def expert_fn(y3d):
+    return jnp.tanh(y3d) * 1.5
+
+
+def pipelined(xs):            # xs: [2, T, H] two micro-batches per rank
+    outs = []
+    handles, pendings = [], []
+    for i in range(2):        # stage 1: launch both dispatches
+        r = route(xs[i] @ router_w, RouterConfig(num_experts=E, top_k=K))
+        h = ep_create_handle(group, r.topk_idx, r.topk_weights)
+        p = ep_dispatch(group, h, xs[i], send_only=True)
+        handles.append(h)
+        pendings.append(p)
+    for i in range(2):        # stage 2: complete + compute + combine
+        y3d, counts = ep_complete(group, handles[i], pendings[i])
+        pc = ep_combine(group, handles[i], expert_fn(y3d), send_only=True)
+        outs.append(ep_complete(group, handles[i], pc))
+    return jnp.stack(outs)
+
+
+def sequential(xs):
+    outs = []
+    for i in range(2):
+        r = route(xs[i] @ router_w, RouterConfig(num_experts=E, top_k=K))
+        h = ep_create_handle(group, r.topk_idx, r.topk_weights)
+        y3d, counts = ep_dispatch(group, h, xs[i])
+        outs.append(ep_combine(group, h, expert_fn(y3d)))
+    return jnp.stack(outs)
+
+
+if __name__ == "__main__":
+    x = jnp.asarray(rng.randn(N, 2, T, H), jnp.float32)
+    sm = lambda f: jax.jit(jax.shard_map(
+        lambda a: f(a[0])[None], mesh=mesh, in_specs=P("data"),
+        out_specs=P("data")))
+    y_pipe = sm(pipelined)(x)
+    y_seq = sm(sequential)(x)
+    np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_seq),
+                               rtol=1e-5, atol=1e-5)
+    print(f"staged == fused: True; out {y_pipe.shape}")
+    print("HLO of the staged version exposes both a2a ops before the first "
+          "expert GEMM -> XLA's scheduler overlaps comm with compute.")

@@ -1,0 +1,60 @@
+"""Per-architecture configs. Each module exposes:
+  full_config(shape: str | None) -> ArchConfig   — the exact published config,
+      with shape-dependent deployment knobs (EP axis/mode, microbatching);
+  smoke_config() -> ArchConfig                    — a reduced same-family config
+      for CPU smoke tests (small depth/width/experts, tiny vocab).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "minicpm3_4b", "internlm2_20b", "gemma3_27b", "chatglm3_6b",
+    "deepseek_v3_671b", "dbrx_132b", "phi3_vision_4_2b", "zamba2_7b",
+    "seamless_m4t_large_v2", "mamba2_780m",
+]
+
+# canonical ids (as assigned) -> module names
+ARCH_IDS = {
+    "minicpm3-4b": "minicpm3_4b",
+    "internlm2-20b": "internlm2_20b",
+    "gemma3-27b": "gemma3_27b",
+    "chatglm3-6b": "chatglm3_6b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "dbrx-132b": "dbrx_132b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "zamba2-7b": "zamba2_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mamba2-780m": "mamba2_780m",
+}
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "train"),       # per assignment: lowers train_step
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# long_500k runs only for sub-quadratic archs (see DESIGN.md §5)
+LONG_OK = {"mamba2-780m", "zamba2-7b", "gemma3-27b"}
+
+
+def get_config(arch_id: str, shape: str | None = None):
+    mod = importlib.import_module(f"repro.configs.{ARCH_IDS[arch_id]}")
+    return mod.full_config(shape)
+
+
+def get_smoke(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{ARCH_IDS[arch_id]}")
+    return mod.smoke_config()
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with skips resolved."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            skip = (s == "long_500k" and a not in LONG_OK)
+            out.append((a, s, skip))
+    return out

@@ -1,0 +1,22 @@
+"""Mamba2-780m [arXiv:2405.21060]: 48L d_model=1536 (attn-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality). Pure SSM -> runs long_500k."""
+from repro.models.config import ArchConfig, SSMSpec
+
+
+def full_config(shape=None):
+    micro = {"train_4k": 2, "prefill_32k": 1}.get(shape, 1)
+    return ArchConfig(
+        name="mamba2-780m", family="ssm", num_layers=48, d_model=1536,
+        d_ff=0, vocab=50280,
+        ssm=SSMSpec(d_state=128, headdim=64, expand=2, conv_width=4, chunk=256),
+        tie_embeddings=True, microbatch=micro,
+    )
+
+
+def smoke_config():
+    return ArchConfig(
+        name="mamba2-smoke", family="ssm", num_layers=2, d_model=64,
+        d_ff=0, vocab=256,
+        ssm=SSMSpec(d_state=16, headdim=16, expand=2, conv_width=4, chunk=8),
+        tie_embeddings=True, remat=False,
+    )

@@ -1,0 +1,25 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596]: enc-dec, 24L encoder + 24L
+decoder, d_model=1024 16H d_ff=8192 vocab=256206. Audio frontend is a STUB:
+input_specs() provides precomputed frame embeddings [B, src_len, d_model]."""
+from repro.models.config import ArchConfig, AttnSpec
+
+
+def full_config(shape=None):
+    micro = {"train_4k": 2, "prefill_32k": 1}.get(shape, 1)
+    return ArchConfig(
+        name="seamless-m4t-large-v2", family="encdec", num_layers=48,
+        enc_layers=24, dec_layers=24, cross_attn=True,
+        d_model=1024, d_ff=8192, vocab=256206, src_len=4096,
+        attn=AttnSpec(n_heads=16, n_kv=16, head_dim=64),
+        act="gelu", tie_embeddings=True, microbatch=micro,
+    )
+
+
+def smoke_config():
+    return ArchConfig(
+        name="seamless-smoke", family="encdec", num_layers=4,
+        enc_layers=2, dec_layers=2, cross_attn=True,
+        d_model=64, d_ff=128, vocab=256, src_len=16,
+        attn=AttnSpec(n_heads=4, n_kv=4, head_dim=16),
+        act="gelu", tie_embeddings=True, remat=False,
+    )

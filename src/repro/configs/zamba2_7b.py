@@ -1,0 +1,25 @@
+"""Zamba2-7B [arXiv:2411.15242]: 81L d_model=3584 32H d_ff=14336,
+vocab=32000, ssm_state=64 — Mamba2 backbone + ONE shared attention+FFN block
+applied every 6 mamba blocks. Hybrid -> runs long_500k."""
+from repro.models.config import ArchConfig, AttnSpec, SSMSpec
+
+
+def full_config(shape=None):
+    micro = {"train_4k": 4, "prefill_32k": 1}.get(shape, 1)
+    return ArchConfig(
+        name="zamba2-7b", family="hybrid", num_layers=81, d_model=3584,
+        d_ff=14336, vocab=32000,
+        attn=AttnSpec(n_heads=32, n_kv=32, head_dim=112),
+        ssm=SSMSpec(d_state=64, headdim=64, expand=2, conv_width=4, chunk=128),
+        shared_attn_period=6, microbatch=micro,
+    )
+
+
+def smoke_config():
+    return ArchConfig(
+        name="zamba2-smoke", family="hybrid", num_layers=5, d_model=64,
+        d_ff=128, vocab=256,
+        attn=AttnSpec(n_heads=4, n_kv=4, head_dim=16),
+        ssm=SSMSpec(d_state=16, headdim=16, expand=2, conv_width=4, chunk=8),
+        shared_attn_period=2, remat=False,
+    )

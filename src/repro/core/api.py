@@ -1,0 +1,114 @@
+"""Unified EP API — the paper's headline contribution (§III).
+
+One dispatch/combine pair for every workload; the algorithm (LL / HT /
+baseline) is chosen **once, at group creation** (`EpGroupConfig.mode`,
+"auto" selects by `max_tokens_per_rank` like the paper's planned
+auto-detection). Call sites never change across modes:
+
+    group  = ep_create_group(cfg, mesh=mesh)
+    handle = ep_create_handle(group, topk_idx, topk_weights)
+    xs, counts = ep_dispatch(group, handle, tokens)
+    ...expert FFN...
+    out = ep_combine(group, handle, expert_out)
+
+All functions must be called *inside* the sharded region (shard_map over the
+group's EP axes) — they are collectives, exactly like `jax.lax.psum`. The
+handle is shared between forward and backward (the Megatron "cached dispatch"
+integration, §VI-B): JAX AD transposes dispatch into combine and vice versa
+through the same traced slot maps, so handle reuse is automatic.
+
+The tagged-tensor entry points (`ep_dispatch_tensors`) mirror the C API's
+``ncclNDTensor_t`` signature for framework integrations that want role
+validation.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.group import (EpGroup, EpGroupConfig, EpHandle, ep_create_group,
+                              ep_handle_get_num_recv_tokens, ep_handle_destroy)
+from repro.core import ll as _ll
+from repro.core import ht as _ht
+from repro.core import baseline as _bl
+from repro.core.tensor import EpTensor, EpTensorTag, validate
+
+__all__ = [
+    "EpGroup", "EpGroupConfig", "EpHandle", "ep_create_group",
+    "ep_create_handle", "ep_dispatch", "ep_combine", "ep_complete",
+    "ep_handle_get_num_recv_tokens", "ep_handle_destroy",
+    "ep_dispatch_tensors", "ep_combine_tensors",
+]
+
+
+def ep_create_handle(group: EpGroup, topk_idx: jax.Array,
+                     topk_weights: jax.Array, num_tokens=None) -> EpHandle:
+    """``ncclEpCreateHandle``: capture per-forward-pass routing state.
+
+    HT/baseline run their metadata exchange here (paper §III-C2); LL's
+    exchange is folded in too (strictly earlier than the paper's in-dispatch
+    headers, see DESIGN.md §2)."""
+    mode = group.mode
+    if mode == "ll":
+        return _ll.ll_create_handle(group, topk_idx, topk_weights, num_tokens)
+    if mode == "ht":
+        return _ht.ht_create_handle(group, topk_idx, topk_weights, num_tokens)
+    return _bl.baseline_create_handle(group, topk_idx, topk_weights, num_tokens)
+
+
+def ep_dispatch(group: EpGroup, handle: EpHandle, tokens: jax.Array, *,
+                send_only: bool = False):
+    """``ncclEpDispatch``: route tokens to their experts.
+
+    Returns (expert_major [L, A, H], tokens_per_expert [L]) — or, with
+    send_only=True in LL mode, a PendingDispatch for staged overlap."""
+    mode = group.mode
+    if mode == "ll":
+        return _ll.ll_dispatch(group, handle, tokens, send_only=send_only)
+    if mode == "ht":
+        return _ht.ht_dispatch(group, handle, tokens, send_only=send_only)
+    return _bl.baseline_dispatch(group, handle, tokens, send_only=send_only)
+
+
+def ep_combine(group: EpGroup, handle: EpHandle, expert_out: jax.Array, *,
+               send_only: bool = False):
+    """``ncclEpCombine``: gather expert outputs, weighted-reduce to original
+    token order. Input layout must match the group's dispatch output."""
+    mode = group.mode
+    if mode == "ll":
+        return _ll.ll_combine(group, handle, expert_out, send_only=send_only)
+    if mode == "ht":
+        return _ht.ht_combine(group, handle, expert_out, send_only=send_only)
+    return _bl.baseline_combine(group, handle, expert_out, send_only=send_only)
+
+
+def ep_complete(group: EpGroup, handle: EpHandle, pending):
+    """``ncclEpComplete``: finalize a staged (send_only) operation."""
+    if isinstance(pending, _ll.PendingDispatch):
+        return _ll.ll_complete_dispatch(group, handle, pending)
+    if isinstance(pending, _ll.PendingCombine):
+        return _ll.ll_complete_combine(group, handle, pending)
+    raise TypeError(f"not a pending EP operation: {type(pending)}")
+
+
+# ---------------------------------------------------------------------------
+# tagged-tensor surface (C-API parity)
+# ---------------------------------------------------------------------------
+
+def ep_dispatch_tensors(group: EpGroup, handle: EpHandle,
+                        inputs: Sequence[EpTensor], *, send_only=False):
+    toks = next(t for t in inputs if t.tag == EpTensorTag.TOKENS)
+    tokens = validate(toks, tag=EpTensorTag.TOKENS, ndim=2)
+    out, counts = ep_dispatch(group, handle, tokens, send_only=send_only)
+    return (EpTensor(out, EpTensorTag.TOKENS),
+            EpTensor(counts, EpTensorTag.TOKENS_PER_EXPERTS))
+
+
+def ep_combine_tensors(group: EpGroup, handle: EpHandle,
+                       inputs: Sequence[EpTensor], *, send_only=False):
+    toks = next(t for t in inputs if t.tag == EpTensorTag.TOKENS)
+    y = validate(toks, tag=EpTensorTag.TOKENS, ndim=3)
+    out = ep_combine(group, handle, y, send_only=send_only)
+    return EpTensor(out, EpTensorTag.TOKENS)

@@ -1,0 +1,204 @@
+"""EpGroup / EpHandle: the paper's two-tier resource hierarchy (§III-C).
+
+``EpGroup`` is the long-lived tier: algorithm mode, expert count, capacities
+(= buffer sizing), EP axis names, payload dtype. Created once per model via
+``ep_create_group`` — the analogue of ``ncclEpCreateGroup`` (a collective call;
+here, a pure-config construction validated against the mesh).
+
+``EpHandle`` is the per-forward-pass tier: the routing state (globally
+gathered ``topk_idx``), derived slot maps and counts. Created inside the
+sharded computation via ``ep_create_handle`` (≈ ``ncclEpCreateHandle``); shared
+between matching dispatch and combine of forward *and* backward passes — in
+JAX, the backward pass reuses the very same traced routing constants, which is
+the paper's "cached dispatch" for free.
+
+All shapes are static: capacities are part of the group config, mirroring the
+paper's own worst-case buffer sizing at init (§V-C). ``capacity_factor=None``
+means zero-drop sizing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+AxisNames = tuple[str, ...]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class EpGroupConfig:
+    """User-facing configuration — analogue of ``ncclEpGroupConfig_t``."""
+
+    num_experts: int
+    max_tokens_per_rank: int                  # B_cap — per-EP-rank token budget
+    hidden: int
+    top_k: int
+    mode: Literal["ll", "ht", "baseline", "auto"] = "auto"
+    # LL layout selection: "nccl_ep" = the paper's memory-optimized layout
+    # (per-rank dedup, packed combine); "deepep" = per-(expert,rank) slots.
+    ll_layout: Literal["nccl_ep", "deepep"] = "nccl_ep"
+    # None = zero-drop capacities (faithful); float = GShard-style factor.
+    capacity_factor: float | None = None
+    # Per-expert output-region capacity factor (LL 3D layout compaction).
+    # None = paper layout: num_ranks * max_tokens_per_rank slots per expert.
+    expert_capacity_factor: float | None = None
+    payload_dtype: jnp.dtype = jnp.bfloat16   # dispatch payload (bf16 | fp8)
+    quantize_dispatch: bool = False           # fp8 payload + fp32 scales
+    quant_block: int = 128                    # scale granularity along hidden
+    # HT hierarchy: inter-axis (slow, e.g. "pod") set when EP spans pods.
+    ep_axis: AxisNames = ("data",)
+    ht_hierarchical: bool = False             # 2-stage a2a when EP = (outer, inner)
+    ht_pod_dedup: bool = False                # stage-3 dedup (perf option)
+    slot_align: int = 8                       # capacity rounding (TPU lane-friendly)
+
+    LL_BATCH_THRESHOLD = 128  # paper: LL targets 1–128 tokens/rank
+
+    def resolved_mode(self) -> str:
+        if self.mode != "auto":
+            return self.mode
+        # Paper §III: auto mode detection from workload characteristics.
+        return "ll" if self.max_tokens_per_rank <= self.LL_BATCH_THRESHOLD else "ht"
+
+
+@dataclasses.dataclass(frozen=True)
+class EpGroup:
+    """Resolved, validated group — static (hashable) so it can close over jits."""
+
+    cfg: EpGroupConfig
+    ep_size: int                 # N — total EP ranks
+    local_experts: int           # L = E / N
+    # --- LL capacities ---
+    ll_disp_cap: int             # C_d: slots per (src,dst) rank pair, dispatch
+    ll_comb_cap: int             # C_c: slots per (src,dst) rank pair, combine
+    ll_expert_cap: int           # A: rows per local expert in 3D output
+    # --- HT capacities ---
+    ht_pair_cap: int             # C_h: entry slots per rank pair (flat a2a)
+    ht_expert_cap: int           # A_h: rows per local expert in output
+    ht_stage1_cap: int           # C1: hierarchical intra-pod stage
+    ht_stage2_cap: int           # C2: hierarchical inter-pod stage
+    inner_size: int              # N_i (hierarchical); == ep_size when flat
+    outer_size: int              # N_o
+
+    @property
+    def mode(self) -> str:
+        return self.cfg.resolved_mode()
+
+    # ---- buffer byte accounting (for Eq. 3 benchmark + roofline) ----
+    def payload_bytes_per_token(self) -> int:
+        h = self.cfg.hidden
+        if self.cfg.quantize_dispatch:
+            return h + 4 * math.ceil(h / self.cfg.quant_block)  # fp8 + fp32 scales
+        return h * jnp.dtype(self.cfg.payload_dtype).itemsize
+
+    def ll_dispatch_buffer_bytes(self) -> int:
+        return self.ep_size * self.ll_disp_cap * self.payload_bytes_per_token()
+
+    def ll_combine_buffer_bytes(self) -> int:
+        h = self.cfg.hidden * jnp.dtype(self.cfg.payload_dtype).itemsize
+        return self.ep_size * self.ll_comb_cap * h
+
+
+def ep_create_group(
+    cfg: EpGroupConfig,
+    *,
+    ep_size: int | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    inner_size: int | None = None,
+) -> EpGroup:
+    """Create the long-lived group. Pass either a mesh (sizes are read from
+    ``cfg.ep_axis``) or explicit ``ep_size``. Mirrors ``ncclEpCreateGroup``."""
+    if mesh is not None:
+        sizes = [mesh.shape[a] for a in cfg.ep_axis]
+        ep_size = math.prod(sizes)
+        inner_size = sizes[-1]
+    assert ep_size is not None
+    if inner_size is None:
+        inner_size = ep_size
+    outer_size = ep_size // inner_size
+
+    E, K, B = cfg.num_experts, cfg.top_k, cfg.max_tokens_per_rank
+    N = ep_size
+    if E % N != 0:
+        raise ValueError(f"num_experts={E} must divide by ep_size={N}")
+    L = E // N
+    cf = cfg.capacity_factor
+    al = cfg.slot_align
+
+    def cap(expected: float, zero_drop: int) -> int:
+        if cf is None:
+            return _round_up(zero_drop, al)
+        return min(_round_up(max(int(math.ceil(cf * expected)), al), al), _round_up(zero_drop, al))
+
+    # LL (paper §IV-D): dispatch dedups to one send per destination *rank*;
+    # zero-drop bound is B (every token can need every rank at most once).
+    ll_disp_cap = cap(B * min(K, N) / N, B)
+    # combine: one entry per (t,k) owned; zero-drop bound B*min(K,L).
+    ll_comb_cap = cap(B * K / N, B * min(K, L))
+    # LL 3D expert-major region: paper layout = num_ranks * B rows per expert.
+    ecf = cfg.expert_capacity_factor
+    if ecf is None:
+        ll_expert_cap = N * B
+    else:
+        ll_expert_cap = min(_round_up(int(math.ceil(ecf * N * B * K / E)), 128), N * B)
+
+    # HT flat: one entry per (t,k); pair capacity around B*K/N.
+    ht_pair_cap = cap(B * K / N, B * min(K, L))
+    if ecf is None:
+        ht_expert_cap = _round_up(min(N * B, int(N * ht_pair_cap // max(L, 1)) or 1), 128)
+        ht_expert_cap = max(ht_expert_cap, 128)
+    else:
+        ht_expert_cap = _round_up(int(math.ceil(ecf * N * B * K / E)), 128)
+    # Hierarchical stages: stage1 dedup over distinct destination-inner index,
+    # stage2 dedup over distinct destination chip.
+    ki = min(K, inner_size)
+    ht_stage1_cap = cap(B * ki / inner_size, B)
+    # a rail chip holds <= inner_size * C1 entries, fanned over outer axis
+    ko = min(K, outer_size) if outer_size > 1 else 1
+    ht_stage2_cap = cap(inner_size * ht_stage1_cap * ko / max(outer_size, 1),
+                        inner_size * ht_stage1_cap)
+
+    return EpGroup(
+        cfg=cfg, ep_size=N, local_experts=L,
+        ll_disp_cap=ll_disp_cap, ll_comb_cap=ll_comb_cap, ll_expert_cap=ll_expert_cap,
+        ht_pair_cap=ht_pair_cap, ht_expert_cap=ht_expert_cap,
+        ht_stage1_cap=ht_stage1_cap, ht_stage2_cap=ht_stage2_cap,
+        inner_size=inner_size, outer_size=outer_size,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EpHandle:
+    """Per-forward-pass routing state (analogue of ``ncclEpHandle_t``).
+
+    Everything here is derived from ``topk_idx`` gathered across the EP axis —
+    the paper's metadata exchange (explicit at handle creation in HT mode;
+    folded into dispatch headers in LL mode; here always at handle creation,
+    which is strictly cheaper than headers since the slot maps are then
+    computed redundantly-but-locally on every rank instead of being shipped).
+    """
+
+    topk_idx: jax.Array          # [T, K] local routing (this rank's tokens)
+    topk_weights: jax.Array      # [T, K] combine weights
+    topk_global: jax.Array       # [N, T, K] all-gathered routing
+    tokens_per_expert: jax.Array  # [L] int32 — received tokens per local expert
+    num_recv_tokens: jax.Array   # [] int32 — total received (HT query, §III-B)
+    # number of *valid* tokens on this rank (<= T); slots beyond are padding
+    num_tokens: jax.Array        # [] int32
+
+
+def ep_handle_get_num_recv_tokens(handle: EpHandle) -> jax.Array:
+    """``ncclEpHandleGetNumRecvTokens`` — exact receive count (HT mode)."""
+    return handle.num_recv_tokens
+
+
+def ep_handle_destroy(handle: EpHandle) -> None:
+    """No-op in JAX (buffers are managed by XLA); kept for API parity."""
+    del handle

@@ -1,0 +1,338 @@
+"""Low-Latency (LL) mode — paper §IV.
+
+Targets inference decode (1–128 tokens/rank). Direct all-to-all mesh over the
+EP axis; 3D expert-major output ``[L, A, H]`` feeding grouped GEMM.
+
+Two buffer layouts, selected by ``EpGroupConfig.ll_layout``:
+
+* ``"deepep"`` — the original DeepEP layout the paper starts from: one slot
+  per (expert, source-rank) pair, ``O(E·B·P)`` buffers. A token routed to k
+  experts is sent k times. Dispatch/combine become pure reshape/transpose
+  around the all-to-all (no metadata needed).
+
+* ``"nccl_ep"`` — the paper's memory-optimized layout (§IV-D): a token is sent
+  **once per destination rank** (routing dedup) into a per-rank block of
+  ``C_d ≤ B`` slots → ``O(N·B·P)``; combine responses are packed compactly at
+  per-(t,k) slots → ``O(B·K·P)``. The paper ships routing info in message
+  headers; here both sides compute identical slot maps from the handle's
+  replicated ``topk_idx``, so the header is zero bytes (see slots.py).
+
+Both layouts support staged execution (``send_only=True`` + ``ll_complete``),
+the JAX rendering of the paper's double-buffered overlap: the returned pending
+buffers let XLA schedule the expert GEMM of one micro-batch against the
+all-to-all of the next.
+
+Quantized dispatch (fp8 payload + fp32 scales, §IV-B) rides the same slot maps
+with a parallel scales buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.group import EpGroup, EpHandle
+from repro.core import slots as S
+from repro.kernels import ops as K
+
+
+def _axis(group: EpGroup):
+    a = group.cfg.ep_axis
+    return a if len(a) > 1 else a[0]
+
+
+def _my_rank(group: EpGroup) -> jax.Array:
+    a = group.cfg.ep_axis
+    if len(a) == 1:
+        return jax.lax.axis_index(a[0])
+    # row-major over (outer, inner) — must match expert block distribution
+    r = jax.lax.axis_index(a[0])
+    for name in a[1:]:
+        r = r * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return r
+
+
+def _a2a(x, group):
+    return jax.lax.all_to_all(x, _axis(group), split_axis=0, concat_axis=0, tiled=False)
+
+
+# --------------------------------------------------------------------------
+# handle
+# --------------------------------------------------------------------------
+
+def ll_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) -> EpHandle:
+    """All-gather routing metadata; compute per-local-expert counts.
+
+    In the paper LL metadata travels in dispatch headers; gathering it at
+    handle creation is the synchronized-collective equivalent (§IV-D a)."""
+    N, L = group.ep_size, group.local_experts
+    T, Kk = topk_idx.shape
+    me = _my_rank(group)
+    if num_tokens is not None:
+        # padded tokens route to sentinel expert E (rank N, OOB everywhere):
+        # every rank's slot accounting then agrees without gathering counts.
+        pad = jnp.arange(T)[:, None] >= num_tokens
+        topk_idx = jnp.where(pad, group.cfg.num_experts, topk_idx)
+    topk_g = jax.lax.all_gather(topk_idx, _axis(group), axis=0, tiled=False)
+    topk_g = topk_g.reshape(N, T, Kk)
+    mine = (topk_g // L) == me                          # [N, T, K]
+    e_l = (topk_g - me * L).clip(0, L - 1)
+    counts = jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
+        mine.reshape(-1).astype(jnp.int32))
+    nt = jnp.asarray(T, jnp.int32) if num_tokens is None else num_tokens
+    return EpHandle(
+        topk_idx=topk_idx, topk_weights=topk_weights, topk_global=topk_g,
+        tokens_per_expert=counts, num_recv_tokens=counts.sum(), num_tokens=nt,
+    )
+
+
+# --------------------------------------------------------------------------
+# staged-execution containers
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PendingDispatch:
+    recv: jax.Array                    # [N, C, H'] raw received payload
+    recv_scales: jax.Array | None      # [N, C, H/Q] when quantized
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PendingCombine:
+    recv: jax.Array                    # [N, C_c, H]
+
+
+# --------------------------------------------------------------------------
+# shared entry geometry
+# --------------------------------------------------------------------------
+
+def _entry_geometry(group: EpGroup, topk_g: jax.Array, me):
+    """Per-entry coordinates used by unpack/combine, derived identically on
+    every rank. Entries are flattened (src-rank-major, then token, then k)."""
+    N, L = group.ep_size, group.local_experts
+    _, T, Kk = topk_g.shape
+    dst_g = topk_g // L                                  # [N, T, K] dest rank
+    mine = dst_g == me
+    e_l = (topk_g - me * L).clip(0, L - 1)
+    return dst_g, mine, e_l
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+def ll_dispatch(group: EpGroup, handle: EpHandle, x: jax.Array, *, send_only=False):
+    """x: [T, H] local tokens -> (out3d [L, A, H], tokens_per_expert [L]).
+
+    With send_only=True returns a PendingDispatch (paper's staged mode)."""
+    if group.cfg.ll_layout == "deepep":
+        pending = _deepep_dispatch_send(group, handle, x)
+    else:
+        pending = _ncclep_dispatch_send(group, handle, x)
+    if send_only:
+        return pending
+    return ll_complete_dispatch(group, handle, pending)
+
+
+def ll_complete_dispatch(group: EpGroup, handle: EpHandle, pending: PendingDispatch):
+    if group.cfg.ll_layout == "deepep":
+        return _deepep_dispatch_recv(group, handle, pending)
+    return _ncclep_dispatch_recv(group, handle, pending)
+
+
+def _quantize(group: EpGroup, x):
+    if not group.cfg.quantize_dispatch:
+        return x.astype(group.cfg.payload_dtype), None
+    return K.quantize_fp8(x, block=group.cfg.quant_block)
+
+
+def _dequant_rows(group: EpGroup, rows, scales):
+    if scales is None:
+        return rows
+    return K.dequantize_fp8(rows, scales)
+
+
+# ---- nccl_ep (memory-optimized) layout ----
+
+def _ncclep_dispatch_send(group, handle, x):
+    N = group.ep_size
+    T, Kk = handle.topk_idx.shape
+    C = group.ll_disp_cap
+    dst = handle.topk_idx // group.local_experts            # [T, K]
+    token_valid = jnp.arange(T) < handle.num_tokens
+    sends = jnp.zeros((T, N), bool).at[
+        jnp.arange(T)[:, None], dst].set(True, mode="drop")
+    sends = sends & token_valid[:, None]                    # [T, N] dedup per rank
+    # slot of token t in the r->d block: running count over t (the "counter")
+    pos = jnp.cumsum(sends.astype(jnp.int32), axis=0) - 1   # [T, N]
+    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, N)).reshape(-1)
+    d_idx = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N)).reshape(-1)
+    gmap = S.build_gather_map(d_idx, pos.reshape(-1), t_idx, sends.reshape(-1),
+                              N, C, sentinel=T)
+    xq, scales = _quantize(group, x)
+    send = S.gather_rows(xq, gmap)                          # [N, C, H]
+    recv = _a2a(send, group)
+    recv_s = None
+    if scales is not None:
+        recv_s = _a2a(S.gather_rows(scales, gmap), group)
+    return PendingDispatch(recv=recv, recv_scales=recv_s)
+
+
+def _ncclep_dispatch_recv(group, handle, pending):
+    """Unpack [N, C_d, H] into the 3D expert-major tensor [L, A, H]."""
+    N, L, A, C = group.ep_size, group.local_experts, group.ll_expert_cap, group.ll_disp_cap
+    me = _my_rank(group)
+    topk_g = handle.topk_global
+    _, T, Kk = topk_g.shape
+    dst_g, mine, e_l = _entry_geometry(group, topk_g, me)
+    # slot of token (r,t) in the r->me block (same counter as the sender's)
+    sends_to_me = mine.any(-1)                              # [N, T]
+    pos_to_me = jnp.cumsum(sends_to_me.astype(jnp.int32), axis=1) - 1   # [N, T]
+    slot_valid = sends_to_me & (pos_to_me < C)
+    # recv flat row index of token (r, t)
+    recv_row = jnp.arange(N)[:, None] * C + pos_to_me       # [N, T]
+    # expert-region position of entry (r,t,k): running count per local expert
+    ent_valid = (mine & slot_valid[:, :, None]).reshape(-1)
+    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
+    rows_src = jnp.broadcast_to(recv_row[:, :, None], (N, T, Kk)).reshape(-1)
+    gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows_src, ent_valid,
+                              L, A, sentinel=N * C)
+    out = S.gather_rows(S.flat_rows(pending.recv), gmap)    # [L, A, H]
+    if pending.recv_scales is not None:
+        sc = S.gather_rows(S.flat_rows(pending.recv_scales), gmap, fill=0)
+        out = _dequant_rows(group, out, sc)
+    return out, counts
+
+
+# ---- deepep (per-(expert,rank)-slot) layout ----
+
+def _deepep_dispatch_send(group, handle, x):
+    """One send per (t, k) entry into slot (dst_rank, e_local*B + t)."""
+    N, L = group.ep_size, group.local_experts
+    T, Kk = handle.topk_idx.shape
+    B = group.cfg.max_tokens_per_rank
+    assert T <= B
+    dst = handle.topk_idx // L
+    e_l = handle.topk_idx % L
+    token_valid = (jnp.arange(T) < handle.num_tokens)
+    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk))
+    slot = e_l * B + t_idx                                   # [T, K]
+    gmap = S.build_gather_map(dst.reshape(-1), slot.reshape(-1), t_idx.reshape(-1),
+                              jnp.broadcast_to(token_valid[:, None], (T, Kk)).reshape(-1),
+                              N, L * B, sentinel=T)
+    xq, scales = _quantize(group, x)
+    send = S.gather_rows(xq, gmap)                           # [N, L*B, H]
+    recv = _a2a(send, group)
+    recv_s = _a2a(S.gather_rows(scales, gmap), group) if scales is not None else None
+    return PendingDispatch(recv=recv, recv_scales=recv_s)
+
+
+def _deepep_dispatch_recv(group, handle, pending):
+    """[N, L*B, H] -> [L, N*B, H] is a pure transpose (the layout's virtue)."""
+    N, L = group.ep_size, group.local_experts
+    B = group.cfg.max_tokens_per_rank
+    H = pending.recv.shape[-1]
+    out = pending.recv.reshape(N, L, B, H).transpose(1, 0, 2, 3).reshape(L, N * B, H)
+    if pending.recv_scales is not None:
+        q = pending.recv_scales.shape[-1]
+        sc = pending.recv_scales.reshape(N, L, B, q).transpose(1, 0, 2, 3).reshape(L, N * B, q)
+        out = _dequant_rows(group, out, sc)
+    me = _my_rank(group)
+    _, mine, e_l = _entry_geometry(group, handle.topk_global, me)
+    counts = jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
+        mine.reshape(-1).astype(jnp.int32))
+    return out, counts
+
+
+# --------------------------------------------------------------------------
+# combine
+# --------------------------------------------------------------------------
+
+def ll_combine(group: EpGroup, handle: EpHandle, y3d: jax.Array, *, send_only=False):
+    """y3d: [L, A, H] expert outputs -> [T, H] weighted-combined tokens."""
+    if group.cfg.ll_layout == "deepep":
+        pending = _deepep_combine_send(group, handle, y3d)
+    else:
+        pending = _ncclep_combine_send(group, handle, y3d)
+    if send_only:
+        return pending
+    return ll_complete_combine(group, handle, pending)
+
+
+def ll_complete_combine(group: EpGroup, handle: EpHandle, pending: PendingCombine):
+    if group.cfg.ll_layout == "deepep":
+        return _deepep_combine_recv(group, handle, pending)
+    return _ncclep_combine_recv(group, handle, pending)
+
+
+def _ncclep_combine_send(group, handle, y3d):
+    """Expert side: pack owned responses compactly per source rank."""
+    N, L, A, Cd = group.ep_size, group.local_experts, group.ll_expert_cap, group.ll_disp_cap
+    Cc = group.ll_comb_cap
+    me = _my_rank(group)
+    topk_g = handle.topk_global
+    _, T, Kk = topk_g.shape
+    dst_g, mine, e_l = _entry_geometry(group, topk_g, me)
+    # recompute the dispatch-side expert-region slot of each owned entry
+    sends_to_me = mine.any(-1)
+    pos_to_me = jnp.cumsum(sends_to_me.astype(jnp.int32), axis=1) - 1
+    slot_valid = sends_to_me & (pos_to_me < Cd)
+    ent_valid = (mine & slot_valid[:, :, None]).reshape(-1)
+    a_pos, _ = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
+    y_row = e_l.reshape(-1) * A + a_pos                      # flat index into y3d
+    # combine slot of entry (r,t,k) within the me->r block: running count
+    # over (t,k) of entries of r owned by me — identical on both sides.
+    r_of = jnp.broadcast_to(jnp.arange(N)[:, None, None], (N, T, Kk)).reshape(-1)
+    c_pos, _ = S.positions_by_dest(r_of, N, ent_valid)
+    gmap = S.build_gather_map(r_of, c_pos, y_row, ent_valid & (a_pos < A),
+                              N, Cc, sentinel=L * A)
+    send = S.gather_rows(S.flat_rows(y3d.astype(group.cfg.payload_dtype)), gmap)
+    return PendingCombine(recv=_a2a(send, group))
+
+
+def _ncclep_combine_recv(group, handle, pending):
+    """DP side: slot of MY entry (t,k) in block from owner d equals the same
+    running count the owner used; gather [T,K,H] then weighted-reduce."""
+    N, L, Cc = group.ep_size, group.local_experts, group.ll_comb_cap
+    me = _my_rank(group)
+    topk = handle.topk_idx
+    T, Kk = topk.shape
+    dst = topk // L                                          # [T, K] owner rank
+    # my tokens' dispatch-slot validity (drops propagate to combine)
+    token_valid = jnp.arange(T) < handle.num_tokens
+    sends = jnp.zeros((T, N), bool).at[
+        jnp.arange(T)[:, None], dst].set(True, mode="drop")
+    sends = sends & token_valid[:, None]
+    pos = jnp.cumsum(sends.astype(jnp.int32), axis=0) - 1
+    tok_slot_ok = jnp.take_along_axis(pos, dst, axis=1) < group.ll_disp_cap  # [T, K]
+    ent_valid = (tok_slot_ok & token_valid[:, None]).reshape(-1)
+    c_pos, _ = S.positions_by_dest(dst.reshape(-1), N, ent_valid)
+    row = dst.reshape(-1) * Cc + c_pos
+    row = jnp.where(ent_valid & (c_pos < Cc), row, N * Cc)
+    y_tk = S.gather_rows(S.flat_rows(pending.recv), row.reshape(T, Kk))  # [T,K,H]
+    return K.combine_reduce(y_tk, handle.topk_weights)
+
+
+def _deepep_combine_send(group, handle, y3d):
+    N, L = group.ep_size, group.local_experts
+    B = group.cfg.max_tokens_per_rank
+    H = y3d.shape[-1]
+    send = (y3d.reshape(L, N, B, H).transpose(1, 0, 2, 3)
+            .reshape(N, L * B, H).astype(group.cfg.payload_dtype))
+    return PendingCombine(recv=_a2a(send, group))
+
+
+def _deepep_combine_recv(group, handle, pending):
+    N, L = group.ep_size, group.local_experts
+    B = group.cfg.max_tokens_per_rank
+    topk = handle.topk_idx
+    T, Kk = topk.shape
+    dst, e_l = topk // L, topk % L
+    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk))
+    row = dst * (L * B) + e_l * B + t_idx                    # [T, K]
+    token_valid = jnp.arange(T)[:, None] < handle.num_tokens
+    row = jnp.where(token_valid, row, N * L * B)
+    y_tk = S.gather_rows(S.flat_rows(pending.recv), row)     # [T, K, H]
+    return K.combine_reduce(y_tk, handle.topk_weights)

@@ -1,0 +1,117 @@
+"""MoE routers: top-k gating producing the (topk_idx, topk_weights) pair that
+drives dispatch/combine.
+
+Supports the gating variants used by the assigned MoE architectures:
+  * softmax top-k (DBRX: 16 experts, top-4)
+  * sigmoid + group-limited + aux-loss-free bias (DeepSeek-V3: 256 experts,
+    top-8, 1 shared expert, node-limited routing, bias-corrected selection)
+plus the standard load-balancing auxiliary loss (GShard/Switch style) and the
+router-z loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    num_experts: int
+    top_k: int
+    gating: Literal["softmax", "sigmoid"] = "softmax"
+    # DeepSeek-V3 group-limited ("node-limited") routing: experts are divided
+    # into n_groups; only experts inside the topk_groups best groups are
+    # eligible. Disabled when n_groups == 1.
+    n_groups: int = 1
+    topk_groups: int = 1
+    # Aux-loss-free balancing (DeepSeek-V3): a persistent per-expert bias is
+    # added to the scores *for selection only*; gate weights use raw scores.
+    use_selection_bias: bool = False
+    routed_scaling_factor: float = 1.0
+    norm_topk_prob: bool = True
+    aux_loss_weight: float = 0.0
+    z_loss_weight: float = 0.0
+    dtype: jnp.dtype = jnp.float32
+
+
+@dataclasses.dataclass
+class RouterOutput:
+    topk_idx: jax.Array        # [T, K] int32 — global expert ids
+    topk_weights: jax.Array    # [T, K] float32 — combine weights
+    aux_loss: jax.Array        # scalar
+    z_loss: jax.Array          # scalar
+    # per-expert assignment fraction, for aux-free bias update / monitoring
+    expert_load: jax.Array     # [E] float32
+
+
+def _group_limited_mask(scores: jax.Array, cfg: RouterConfig) -> jax.Array:
+    """DeepSeek-V3 group-limited routing: keep only the topk_groups groups
+    with the highest (sum of top-2 in-group scores); mask the rest to -inf.
+    scores: [T, E] -> bool mask [T, E] of eligible experts."""
+    T, E = scores.shape
+    g = cfg.n_groups
+    per = E // g
+    grouped = scores.reshape(T, g, per)
+    # group score = sum of top-2 scores within the group (V3 definition)
+    top2 = jax.lax.top_k(grouped, min(2, per))[0].sum(axis=-1)  # [T, g]
+    _, gidx = jax.lax.top_k(top2, cfg.topk_groups)              # [T, topk_groups]
+    gmask = jnp.zeros((T, g), dtype=bool).at[jnp.arange(T)[:, None], gidx].set(True)
+    return jnp.repeat(gmask, per, axis=-1)                      # [T, E]
+
+
+def route(
+    logits: jax.Array,
+    cfg: RouterConfig,
+    selection_bias: jax.Array | None = None,
+) -> RouterOutput:
+    """Compute top-k routing from raw router logits [T, E]."""
+    T, E = logits.shape
+    logits = logits.astype(jnp.float32)
+
+    if cfg.gating == "softmax":
+        scores = jax.nn.softmax(logits, axis=-1)
+    else:  # sigmoid (DeepSeek-V3)
+        scores = jax.nn.sigmoid(logits)
+
+    select_scores = scores
+    if cfg.use_selection_bias and selection_bias is not None:
+        select_scores = scores + selection_bias[None, :]
+
+    if cfg.n_groups > 1:
+        eligible = _group_limited_mask(select_scores, cfg)
+        select_scores = jnp.where(eligible, select_scores, -jnp.inf)
+
+    _, topk_idx = jax.lax.top_k(select_scores, cfg.top_k)       # [T, K]
+    topk_idx = topk_idx.astype(jnp.int32)
+    # Gate weights always come from the *unbiased* scores (aux-free rule).
+    topk_w = jnp.take_along_axis(scores, topk_idx, axis=-1)     # [T, K]
+    if cfg.norm_topk_prob:
+        topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-20)
+    topk_w = topk_w * cfg.routed_scaling_factor
+
+    # Load-balancing aux loss (Switch/GShard): E * sum_e f_e * p_e
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32).sum(1)   # [T, E]
+    f = onehot.mean(0)                                # fraction routed to e
+    p = (jax.nn.softmax(logits, -1)).mean(0)          # mean router prob
+    aux = E * jnp.sum(f * p) * cfg.aux_loss_weight
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.z_loss_weight
+
+    return RouterOutput(
+        topk_idx=topk_idx,
+        topk_weights=topk_w.astype(jnp.float32),
+        aux_loss=aux,
+        z_loss=z,
+        expert_load=f,
+    )
+
+
+def update_selection_bias(
+    bias: jax.Array, expert_load: jax.Array, update_rate: float = 1e-3
+) -> jax.Array:
+    """Aux-loss-free balancing bias update (DeepSeek-V3): increase the bias of
+    underloaded experts, decrease it for overloaded ones."""
+    mean_load = jnp.mean(expert_load)
+    return bias + update_rate * jnp.sign(mean_load - expert_load)

@@ -1,0 +1,59 @@
+"""Slot-map arithmetic shared by LL and HT modes.
+
+The paper's kernels address communication buffers by (expert-rank pair,
+slot) — slots are reserved by atomically incrementing per-pair counters
+(§IV-B/C). Under XLA's synchronized-collective model the same reservation is
+computed *deterministically on every rank* from the replicated routing
+metadata: an exclusive cumulative count over a fixed entry order plays the
+role of the atomic counter. Both endpoints of every transfer derive identical
+(pair, slot) coordinates, so messages need no headers at all.
+
+All functions are static-shape and O(M·D) via one-hot cumsum (M = entries,
+D = destinations) — fine for the M ≤ ~1e6 sizes EP metadata has.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def positions_by_dest(dest: jax.Array, num_dest: int, valid: jax.Array):
+    """For flat entries with destination ids ``dest`` [M] and validity mask
+    ``valid`` [M], compute for each entry its slot index within its
+    destination's block (exclusive running count over the fixed entry order),
+    plus per-destination totals.
+
+    Returns (pos [M] int32, counts [num_dest] int32). Invalid entries get an
+    arbitrary position but must be masked by the caller.
+    """
+    oh = jax.nn.one_hot(dest, num_dest, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
+    incl = jnp.cumsum(oh, axis=0)
+    pos = jnp.take_along_axis(incl - oh, dest[:, None].clip(0, num_dest - 1), axis=1)[:, 0]
+    counts = incl[-1] if dest.shape[0] > 0 else jnp.zeros((num_dest,), jnp.int32)
+    return pos.astype(jnp.int32), counts.astype(jnp.int32)
+
+
+def build_gather_map(
+    dest: jax.Array, pos: jax.Array, src: jax.Array, valid: jax.Array,
+    num_dest: int, capacity: int, sentinel: int,
+):
+    """Build map [num_dest, capacity] such that map[d, c] = src index of the
+    entry occupying slot (d, c), or ``sentinel`` for empty slots. Entries with
+    pos >= capacity are dropped (the static-shape analogue of buffer overflow
+    — only possible when a capacity factor < zero-drop is configured)."""
+    m = jnp.full((num_dest, capacity), sentinel, dtype=jnp.int32)
+    pos_c = jnp.where(valid, pos, capacity)  # invalid -> OOB -> dropped
+    return m.at[dest.clip(0, num_dest - 1), pos_c].set(src, mode="drop")
+
+
+def gather_rows(x: jax.Array, gmap: jax.Array, *, fill=0):
+    """x: [M, ...] rows; gmap: any-shape int32 with sentinel == M meaning
+    "empty" -> returns x[gmap] with empty slots filled with ``fill``."""
+    pad = jnp.full((1,) + x.shape[1:], fill, dtype=x.dtype)
+    xp = jnp.concatenate([x, pad], axis=0)
+    return xp[gmap]
+
+
+def flat_rows(x: jax.Array) -> jax.Array:
+    """Collapse leading dims so gather maps can address [M, H] rows."""
+    return x.reshape((-1,) + x.shape[-1:])

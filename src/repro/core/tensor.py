@@ -1,0 +1,87 @@
+"""EpTensor: N-dimensional tensor descriptor with semantic tags.
+
+JAX analogue of the paper's ``ncclNDTensor_t`` (§III-E). In NCCL EP the
+descriptor carries (shape, strides, dtype, tag, pointer) so the C library can
+validate roles and apply mode-specific transforms. In JAX, arrays already
+carry shape/dtype; what survives the port is the *semantic tag* — it lets the
+unified dispatch/combine entry points validate that the right tensors were
+passed and route them to the mode-specific implementation, exactly like the
+C API does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+class EpTensorTag(enum.Enum):
+    """Semantic roles, mirroring Table IV of the paper."""
+
+    TOKENS = "tokens"                       # token data (input or output)
+    TOPK_IDX = "topk_idx"                   # top-k expert indices
+    TOPK_WEIGHTS = "topk_weights"           # top-k router weights
+    SCALES = "scales"                       # FP8/INT8 quantization scales
+    RECV_EXPERT_COUNTER = "recv_expert_counter"  # per-expert token counts
+    TOKENS_PER_EXPERTS = "tokens_per_experts"    # per-expert token counts (dispatch out)
+    NONE = "none"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EpTensor:
+    """A tagged array. ``data`` is the only leaf; the tag is static metadata."""
+
+    data: jax.Array
+    tag: EpTensorTag = dataclasses.field(metadata=dict(static=True), default=EpTensorTag.NONE)
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+
+def ep_tensor_create(data: jax.Array, tag: EpTensorTag) -> EpTensor:
+    """``ncclEpTensorCreate`` analogue."""
+    return EpTensor(data=data, tag=tag)
+
+
+_ALLOWED_DTYPES = {
+    EpTensorTag.TOKENS: (jnp.float32, jnp.bfloat16, jnp.float16, jnp.float8_e4m3fn, jnp.int8),
+    EpTensorTag.TOPK_IDX: (jnp.int32,),
+    EpTensorTag.TOPK_WEIGHTS: (jnp.float32, jnp.bfloat16),
+    EpTensorTag.SCALES: (jnp.float32,),
+    EpTensorTag.TOKENS_PER_EXPERTS: (jnp.int32,),
+    EpTensorTag.RECV_EXPERT_COUNTER: (jnp.int32,),
+}
+
+
+def validate(t: EpTensor, *, tag: EpTensorTag, ndim: int | None = None) -> jax.Array:
+    """Validate a tagged tensor's role/dtype/rank; return the raw array.
+
+    Mirrors the validation the C API performs on ``ncclNDTensor_t`` inputs.
+    Raises ``ValueError`` at trace time (i.e. the JAX analogue of the C API
+    returning ``ncclInvalidArgument``).
+    """
+    if isinstance(t, EpTensor):
+        if t.tag != tag:
+            raise ValueError(f"EpTensor tagged {t.tag} where {tag} expected")
+        data = t.data
+    else:  # raw arrays accepted for ergonomic Python use, like the ctypes wrapper
+        data = t
+    allowed = _ALLOWED_DTYPES.get(tag)
+    if allowed is not None and data.dtype not in [jnp.dtype(d) for d in allowed]:
+        raise ValueError(f"{tag}: dtype {data.dtype} not in allowed {allowed}")
+    if ndim is not None and data.ndim != ndim:
+        raise ValueError(f"{tag}: expected rank {ndim}, got shape {data.shape}")
+    return data
+
+
+def as_array(t: EpTensor | jax.Array) -> jax.Array:
+    return t.data if isinstance(t, EpTensor) else t

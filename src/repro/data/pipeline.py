@@ -1,0 +1,68 @@
+"""Deterministic, resumable, sharded synthetic token pipeline.
+
+Production shape without production data: batches are generated from a
+counter-based PRNG (threefry over (seed, step)) so that (a) any step's batch
+is reproducible from (seed, step) alone — the pipeline state in a checkpoint
+is just an integer, (b) restart/elastic-reshard resumes mid-epoch exactly,
+(c) every host can generate only its addressable shard (no data redistribution
+on restore). The synthetic distribution is a Zipf-ish unigram mix so losses
+move like real text rather than uniform noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    microbatch: int = 1
+    seed: int = 0
+
+
+class DataPipeline:
+    def __init__(self, cfg: DataConfig, mesh=None, rules=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.step = 0
+        # Zipf-ish unigram distribution, fixed by seed
+        rng = np.random.RandomState(cfg.seed)
+        ranks = np.arange(1, cfg.vocab + 1)
+        p = 1.0 / ranks ** 1.1
+        self._probs = jnp.asarray(p / p.sum(), jnp.float32)
+
+    def state(self) -> dict:
+        return dict(step=self.step, seed=self.cfg.seed)
+
+    def restore(self, state: dict):
+        assert state["seed"] == self.cfg.seed, "seed mismatch on resume"
+        self.step = int(state["step"])
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function of (seed, step) — the resumability property."""
+        c = self.cfg
+        g = max(c.microbatch, 1)
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        shape = (g, c.global_batch // g, c.seq_len + 1)
+        toks = jax.random.choice(key, c.vocab, shape=shape, p=self._probs)
+        toks = toks.astype(jnp.int32)
+        batch = dict(tokens=toks[..., :-1], targets=toks[..., 1:])
+        if self.mesh is not None:
+            from repro.parallel.sharding import constrain
+            batch = {k: constrain(v, self.mesh, None, "batch", None)
+                     for k, v in batch.items()}
+        return batch
+
+    def __next__(self):
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+    def __iter__(self):
+        return self

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the EP hot spots the paper fuses in-kernel:
+dispatch_pack (slot pack + fp8 quant), combine_reduce (K-way weighted
+reduction), grouped_gemm (expert-major GEMM). ops.py = jit'd wrappers with
+backend selection; ref.py = pure-jnp oracles of record."""

@@ -1,0 +1,77 @@
+"""Jit'd public wrappers for the kernels package.
+
+Backend selection: on TPU the Pallas kernels run compiled; elsewhere the
+pure-jnp oracles from ref.py are used (bitwise-identical semantics — the test
+suite asserts so under interpret mode). `REPRO_FORCE_PALLAS=interpret` forces
+interpret-mode Pallas everywhere (slow; used by kernel tests and debugging).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import combine_reduce as _cr
+from repro.kernels import dispatch_pack as _dp
+from repro.kernels import grouped_gemm as _gg
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "interpret":
+        return True, True
+    if force == "off":
+        return False, False
+    on_tpu = jax.default_backend() == "tpu"
+    return on_tpu, False
+
+
+def combine_reduce(y: jax.Array, w: jax.Array) -> jax.Array:
+    use, interp = _use_pallas()
+    T, K, H = y.shape
+    if use and T % 8 == 0 and H % 128 == 0:
+        return _cr.combine_reduce(y, w, interpret=interp)
+    return _ref.combine_reduce(y, w)
+
+
+def quantize_fp8(x: jax.Array, block: int = 128):
+    return _ref.quantize_fp8(x, block)
+
+
+def dequantize_fp8(q: jax.Array, scales: jax.Array, out_dtype=jnp.bfloat16):
+    return _ref.dequantize_fp8(q, scales, out_dtype)
+
+
+def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None):
+    use, interp = _use_pallas()
+    if use and x.shape[-1] % 128 == 0:
+        return _dp.dispatch_pack(x, gmap, quant_block=quant_block, interpret=interp)
+    return _ref.dispatch_pack(x, gmap, quant_block)
+
+
+def flash_attention_bshd(q, k, v, *, scale, window=None, causal=True):
+    """[B,S,H,d]-layout wrapper over the flash-attention kernel (TPU) with
+    the chunked-XLA formulation as the portable fallback (same math)."""
+    use, interp = _use_pallas()
+    hd = q.shape[-1]
+    if use and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+        from repro.kernels import flash_attention as _fa
+        out = _fa.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), scale=scale, window=window,
+            causal=causal, interpret=interp)
+        return out.transpose(0, 2, 1, 3)
+    from repro.models.attention import _sdpa_chunked
+    return _sdpa_chunked(q, k, v, None, scale, window)
+
+
+def grouped_gemm(x: jax.Array, w: jax.Array, counts: jax.Array) -> jax.Array:
+    use, interp = _use_pallas()
+    L, A, H = x.shape
+    F = w.shape[-1]
+    if use and A % 128 == 0 and F % 128 == 0 and H % 128 == 0:
+        return _gg.grouped_gemm(x, w, counts, interpret=interp)
+    return _ref.grouped_gemm(x, w, counts)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each Pallas kernel's test sweeps shapes and
+dtypes and asserts allclose against the function of the same name here. They
+are also the production path on non-TPU backends (interpret-mode Pallas is
+orders of magnitude slower on CPU; XLA fuses these fine there).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def combine_reduce(y: jax.Array, w: jax.Array) -> jax.Array:
+    """Weighted K-way reduction — paper §IV-C(c) combine/recv.
+
+    y: [T, K, H] expert responses (any float dtype), w: [T, K] gate weights.
+    Returns [T, H] in w-independent f32 accumulation, cast to y.dtype's
+    "compute" dtype (bf16 stays bf16, matching the paper's BF16 combine)."""
+    acc = jnp.einsum("tkh,tk->th", y.astype(jnp.float32), w.astype(jnp.float32))
+    out_dt = y.dtype if y.dtype in (jnp.bfloat16, jnp.float32, jnp.float16) else jnp.bfloat16
+    return acc.astype(out_dt)
+
+
+def quantize_fp8(x: jax.Array, block: int = 128):
+    """Block-wise FP8(e4m3) quantization — the paper's in-kernel dispatch
+    quantization (§IV-B: token data fp8 + 4-byte scales per 128 elements).
+
+    x: [..., H] with H % block == 0 -> (q [..., H] f8e4m3, scales [..., H/block] f32)."""
+    H = x.shape[-1]
+    assert H % block == 0, (H, block)
+    g = x.reshape(x.shape[:-1] + (H // block, block)).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 448.0, 1.0)
+    q = (g / scale).astype(jnp.float8_e4m3fn)
+    return q.reshape(x.shape), scale[..., 0].astype(jnp.float32)
+
+
+def dequantize_fp8(q: jax.Array, scales: jax.Array, out_dtype=jnp.bfloat16):
+    """Inverse of quantize_fp8. q: [..., H], scales: [..., H/block]."""
+    H = q.shape[-1]
+    block = H // scales.shape[-1]
+    g = q.reshape(q.shape[:-1] + (H // block, block)).astype(jnp.float32)
+    out = g * scales[..., None]
+    return out.reshape(q.shape).astype(out_dtype)
+
+
+def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None):
+    """Fused slot-pack (+ optional quantization) — paper §IV-C(a) Send Tokens.
+
+    x: [T, H] tokens; gmap: [N, C] int32 slot->token map with sentinel == T
+    meaning empty. Returns packed [N, C, H] (and scales [N, C, H/qb] if
+    quantizing). Empty slots are zero."""
+    T, H = x.shape
+    if quant_block is not None:
+        xq, sc = quantize_fp8(x, quant_block)
+        xp = jnp.concatenate([xq, jnp.zeros((1, H), xq.dtype)], 0)
+        # empty slots: zero payload, unit scale (== quantizing a zero row)
+        sp = jnp.concatenate([sc, jnp.ones((1, sc.shape[-1]), sc.dtype)], 0)
+        return xp[gmap], sp[gmap]
+    xp = jnp.concatenate([x, jnp.zeros((1, H), x.dtype)], 0)
+    return xp[gmap], None
+
+
+def grouped_gemm(x: jax.Array, w: jax.Array, counts: jax.Array) -> jax.Array:
+    """Expert-major grouped GEMM over the LL 3D layout (§III-E, Fig. 3).
+
+    x: [L, A, H], w: [L, H, F], counts: [L] valid rows per expert.
+    Rows >= counts[l] produce zeros (padding is never computed into output)."""
+    L, A, H = x.shape
+    out = jnp.einsum("lah,lhf->laf", x.astype(jnp.float32), w.astype(jnp.float32))
+    mask = jnp.arange(A)[None, :] < counts[:, None]
+    return jnp.where(mask[..., None], out, 0.0).astype(x.dtype if x.dtype != jnp.float8_e4m3fn else jnp.bfloat16)

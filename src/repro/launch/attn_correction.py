@@ -1,0 +1,92 @@
+"""Kernel-corrected memory term for attention-heavy cells.
+
+Measures the attention region's fusion-blind byte charge by differencing two
+single-layer lowerings (full layer vs layer with the attention sublayer
+replaced by identity), then replaces it with the flash kernel's definitional
+Q+K+V+O traffic. Reported alongside the measured term in EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.attn_correction --arch minicpm3-4b \
+      --shape prefill_32k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import pathlib    # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, SHAPES                 # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.hlo_analysis import cost_dict              # noqa: E402
+from repro.launch.probes import _x_spec, _train_lower        # noqa: E402
+from repro.models import transformer as T                    # noqa: E402
+from repro.models.layers import rmsnorm, ffn_apply           # noqa: E402
+
+HBM = 819e9
+
+
+def measure(arch: str, shape: str):
+    cfg = get_config(arch, shape)
+    mesh = make_production_mesh()
+    seq, gbatch, kind = SHAPES[shape]
+    b = gbatch // max(cfg.microbatch, 1)
+    xs = _x_spec(cfg, b, seq)
+    ps = T.layer_spec(cfg, moe_layer=False)
+
+    full = lambda x, p: T.layer_apply(p, x, cfg, mesh)[0]
+
+    def no_attn(x, p):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = x + h                                   # attention -> identity
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + ffn_apply(p["ffn"], h, cfg.act)
+
+    cost_full = cost_dict(_train_lower(full, mesh, xs, ps).compile())
+    cost_na = cost_dict(_train_lower(no_attn, mesh, xs, ps).compile())
+    attn_bytes = cost_full["bytes accessed"] - cost_na["bytes accessed"]
+
+    # flash-kernel traffic for the attention region (per device, fwd+bwd~3x):
+    # Q,O: [b_loc, S, H_loc, hd]; K,V (MLA: ckv+rope, read twice for dQ/dKV)
+    chips_b = 16                         # batch over data
+    chips_h = 16                         # heads over model
+    hq = cfg.padded_heads() // chips_h
+    if cfg.mla:
+        per_tok_kv = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+        per_tok_q = hq * (cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim)
+        per_tok_o = hq * cfg.mla.v_head_dim
+    else:
+        per_tok_kv = 2 * cfg.attn.n_kv * cfg.attn.head_dim
+        per_tok_q = hq * cfg.attn.head_dim
+        per_tok_o = per_tok_q
+    b_loc = max(b // chips_b, 1)
+    flash_bytes = 3 * 2 * b_loc * seq * (per_tok_q + per_tok_kv + per_tok_o)
+
+    return dict(
+        arch=arch, shape=shape,
+        layer_bytes=cost_full["bytes accessed"],
+        layer_bytes_no_attn=cost_na["bytes accessed"],
+        attn_region_bytes=attn_bytes,
+        flash_kernel_bytes=flash_bytes,
+        per_layer_saving_bytes=attn_bytes - flash_bytes,
+        layers=cfg.num_layers,
+        memory_term_saving_s=round(
+            cfg.num_layers * max(cfg.microbatch, 1) *
+            (attn_bytes - flash_bytes) / HBM, 2),
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm3-4b")
+    ap.add_argument("--shape", default="prefill_32k")
+    a = ap.parse_args()
+    out = measure(a.arch, a.shape)
+    print(json.dumps(out, indent=1))
+    p = pathlib.Path(__file__).resolve().parents[3] / "results" / "perf"
+    p.mkdir(parents=True, exist_ok=True)
+    (p / f"attn_correction__{a.arch}__{a.shape}.json").write_text(
+        json.dumps(out, indent=1))

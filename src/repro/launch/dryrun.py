@@ -1,0 +1,172 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+
+Results land incrementally in results/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse    # noqa: E402
+import json        # noqa: E402
+import pathlib     # noqa: E402
+import time        # noqa: E402
+import traceback   # noqa: E402
+
+import jax         # noqa: E402
+
+from repro.configs import SHAPES, ARCH_IDS, LONG_OK, get_config   # noqa: E402
+from repro.launch.mesh import make_production_mesh                # noqa: E402
+from repro.launch.hlo_analysis import (collective_bytes, cost_dict,  # noqa: E402
+                                       memory_dict)
+from repro.launch import probes as PR                             # noqa: E402
+from repro.models import get_model                                # noqa: E402
+from repro.optim import AdamWConfig, adamw_init_specs             # noqa: E402
+from repro.parallel.sharding import abstract_from_specs, arch_rules  # noqa: E402
+from repro.runtime.steps import (make_train_step, make_serve_step,  # noqa: E402
+                                 train_batch_specs, serve_state_specs)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def input_specs(arch: str, shape: str, mesh, transform=None):
+    """ShapeDtypeStruct stand-ins for every step input (no allocation).
+    ``transform`` (perf iterations) may rewrite the ArchConfig."""
+    cfg = get_config(arch, shape)
+    if transform is not None:
+        cfg = transform(cfg)
+    model = get_model(cfg)
+    rules = arch_rules(cfg)
+    seq, gbatch, kind = SHAPES[shape]
+    pspecs = model.params_spec(cfg)
+    params = abstract_from_specs(pspecs, mesh, rules)
+    if kind == "train":
+        opt = abstract_from_specs(
+            adamw_init_specs(pspecs, _opt_cfg(arch)), mesh, rules)
+        batch = abstract_from_specs(train_batch_specs(cfg, gbatch, seq), mesh,
+                                    rules)
+        return cfg, dict(params=params, opt_state=opt, batch=batch)
+    long = shape == "long_500k"
+    st_spec, tok_spec = serve_state_specs(cfg, gbatch, seq, long=long)
+    state = abstract_from_specs(st_spec, mesh, rules)
+    batch = abstract_from_specs(tok_spec, mesh, rules)
+    return cfg, dict(params=params, state=state, batch=batch)
+
+
+def _opt_cfg(arch: str) -> AdamWConfig:
+    import jax.numpy as jnp
+    # 671B-class: bf16 moments so single-pod HBM holds the state (DESIGN §7)
+    dt = jnp.bfloat16 if arch == "deepseek-v3-671b" else jnp.float32
+    return AdamWConfig(state_dtype=dt)
+
+
+def _analyze(lowered, t_lower):
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = memory_dict(compiled)
+    cost = cost_dict(compiled)
+    coll = collective_bytes(compiled.as_text())
+    return compiled, dict(memory=mem, cost=cost, collectives=coll,
+                          lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, with_probes: bool = True,
+             transform=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq, gbatch, kind = SHAPES[shape]
+    cfg, specs = input_specs(arch, shape, mesh, transform)
+    rec = dict(arch=arch, shape=shape, mesh=list(mesh.shape.values()),
+               axes=list(mesh.shape.keys()), kind=kind,
+               seq=seq, global_batch=gbatch, num_layers=cfg.num_layers,
+               microbatch=cfg.microbatch)
+
+    t0 = time.time()
+    if kind == "train":
+        step = make_train_step(cfg, mesh, _opt_cfg(arch))
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            specs["params"], specs["opt_state"], specs["batch"])
+    else:
+        step = make_serve_step(cfg, mesh)
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            specs["params"], specs["state"], specs["batch"])
+    _, rec["program"] = _analyze(lowered, time.time() - t0)
+
+    if with_probes:
+        rec["stacks"] = []
+        t0 = time.time()
+        if kind == "train":
+            b = gbatch
+            pr = PR.train_probes(cfg, mesh, b, seq)
+        else:
+            pr = PR.serve_probes(cfg, mesh, gbatch, seq,
+                                 long=(shape == "long_500k"))
+        for name, trips, plow in pr:
+            _, a = _analyze(plow, 0.0)
+            a["name"], a["trips"] = name, trips
+            rec["stacks"].append(a)
+        rec["probe_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def cell_path(arch, shape, multi_pod) -> pathlib.Path:
+    mdir = "pod2x16x16" if multi_pod else "pod16x16"
+    d = RESULTS / mdir
+    d.mkdir(parents=True, exist_ok=True)
+    return d / f"{arch}__{shape}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    for a in (ARCH_IDS if args.all or not args.arch else [args.arch]):
+        for s in (SHAPES if args.all or not args.shape else [args.shape]):
+            cells.append((a, s))
+
+    for arch, shape in cells:
+        out = cell_path(arch, shape, args.multi_pod)
+        if out.exists() and not args.force:
+            print(f"[skip] {out.name} exists")
+            continue
+        if shape == "long_500k" and arch not in LONG_OK:
+            rec = dict(arch=arch, shape=shape, skipped=True,
+                       reason="pure full-attention arch: long_500k skipped "
+                              "per assignment (see DESIGN.md §5)")
+            out.write_text(json.dumps(rec, indent=1))
+            print(f"[SKIP-noted] {arch} {shape}")
+            continue
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape, args.multi_pod,
+                           with_probes=not args.no_probes)
+            rec["wall_s"] = round(time.time() - t0, 1)
+            out.write_text(json.dumps(rec, indent=1))
+            m = rec["program"]["memory"]
+            per_dev = (m.get("argument_size_in_bytes", 0) +
+                       m.get("temp_size_in_bytes", 0)) / 2**30
+            print(f"[ok] {arch} {shape} mesh={'2x16x16' if args.multi_pod else '16x16'} "
+                  f"args+temp/dev={per_dev:.2f}GiB flops/dev={rec['program']['cost'].get('flops', 0):.3e} "
+                  f"coll={rec['program']['collectives'].get('total', 0):.3e}B "
+                  f"wall={rec['wall_s']}s")
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            rec = dict(arch=arch, shape=shape, error=str(e)[:2000],
+                       traceback=traceback.format_exc()[-4000:])
+            out.with_suffix(".err.json").write_text(json.dumps(rec, indent=1))
+            print(f"[FAIL] {arch} {shape}: {str(e)[:200]}")
+
+
+if __name__ == "__main__":
+    main()

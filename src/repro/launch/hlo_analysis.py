@@ -1,0 +1,73 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective traffic, so
+we parse the compiled module text and sum the result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute op
+(result size ~= operand size for these ops, within (N-1)/N). While-loop
+(scan) bodies appear once in the text — the caller multiplies per-stack terms
+by trip counts, mirroring the cost_analysis correction (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: bytes, ..., "total": bytes, "count": n_ops}."""
+    out = defaultdict(int)
+    count = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # avoid double counting async pairs
+        b = _shape_bytes(shape_str)
+        out[kind] += b
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["count"] = count
+    return dict(out)
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "optimal_seconds", "utilization")}
+
+
+def memory_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = ["generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes"]
+    return {k: int(getattr(ma, k, 0)) for k in keys}

@@ -1,0 +1,107 @@
+"""Perf-iteration harness (§Perf hillclimbing): rerun one dry-run cell with a
+named config variant and record the roofline deltas.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch deepseek-v3-671b \
+      --shape train_4k --variant flat_ht
+
+Results land in results/perf/<arch>__<shape>__<variant>.json; compare with
+`python -m repro.launch.perf --report --arch ... --shape ...`.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse    # noqa: E402
+import dataclasses  # noqa: E402
+import json        # noqa: E402
+import pathlib     # noqa: E402
+import time        # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+def _moe(cfg, **kw):
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **kw))
+
+
+def _no_chunked_attn(cfg):
+    from repro.models import attention as A
+    A.CHUNKED_ATTN_THRESHOLD = 10 ** 9      # module-level switch
+    return cfg
+
+
+def _chunk_size(n):
+    def t(cfg):
+        from repro.models import attention as A
+        A._KV_CHUNK = n
+        return cfg
+    return t
+
+
+TRANSFORMS = {
+    "current": lambda cfg: cfg,                       # whatever HEAD does now
+    "no_chunked_attn": _no_chunked_attn,              # dense-score attention
+    "kv_chunk_512": _chunk_size(512),
+    "kv_chunk_2048": _chunk_size(2048),
+    "flat_ht": lambda cfg: _moe(cfg, ht_hierarchical=False),
+    "hier_ht": lambda cfg: _moe(cfg, ht_hierarchical=True),
+    "fp8_dispatch": lambda cfg: _moe(cfg, quantize_dispatch=True),
+    "bf16_dispatch": lambda cfg: _moe(cfg, quantize_dispatch=False),
+    "cf_100": lambda cfg: _moe(cfg, capacity_factor=1.0,
+                               expert_capacity_factor=1.0),
+    "cf_200": lambda cfg: _moe(cfg, capacity_factor=2.0,
+                               expert_capacity_factor=2.0),
+    "ll_deepep": lambda cfg: _moe(cfg, ll_layout="deepep"),
+    "ep_baseline": lambda cfg: _moe(cfg, ep_mode="baseline"),
+    "mtp_off": lambda cfg: dataclasses.replace(cfg, mtp=False),
+    "remat_off": lambda cfg: dataclasses.replace(cfg, remat=False),
+    "micro_x2": lambda cfg: dataclasses.replace(cfg, microbatch=cfg.microbatch * 2),
+    "micro_half": lambda cfg: dataclasses.replace(
+        cfg, microbatch=max(cfg.microbatch // 2, 1)),
+}
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+    from repro.launch.roofline import analyze
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="current")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    if args.report:
+        rows = []
+        for f in sorted(RESULTS.glob(f"{args.arch}__{args.shape}__*.json")):
+            rec = json.loads(f.read_text())
+            a = analyze(rec)
+            a["variant"] = f.stem.split("__")[-1]
+            rows.append(a)
+        cols = ["variant", "dominant", "compute_s", "memory_s",
+                "collective_s", "roofline_fraction", "hbm_gib_per_dev"]
+        w = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+        print("  ".join(c.ljust(w[c]) for c in cols))
+        for r in rows:
+            print("  ".join(str(r.get(c, "")).ljust(w[c]) for c in cols))
+        return
+
+    t0 = time.time()
+    rec = run_cell(args.arch, args.shape, args.multi_pod,
+                   transform=TRANSFORMS[args.variant])
+    rec["variant"] = args.variant
+    rec["wall_s"] = round(time.time() - t0, 1)
+    out = RESULTS / f"{args.arch}__{args.shape}__{args.variant}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    a = analyze(rec)
+    print(f"[perf] {args.arch} {args.shape} {args.variant}: "
+          f"dominant={a['dominant']} compute={a['compute_s']} "
+          f"memory={a['memory_s']} collective={a['collective_s']} "
+          f"fraction={a['roofline_fraction']} hbm={a['hbm_gib_per_dev']}GiB")
+
+
+if __name__ == "__main__":
+    main()

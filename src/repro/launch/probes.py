@@ -1,0 +1,188 @@
+"""Per-stack layer probes for the scan-trip roofline correction.
+
+XLA's cost_analysis counts a scan body ONCE (verified on this container), so
+the dry-run lowers each homogeneous stack's body separately — forward+backward
+for train (with rematerialization replayed via jax.checkpoint), plain forward
+for decode — and the roofline computes
+
+    total_term = program_term + sum_s (trips_s - 1) * body_term_s.
+
+Each probe returns (name, trips, lowered) with shardings identical to the
+in-model activations, so the probe HLO's collectives match the scan body's.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.models import transformer as T
+from repro.models import hybrid as HY
+from repro.models import encdec as ED
+from repro.models import attention as ATT
+from repro.models import mamba2 as SSM
+from repro.models.config import ArchConfig
+from repro.models.layers import rmsnorm
+from repro.parallel.sharding import (ParamSpec, abstract_from_specs,
+                                     arch_rules, DEFAULT_RULES)
+
+_RULES = DEFAULT_RULES  # set per-arch by train_probes/serve_probes
+
+
+def _x_spec(cfg, b, s):
+    return ParamSpec((b, s, cfg.d_model), cfg.dtype, ("batch", None, None))
+
+
+def _train_lower(fn, mesh, *specs):
+    def probe(*args):
+        def loss(*a):
+            return jnp.sum(fn(*a).astype(jnp.float32))
+        return jax.grad(jax.checkpoint(loss), argnums=tuple(range(len(args))))(*args)
+    return jax.jit(probe).lower(*abstract_from_specs(list(specs), mesh, _RULES))
+
+
+def _serve_lower(fn, mesh, *specs):
+    return jax.jit(fn).lower(*abstract_from_specs(list(specs), mesh, _RULES))
+
+
+def train_probes(cfg: ArchConfig, mesh, global_batch: int, seq: int):
+    global _RULES
+    _RULES = arch_rules(cfg)
+    b = global_batch // max(cfg.microbatch, 1)
+    xs = _x_spec(cfg, b, seq)
+    out = []
+
+    if cfg.family in ("lm", "vlm"):
+        n_dense = cfg.moe.first_k_dense if cfg.moe else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+        if n_dense:
+            ps = T.layer_spec(cfg, moe_layer=False)
+            fn = lambda x, p: T.layer_apply(p, x, cfg, mesh)[0]
+            out.append(("dense_layer", n_dense, _train_lower(fn, mesh, xs, ps)))
+        if n_moe:
+            ps = T.layer_spec(cfg, moe_layer=True)
+            fn = lambda x, p: T.layer_apply(p, x, cfg, mesh)[0]
+            out.append(("moe_layer", n_moe, _train_lower(fn, mesh, xs, ps)))
+    elif cfg.family == "gemma3":
+        loc, glob, n_super, tail = T._g3_counts(cfg)
+        per = loc + glob
+        ps = T._stack(T.layer_spec(cfg, moe_layer=False), per)
+
+        def fn(x, p):
+            for j in range(per):
+                pj = jax.tree.map(lambda a: a[j], p)
+                w = cfg.local_window if j < loc else None
+                x, _, _ = T.layer_apply(pj, x, cfg, mesh, window=w)
+            return x
+        out.append(("super_block", n_super, _train_lower(fn, mesh, xs, ps)))
+        if tail:
+            pt = T.layer_spec(cfg, moe_layer=False)
+            fnt = lambda x, p: T.layer_apply(p, x, cfg, mesh,
+                                             window=cfg.local_window)[0]
+            out.append(("tail_layer", tail, _train_lower(fnt, mesh, xs, pt)))
+    elif cfg.family == "ssm":
+        ps = dict(ln=T.rmsnorm_spec(cfg.d_model, cfg.dtype),
+                  mamba=SSM.mamba_spec(cfg))
+        fn = lambda x, p: x + SSM.mamba_block(
+            p["mamba"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg, mesh)[0]
+        out.append(("mamba_layer", cfg.num_layers, _train_lower(fn, mesh, xs, ps)))
+    elif cfg.family == "hybrid":
+        per, n_super, tail = HY._counts(cfg)
+        ps = T._stack(HY._mamba_layer_spec(cfg), per)
+        sh = HY._shared_block_spec(cfg)
+
+        def fn(x, p, s):
+            for j in range(per):
+                pj = jax.tree.map(lambda a: a[j], p)
+                x, _ = HY._mamba_apply(pj, x, cfg, mesh, None)
+            x, _ = HY._shared_apply(s, x, cfg, mesh, None)
+            return x
+        out.append(("super_block", n_super, _train_lower(fn, mesh, xs, ps, sh)))
+        if tail:
+            pt = HY._mamba_layer_spec(cfg)
+            fnt = lambda x, p: HY._mamba_apply(p, x, cfg, mesh, None)[0]
+            out.append(("tail_mamba", tail, _train_lower(fnt, mesh, xs, pt)))
+    elif cfg.family == "encdec":
+        src = ParamSpec((b, cfg.src_len, cfg.d_model), cfg.dtype,
+                        ("batch", None, None))
+        pe = ED._enc_layer_spec(cfg)
+
+        def fe(x, p):
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            a, _ = ATT.attention(p["attn"], h, cfg, mesh, window=None, causal=False)
+            x = x + a
+            h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            from repro.models.layers import ffn_apply
+            return x + ffn_apply(p["ffn"], h, cfg.act)
+        out.append(("enc_layer", cfg.enc_layers, _train_lower(fe, mesh, src, pe)))
+        pd = ED._dec_layer_spec(cfg)
+        fd = lambda x, p, mem: ED._dec_layer(p, x, cfg, mesh, mem, None)[0]
+        out.append(("dec_layer", cfg.dec_layers, _train_lower(fd, mesh, xs, pd, src)))
+    return out
+
+
+def serve_probes(cfg: ArchConfig, mesh, batch: int, kv_len: int, *, long=False):
+    global _RULES
+    _RULES = arch_rules(cfg)
+    xs = _x_spec(cfg, batch, 1)
+    out = []
+
+    if cfg.family in ("lm", "vlm"):
+        n_dense = cfg.moe.first_k_dense if cfg.moe else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+        from repro.models import mla as MLAM
+        mk = (MLAM.mla_cache_spec if (cfg.attn and cfg.attn.kind == "mla")
+              else ATT.kv_cache_spec)
+        cs = mk(cfg, batch, kv_len, long=long)
+        fn = lambda x, p, c: T.layer_apply(p, x, cfg, mesh, cache=c)[:2]
+        if n_dense:
+            ps = T.layer_spec(cfg, moe_layer=False)
+            out.append(("dense_layer", n_dense, _serve_lower(fn, mesh, xs, ps, cs)))
+        if n_moe:
+            ps = T.layer_spec(cfg, moe_layer=True)
+            out.append(("moe_layer", n_moe, _serve_lower(fn, mesh, xs, ps, cs)))
+    elif cfg.family == "gemma3":
+        loc, glob, n_super, tail = T._g3_counts(cfg)
+        wlen = min(cfg.local_window, kv_len)
+        ps = T.layer_spec(cfg, moe_layer=False)
+        cl = ATT.kv_cache_spec(cfg, batch, wlen)
+        fn_l = lambda x, p, c: T._ring_local_decode(p, x, cfg, mesh, c, wlen)[:2]
+        out.append(("local_layer", loc * n_super + tail,
+                    _serve_lower(fn_l, mesh, xs, ps, cl)))
+        cg = ATT.kv_cache_spec(cfg, batch, kv_len, long=long)
+        fn_g = lambda x, p, c: T.layer_apply(p, x, cfg, mesh, cache=c,
+                                             window=None)[:2]
+        out.append(("global_layer", glob * n_super,
+                    _serve_lower(fn_g, mesh, xs, ps, cg)))
+    elif cfg.family == "ssm":
+        ps = dict(ln=T.rmsnorm_spec(cfg.d_model, cfg.dtype),
+                  mamba=SSM.mamba_spec(cfg))
+        cs = SSM.ssm_cache_spec(cfg, batch)
+
+        def fn(x, p, c):
+            y, c2 = SSM.mamba_block(p["mamba"], rmsnorm(x, p["ln"], cfg.norm_eps),
+                                    cfg, mesh, cache=c)
+            return x + y, c2
+        out.append(("mamba_layer", cfg.num_layers, _serve_lower(fn, mesh, xs, ps, cs)))
+    elif cfg.family == "hybrid":
+        per, n_super, tail = HY._counts(cfg)
+        pm = HY._mamba_layer_spec(cfg)
+        cm = SSM.ssm_cache_spec(cfg, batch)
+        fm = lambda x, p, c: HY._mamba_apply(p, x, cfg, mesh, c)
+        out.append(("mamba_layer", per * n_super + tail,
+                    _serve_lower(fm, mesh, xs, pm, cm)))
+        sh = HY._shared_block_spec(cfg)
+        ca = ATT.kv_cache_spec(cfg, batch, kv_len, long=long)
+        fs = lambda x, p, c: HY._shared_apply(p, x, cfg, mesh, c)
+        out.append(("shared_attn", n_super, _serve_lower(fs, mesh, xs, sh, ca)))
+    elif cfg.family == "encdec":
+        pd = ED._dec_layer_spec(cfg)
+        cs = ATT.kv_cache_spec(cfg, batch, kv_len, long=long)
+        mem = ParamSpec((batch, cfg.src_len, cfg.d_model), cfg.dtype,
+                        ("batch", None, None))
+        fd = lambda x, p, m, c: ED._dec_layer(p, x, cfg, mesh, m, c)
+        out.append(("dec_layer", cfg.dec_layers,
+                    _serve_lower(fd, mesh, xs, pd, mem, cs)))
+    return out

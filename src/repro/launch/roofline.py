@@ -1,0 +1,148 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs / (chips * 197e12)        [bf16 peak]
+  memory     = HLO_bytes / (chips * 819e9)         [HBM]
+  collective = collective_bytes / (chips * 50e9)   [single ICI link, per spec]
+
+HLO terms are scan-trip corrected: total = program + sum_s (trips_s-1)*body_s
+(cost_analysis counts a while-loop body once; see DESIGN.md §6). cost_analysis
+FLOPs/bytes are PER-DEVICE on this backend (verified numerically), collective
+bytes are parsed per-module (whole-program scope) — so the collective term
+divides by 1, not by chips: the parse already yields per-device traffic
+because every rank executes the same SPMD module.
+
+MODEL_FLOPS = 6*N_params*D_tokens (dense) or 6*N_active*D (MoE); the ratio to
+(3x for train: fwd+bwd) HLO FLOPs flags remat/redundancy waste.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# approximate parameter counts (embedding included once) and active-param
+# counts for the MoE archs, used for the MODEL_FLOPS sanity ratio
+PARAMS = {  # total, active (B)
+    "minicpm3-4b": (4.0e9, 4.0e9),
+    "internlm2-20b": (20e9, 20e9),
+    "gemma3-27b": (27e9, 27e9),
+    "chatglm3-6b": (6.2e9, 6.2e9),
+    "deepseek-v3-671b": (671e9, 37e9),
+    "dbrx-132b": (132e9, 36e9),
+    "phi-3-vision-4.2b": (4.2e9, 4.2e9),
+    "zamba2-7b": (7.4e9, 7.4e9),
+    "seamless-m4t-large-v2": (2.3e9, 2.3e9),
+    "mamba2-780m": (0.78e9, 0.78e9),
+}
+
+
+def corrected_terms(rec: dict) -> dict:
+    """Scan-trip-corrected per-device flops/bytes/collective-bytes."""
+    p = rec["program"]
+    flops = p["cost"].get("flops", 0.0)
+    mem_b = p["cost"].get("bytes accessed", 0.0)
+    coll = p["collectives"].get("total", 0)
+    # microbatch scan: the grad-accumulation loop body is ALSO counted once;
+    # multiply whole-program layer terms by microbatch trips first.
+    g = max(rec.get("microbatch", 1), 1)
+    for st in rec.get("stacks", []):
+        t = (st["trips"] * g) - 1
+        flops += t * st["cost"].get("flops", 0.0)
+        mem_b += t * st["cost"].get("bytes accessed", 0.0)
+        coll += t * st["collectives"].get("total", 0)
+    return dict(flops=flops, hbm_bytes=mem_b, coll_bytes=coll)
+
+
+def analyze(rec: dict) -> dict:
+    chips = 1
+    for s in rec["mesh"]:
+        chips *= s
+    t = corrected_terms(rec)
+    terms = dict(
+        compute_s=t["flops"] / PEAK,
+        memory_s=t["hbm_bytes"] / HBM,
+        collective_s=t["coll_bytes"] / LINK,
+    )
+    dom = max(terms, key=terms.get)
+    total, active = PARAMS[rec["arch"]]
+    if rec["kind"] == "train":
+        # 6*N*D counts fwd (2ND) + bwd (4ND); do NOT multiply again.
+        tokens = rec["global_batch"] * rec["seq"]
+        model_flops = 6 * active * tokens / chips
+    else:
+        tokens = rec["global_batch"] * 1
+        model_flops = 2 * active * tokens / chips
+    ratio = model_flops / max(t["flops"], 1.0)
+    bound = max(terms.values())
+    # Roofline fraction = (irreducible time) / (modeled time):
+    #  train  -> MFU-like: model-FLOPs time vs the dominating term;
+    #  decode -> BW utilization: the ideal read set is exactly the step's
+    #            arguments (params + caches, each read once per token) over
+    #            the modeled HBM traffic.
+    if rec["kind"] == "train":
+        ideal = model_flops / PEAK
+    else:
+        arg_bytes = rec["program"]["memory"].get("argument_size_in_bytes", 0)
+        ideal = max(arg_bytes / HBM, model_flops / PEAK)
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], chips=chips, kind=rec["kind"],
+        flops_per_dev=t["flops"], hbm_bytes_per_dev=t["hbm_bytes"],
+        coll_bytes_per_dev=t["coll_bytes"], **{k: round(v, 6) for k, v in terms.items()},
+        dominant=dom.replace("_s", ""),
+        model_flops_per_dev=model_flops,
+        useful_flops_ratio=round(ratio, 3),
+        roofline_fraction=round(ideal / bound, 4) if bound > 0 else None,
+        hbm_gib_per_dev=round(
+            (rec["program"]["memory"].get("argument_size_in_bytes", 0) +
+             rec["program"]["memory"].get("temp_size_in_bytes", 0)) / 2**30, 2),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--dir", default=None, help="explicit results directory")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = []
+    src = pathlib.Path(args.dir) if args.dir else (RESULTS / args.mesh)
+    for f in sorted(src.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             dominant="SKIP", note=rec["reason"][:60]))
+            continue
+        if "program" not in rec:
+            continue
+        rows.append(analyze(rec))
+    cols = ["arch", "shape", "dominant", "compute_s", "memory_s",
+            "collective_s", "roofline_fraction", "useful_flops_ratio",
+            "hbm_gib_per_dev"]
+    if args.csv:
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r.get(c, "")) for c in cols))
+    else:
+        w = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+        print("  ".join(c.ljust(w[c]) for c in cols))
+        for r in rows:
+            print("  ".join(str(r.get(c, "")).ljust(w[c]) for c in cols))
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

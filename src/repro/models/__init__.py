@@ -1,0 +1,4 @@
+from repro.models.config import (  # noqa: F401
+    ArchConfig, AttnSpec, MLASpec, MoESpec, SSMSpec,
+)
+from repro.models.registry import get_model  # noqa: F401

@@ -1,0 +1,105 @@
+"""Architecture configuration schema covering all ten assigned families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    kind: Literal["gqa", "mla"] = "gqa"
+    rope_base: float = 10000.0
+    rope_fraction: float = 1.0        # chatglm3 "2d RoPE" = 0.5 (half rotary)
+    window: int | None = None         # sliding-window width (local layers)
+    qk_norm: bool = False
+    logit_softcap: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_experts: int = 0
+    first_k_dense: int = 0            # deepseek-v3: first 3 layers dense
+    gating: Literal["softmax", "sigmoid"] = "softmax"
+    n_groups: int = 1
+    topk_groups: int = 1
+    use_selection_bias: bool = False
+    routed_scaling: float = 1.0
+    norm_topk: bool = True
+    aux_loss_weight: float = 1e-3
+    # --- EP communication (the paper's knobs) ---
+    ep_mode: Literal["ll", "ht", "baseline", "auto"] = "auto"
+    ll_layout: Literal["nccl_ep", "deepep"] = "nccl_ep"
+    ep_axis: tuple[str, ...] = ("model",)
+    capacity_factor: float | None = 1.25
+    expert_capacity_factor: float | None = 1.25
+    ht_hierarchical: bool = False
+    quantize_dispatch: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_state: int
+    headdim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Literal["lm", "gemma3", "hybrid", "ssm", "encdec", "vlm"]
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attn: AttnSpec | None = None
+    mla: MLASpec | None = None
+    moe: MoESpec | None = None
+    ssm: SSMSpec | None = None
+    # gemma3: (local, global) pattern + local window
+    local_global: tuple[int, int] | None = None
+    local_window: int = 1024
+    # zamba2: one shared attention block applied every `shared_attn_period`
+    shared_attn_period: int | None = None
+    # encdec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    cross_attn: bool = False
+    src_len: int = 4096               # encoder memory length (frontend stub)
+    # vlm
+    img_tokens: int = 0               # patch embeddings injected at the front
+    act: Literal["swiglu", "geglu", "gelu"] = "swiglu"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: jnp.dtype = jnp.bfloat16
+    # multi-token prediction (deepseek-v3 MTP): extra depth-1 head
+    mtp: bool = False
+    # training-time knobs
+    remat: bool = True
+    microbatch: int = 1               # gradient-accumulation chunks
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        return ((self.vocab + multiple - 1) // multiple) * multiple
+
+    def padded_heads(self, multiple: int = 16) -> int:
+        n = self.attn.n_heads if self.attn else 0
+        return ((n + multiple - 1) // multiple) * multiple

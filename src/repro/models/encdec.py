@@ -1,0 +1,115 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2). The audio frontend is a
+stub per the assignment: `input_specs()` supplies precomputed frame embeddings
+[B, S_src, D]. Encoder: bidirectional self-attention stack. Decoder: causal
+self-attention + cross-attention over the encoder memory. Decode state holds
+the encoder memory's per-layer cross K/V (computed once at prefill) plus the
+decoder self-attention KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models.config import ArchConfig
+from repro.models.layers import (rmsnorm, rmsnorm_spec, ffn_spec, ffn_apply,
+                                 embed_spec, embed_lookup, logits_out,
+                                 cross_entropy)
+from repro.models.transformer import _stack, _scan_stack, _empty_caches
+from repro.parallel.sharding import ParamSpec
+
+
+def _enc_layer_spec(cfg):
+    return dict(ln1=rmsnorm_spec(cfg.d_model, cfg.dtype),
+                attn=ATT.attn_spec(cfg),
+                ln2=rmsnorm_spec(cfg.d_model, cfg.dtype),
+                ffn=ffn_spec(cfg.d_model, cfg.d_ff, cfg.dtype, cfg.act))
+
+
+def _dec_layer_spec(cfg):
+    sp = _enc_layer_spec(cfg)
+    sp["ln_x"] = rmsnorm_spec(cfg.d_model, cfg.dtype)
+    sp["xattn"] = ATT.attn_spec(cfg)
+    return sp
+
+
+def encdec_spec(cfg: ArchConfig):
+    return dict(
+        embed=embed_spec(cfg.padded_vocab(), cfg.d_model, cfg.dtype),
+        ln_enc=rmsnorm_spec(cfg.d_model, cfg.dtype),
+        ln_dec=rmsnorm_spec(cfg.d_model, cfg.dtype),
+        enc=_stack(_enc_layer_spec(cfg), cfg.enc_layers),
+        dec=_stack(_dec_layer_spec(cfg), cfg.dec_layers),
+    )
+
+
+def _encode(params, src_embeds, cfg, mesh):
+    x = src_embeds
+
+    def body(x, p, c):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, _ = ATT.attention(p["attn"], h, cfg, mesh, window=None,
+                             causal=False)     # bidirectional encoder
+        x = x + a
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + ffn_apply(p["ffn"], h, cfg.act), c, jnp.float32(0)
+
+    x, _, _ = _scan_stack(body, x, params["enc"], _empty_caches(cfg.enc_layers),
+                          cfg, remat=cfg.remat)
+    return rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_layer(p, x, cfg, mesh, memory, cache):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, c2 = ATT.attention(p["attn"], h, cfg, mesh, cache=cache, window=None)
+    x = x + a
+    h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+    kv_k = jnp.einsum("bsd,dhk->bshk", memory, p["xattn"]["wk"])
+    kv_v = jnp.einsum("bsd,dhk->bshk", memory, p["xattn"]["wv"])
+    a, _ = ATT.attention(p["xattn"], h, cfg, mesh, kv_override=(kv_k, kv_v))
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + ffn_apply(p["ffn"], h, cfg.act), c2
+
+
+def encdec_forward(params, batch, cfg: ArchConfig, mesh):
+    """batch: {src_embeds [B,S_src,D], tokens [B,S_tgt]}"""
+    memory = _encode(params, batch["src_embeds"], cfg, mesh)
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens)
+
+    def body(x, p, c):
+        x, _ = _dec_layer(p, x, cfg, mesh, memory, None)
+        return x, c, jnp.float32(0)
+
+    x, _, _ = _scan_stack(body, x, params["dec"], _empty_caches(cfg.dec_layers),
+                          cfg, remat=cfg.remat)
+    x = rmsnorm(x, params["ln_dec"], cfg.norm_eps)
+    logits = logits_out(x, params["embed"])
+    targets = batch.get("targets")
+    if targets is None:
+        targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    return cross_entropy(logits, targets, batch.get("loss_mask")), {}
+
+
+def encdec_decode_state_spec(cfg: ArchConfig, batch: int, max_len: int, *, long=False):
+    return dict(
+        self=_stack(ATT.kv_cache_spec(cfg, batch, max_len, long=long),
+                    cfg.dec_layers),
+        memory=ParamSpec((batch, cfg.src_len, cfg.d_model), cfg.dtype,
+                         ("batch", None, None)),
+    )
+
+
+def encdec_decode_step(params, state, batch, cfg: ArchConfig, mesh):
+    x = embed_lookup(params["embed"], batch["tokens"])
+    memory = state["memory"]
+
+    def body(x, p, c):
+        x, c2 = _dec_layer(p, x, cfg, mesh, memory, c)
+        return x, c2, jnp.float32(0)
+
+    x, new_self, _ = _scan_stack(body, x, params["dec"], state["self"],
+                                 cfg, remat=False)
+    x = rmsnorm(x, params["ln_dec"], cfg.norm_eps)
+    return logits_out(x, params["embed"]), dict(state, self=new_self)

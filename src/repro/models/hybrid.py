@@ -1,0 +1,140 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared transformer block
+(attention + FFN, single parameter set) applied every `shared_attn_period`
+mamba blocks. Each application has its own KV cache. (The real Zamba2 adds
+per-application LoRA deltas on the shared block and concatenates the original
+embedding into its input; we apply the shared block on the residual stream —
+noted in DESIGN.md §Arch-applicability.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import mamba2 as SSM
+from repro.models.config import ArchConfig
+from repro.models.layers import (rmsnorm, rmsnorm_spec, ffn_spec, ffn_apply,
+                                 embed_spec, embed_lookup, logits_out,
+                                 cross_entropy)
+from repro.models.transformer import _stack, _scan_stack, _empty_caches
+from repro.parallel.sharding import ParamSpec
+
+
+def _counts(cfg: ArchConfig):
+    per = cfg.shared_attn_period
+    n_super = cfg.num_layers // per          # super-block = per mambas + attn
+    tail = cfg.num_layers - n_super * per
+    return per, n_super, tail
+
+
+def _mamba_layer_spec(cfg):
+    return dict(ln=rmsnorm_spec(cfg.d_model, cfg.dtype),
+                mamba=SSM.mamba_spec(cfg))
+
+
+def _shared_block_spec(cfg):
+    return dict(ln1=rmsnorm_spec(cfg.d_model, cfg.dtype),
+                attn=ATT.attn_spec(cfg),
+                ln2=rmsnorm_spec(cfg.d_model, cfg.dtype),
+                ffn=ffn_spec(cfg.d_model, cfg.d_ff, cfg.dtype, cfg.act))
+
+
+def hybrid_spec(cfg: ArchConfig):
+    per, n_super, tail = _counts(cfg)
+    sp = dict(
+        embed=embed_spec(cfg.padded_vocab(), cfg.d_model, cfg.dtype),
+        ln_f=rmsnorm_spec(cfg.d_model, cfg.dtype),
+        mamba_super=_stack(_stack(_mamba_layer_spec(cfg), per), n_super),
+        shared=_shared_block_spec(cfg),       # ONE param set, 13 applications
+    )
+    if tail:
+        sp["tail"] = _stack(_mamba_layer_spec(cfg), tail)
+    return sp
+
+
+def _shared_apply(p, x, cfg, mesh, cache):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, c2 = ATT.attention(p["attn"], h, cfg, mesh, cache=cache, window=None)
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + ffn_apply(p["ffn"], h, cfg.act), c2
+
+
+def _mamba_apply(p, x, cfg, mesh, cache):
+    y, c2 = SSM.mamba_block(p["mamba"], rmsnorm(x, p["ln"], cfg.norm_eps),
+                            cfg, mesh, cache=cache)
+    return x + y, c2
+
+
+def hybrid_forward(params, batch, cfg: ArchConfig, mesh):
+    per, n_super, tail = _counts(cfg)
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens)
+    shared = params["shared"]
+
+    def super_body(x, p, c):
+        for j in range(per):
+            pj = jax.tree.map(lambda a: a[j], p)
+            x, _ = _mamba_apply(pj, x, cfg, mesh, None)
+        x, _ = _shared_apply(shared, x, cfg, mesh, None)
+        return x, c, jnp.float32(0)
+
+    x, _, _ = _scan_stack(super_body, x, params["mamba_super"],
+                          _empty_caches(n_super), cfg, remat=cfg.remat)
+    if tail:
+        def body(x, p, c):
+            x, _ = _mamba_apply(p, x, cfg, mesh, None)
+            return x, c, jnp.float32(0)
+        x, _, _ = _scan_stack(body, x, params["tail"], _empty_caches(tail),
+                              cfg, remat=cfg.remat)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_out(x, params["embed"])
+    targets = batch.get("targets")
+    if targets is None:
+        targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    return cross_entropy(logits, targets, batch.get("loss_mask")), {}
+
+
+def hybrid_decode_state_spec(cfg: ArchConfig, batch: int, max_len: int, *, long=False):
+    per, n_super, tail = _counts(cfg)
+    st = dict(
+        mamba=_stack(_stack(SSM.ssm_cache_spec(cfg, batch), per), n_super),
+        attn=_stack(ATT.kv_cache_spec(cfg, batch, max_len, long=long), n_super),
+    )
+    if tail:
+        st["tail"] = _stack(SSM.ssm_cache_spec(cfg, batch), tail)
+    return st
+
+
+def hybrid_decode_step(params, state, batch, cfg: ArchConfig, mesh):
+    per, n_super, tail = _counts(cfg)
+    x = embed_lookup(params["embed"], batch["tokens"])
+    shared = params["shared"]
+
+    def f(x, xs):
+        p, cm, ca = xs
+        new_cm = []
+        for j in range(per):
+            pj = jax.tree.map(lambda a: a[j], p)
+            cj = jax.tree.map(lambda a: a[j], cm)
+            x, cj2 = _mamba_apply(pj, x, cfg, mesh, cj)
+            new_cm.append(cj2)
+        x, ca2 = _shared_apply(shared, x, cfg, mesh, ca)
+        stk = jax.tree.map(lambda *a: jnp.stack(a), *new_cm)
+        return x, (stk, ca2)
+
+    def scan_f(carry, xs):
+        x = carry
+        x, c2 = f(x, xs)
+        return x, c2
+    x, (new_m, new_a) = jax.lax.scan(
+        scan_f, x, (params["mamba_super"], state["mamba"], state["attn"]))
+    new_state = dict(state, mamba=new_m, attn=new_a)
+    if tail:
+        def body(x, p, c):
+            x, c2 = _mamba_apply(p, x, cfg, mesh, c)
+            return x, c2, jnp.float32(0)
+        x, new_state["tail"], _ = _scan_stack(body, x, params["tail"],
+                                              state["tail"], cfg, remat=False)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return logits_out(x, params["embed"]), new_state

@@ -1,0 +1,181 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, MiniCPM3).
+
+Train/prefill: queries via low-rank q path; keys/values decompressed from the
+shared latent ``c_kv`` plus a single shared RoPE key head.
+
+Decode: the *absorbed* formulation — cache only [c_kv (r_kv) | k_rope] per
+token (the whole point of MLA: DeepSeek-V3 caches 512+64 floats/token instead
+of 128 heads x 128). W_uk is absorbed into the query and W_uv into the output
+projection, so scores are taken directly against the compressed cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, rmsnorm
+from repro.parallel.sharding import ParamSpec, constrain
+
+
+def mla_spec(cfg: ArchConfig, dtype=None):
+    m, d = cfg.mla, cfg.d_model
+    dtype = dtype or cfg.dtype
+    h = cfg.padded_heads()
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return dict(
+        wq_a=ParamSpec((d, m.q_lora_rank), dtype, ("embed", "lora")),
+        q_norm=ParamSpec((m.q_lora_rank,), dtype, ("lora",), init="ones"),
+        wq_b=ParamSpec((m.q_lora_rank, h, qk), dtype, ("lora", "heads", None)),
+        wkv_a=ParamSpec((d, m.kv_lora_rank + m.qk_rope_dim), dtype, ("embed", "lora")),
+        kv_norm=ParamSpec((m.kv_lora_rank,), dtype, ("lora",), init="ones"),
+        wk_b=ParamSpec((m.kv_lora_rank, h, m.qk_nope_dim), dtype,
+                       ("lora", "heads", None)),
+        wv_b=ParamSpec((m.kv_lora_rank, h, m.v_head_dim), dtype,
+                       ("lora", "heads", None)),
+        wo=ParamSpec((h, m.v_head_dim, d), dtype, ("heads", None, "embed")),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLACache:
+    ckv: jax.Array        # [B, S_max, r_kv] compressed latents
+    krope: jax.Array      # [B, S_max, rope_dim] shared rope key
+    length: jax.Array
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, max_len: int, *, long=False):
+    m = cfg.mla
+    seq_ax = "kv_seq_long" if long else "kv_seq"
+    return MLACache(
+        ckv=ParamSpec((batch, max_len, m.kv_lora_rank), cfg.dtype,
+                      ("batch", seq_ax, None)),
+        krope=ParamSpec((batch, max_len, m.qk_rope_dim), cfg.dtype,
+                        ("batch", seq_ax, None)),
+        length=ParamSpec((), jnp.int32, (), init="zeros"),
+    )
+
+
+def _dot32(eq, *ops):
+    """f32-accumulating einsum. XLA:CPU's DotThunk cannot *execute* some
+    bf16xbf16=f32 dots (it compiles them fine), so on CPU we upcast operands;
+    on TPU this is the native MXU mixed-precision form."""
+    if jax.default_backend() == "cpu":
+        return jnp.einsum(eq, *(o.astype(jnp.float32) for o in ops))
+    return jnp.einsum(eq, *ops, preferred_element_type=jnp.float32)
+
+
+def _q_proj(p, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    q = rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])     # [B,S,H,nope+rope]
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.attn.rope_base, 1.0)
+    return q_nope, q_rope
+
+
+def _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, out_dtype, chunk=1024):
+    """Online-softmax MLA attention; K/V decompressed one chunk at a time."""
+    B, Sq, H, dn = q_nope.shape
+    S = ckv.shape[1]
+    n = S // chunk
+    ckv_c = ckv.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    kr_c = k_rope.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    q_pos = jnp.arange(Sq)
+    dv = p["wv_b"].shape[-1]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, (ck, kr) = xs
+        k_nope = jnp.einsum("bsr,rhk->bshk", ck, p["wk_b"])
+        v = jnp.einsum("bsr,rhk->bshk", ck, p["wv_b"])
+        s = (jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope,
+                        preferred_element_type=jnp.float32) +
+             jnp.einsum("bqhk,bsk->bhqs", q_rope, kr,
+                        preferred_element_type=jnp.float32)) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)
+        msk = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(msk[None, None], s, -1e30)
+        m2 = jnp.maximum(m, s.max(-1))
+        pb = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + pb.sum(-1)
+        acc2 = acc * corr[..., None] + jnp.einsum(
+            "bhqs,bshk->bhqk", pb.astype(out_dtype), v,
+            preferred_element_type=jnp.float32)
+        return (m2, l2, acc2), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, dv), jnp.float32)
+    # full unroll: exact dry-run cost accounting (see attention.py)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(n), (ckv_c, kr_c)), unroll=True)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # [B,H,Sq,dv]
+    return out.transpose(0, 2, 1, 3)                   # [B,Sq,H,dv]
+
+
+def mla_attention(p, x, cfg: ArchConfig, mesh, *, positions=None,
+                  cache: MLACache | None = None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.padded_heads()
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cache is not None:
+            positions = positions + cache.length
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+    kv = x @ p["wkv_a"]                                # [B,S,r_kv+rope]
+    ckv = rmsnorm(kv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions,
+                        cfg.attn.rope_base, 1.0)[:, :, 0]   # [B,S,rope]
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+
+    if cache is None:
+        from repro.models.attention import CHUNKED_ATTN_THRESHOLD, _KV_CHUNK
+        if S >= CHUNKED_ATTN_THRESHOLD and S % _KV_CHUNK == 0:
+            # chunked online softmax WITH per-chunk latent decompression:
+            # the full per-head K/V ([B,S,H,d]) never materializes — only the
+            # compressed ckv ([B,S,r_kv]) is resident, the MLA memory win at
+            # prefill (EXPERIMENTS.md §Perf M1).
+            o = _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, x.dtype)
+        else:
+            k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
+            v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"])
+            sn = jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope,
+                            preferred_element_type=jnp.float32)
+            sr = jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope,
+                            preferred_element_type=jnp.float32)
+            s = (sn + sr) * scale
+            q_pos = jnp.arange(S)
+            mask = q_pos[None, :] <= q_pos[:, None]    # [Sk<=Sq] causal
+            s = jnp.where(mask.T[None, None], s, -1e30)
+            prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+            o = jnp.einsum("bhqs,bshk->bqhk", prob, v,
+                           preferred_element_type=jnp.float32)
+        new_cache = None
+    else:
+        # absorbed decode: score against the compressed cache directly
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache.ckv, ckv.astype(cache.ckv.dtype), (0, cache.length, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache.krope, k_rope.astype(cache.krope.dtype), (0, cache.length, 0))
+        new_len = cache.length + S
+        q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])  # absorb W_uk
+        s = (_dot32("bqhr,bsr->bhqs", q_abs, ckv_c) +
+             _dot32("bqhk,bsk->bhqs", q_rope, kr_c)) * scale
+        k_pos = jnp.arange(ckv_c.shape[1])
+        mask = (k_pos[None] <= positions[0][:, None]) & (k_pos < new_len)[None]
+        s = jnp.where(mask[None, None], s, -1e30)
+        prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        ctx = _dot32("bhqs,bsr->bqhr", prob, ckv_c)
+        o = jnp.einsum("bqhr,rhk->bqhk", ctx.astype(x.dtype), p["wv_b"])  # absorb W_uv
+        new_cache = MLACache(ckv=ckv_c, krope=kr_c, length=new_len)
+
+    y = jnp.einsum("bqhk,hkd->bqd", o.astype(x.dtype), p["wo"])
+    return y, new_cache

@@ -1,0 +1,177 @@
+"""MoE block wired to the NCCL-EP core (the paper's §VI "FusedMoE layer").
+
+The block enters a `shard_map` island over the full mesh; inside, tokens are
+laid out one-shard-per-EP-rank and the unified ep_dispatch/ep_combine
+primitives run over `MoESpec.ep_axis`. Expert weights are block-distributed
+over the same axis (rank r hosts experts [r*L, (r+1)*L)), with the expert FFN
+optionally tensor-parallel over the model axis when it is not part of the EP
+axis (Megatron "ETP": the a2a is then replicated per TP rank — per-chip wire
+bytes unchanged).
+
+Deployment presets (mirrors the paper's vLLM/Megatron integrations):
+  * training / prefill, many experts (DeepSeek-V3): ep_axis=("data","model"),
+    HT mode, optionally hierarchical (outer=data, inner=model);
+  * training, few experts (DBRX, E=16): ep_axis=("data",), expert-TP on model;
+  * decode (both): ep_axis=("data",), LL mode, B/rank <= 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
+                        ep_dispatch, ep_combine)
+from repro.core.routing import RouterConfig, route
+from repro.kernels import ops as K
+from repro.models.config import ArchConfig
+from repro.models.layers import ffn_spec, ffn_apply
+from repro.parallel.sharding import ParamSpec
+
+
+def moe_spec(cfg: ArchConfig, dtype=None):
+    m, d = cfg.moe, cfg.d_model
+    dtype = dtype or cfg.dtype
+    f = m.d_ff_expert
+    sp = dict(
+        router=ParamSpec((d, m.num_experts), jnp.float32, ("embed", None)),
+        w_gate=ParamSpec((m.num_experts, d, f), dtype, ("expert", "embed", "expert_ffn")),
+        w_up=ParamSpec((m.num_experts, d, f), dtype, ("expert", "embed", "expert_ffn")),
+        w_down=ParamSpec((m.num_experts, f, d), dtype, ("expert", "expert_ffn", "embed")),
+    )
+    if m.use_selection_bias:
+        sp["sel_bias"] = ParamSpec((m.num_experts,), jnp.float32, (None,), init="zeros")
+    if m.shared_experts:
+        sp["shared"] = ffn_spec(d, m.shared_experts * f, dtype, cfg.act)
+    return sp
+
+
+def _token_specs(mesh, ep_axis):
+    """(batch_axes, seq_axes) for the [B, S, D] token layout inside the MoE
+    shard_map.
+
+    The EP rank partition of tokens is carried by the batch dim for every EP
+    axis EXCEPT "model", which splits the sequence dim (Megatron
+    sequence-parallel style). Keeping B on ("pod","data") in all cases means
+    the shard_map boundary only ever *slices S over model* relative to the
+    attention layout — a local operation. (The earlier layout moved B off
+    "data" onto nothing and S onto ("data","model"): GSPMD cannot reshard
+    that transition incrementally and fell back to full replication of
+    [B,S,D] per MoE layer — measured 33.5 TiB/dev temps on the deepseek-v3
+    prefill cell. See EXPERIMENTS.md §Perf iteration D1.)"""
+    present = set(mesh.shape.keys())
+    ep = tuple(a for a in ep_axis if a in present)
+    b_axes = tuple(a for a in ("pod", "data") if a in present)
+    s_axes = tuple(a for a in ep if a == "model")
+    return b_axes, s_axes, ep
+
+
+def _router_cfg(m) -> RouterConfig:
+    return RouterConfig(
+        num_experts=m.num_experts, top_k=m.top_k, gating=m.gating,
+        n_groups=m.n_groups, topk_groups=m.topk_groups,
+        use_selection_bias=m.use_selection_bias,
+        routed_scaling_factor=m.routed_scaling, norm_topk_prob=m.norm_topk,
+        aux_loss_weight=m.aux_loss_weight, z_loss_weight=1e-4,
+    )
+
+
+def _expert_ffn(group, y3d, counts, w1, w3, w2, act, tp_axis):
+    """Grouped SwiGLU over [L, A, D]; counts-masked; optional TP psum."""
+    if group.mode == "baseline":
+        counts = jnp.full_like(counts, y3d.shape[1])   # padded rows computed
+    g = K.grouped_gemm(y3d, w1, counts)
+    u = K.grouped_gemm(y3d, w3, counts)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(y3d.dtype)
+    out = K.grouped_gemm(h, w2, counts)
+    if tp_axis is not None:
+        out = jax.lax.psum(out, tp_axis)               # expert-TP partials
+    return out
+
+
+def moe_block(p, x, cfg: ArchConfig, mesh):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    m = cfg.moe
+    if mesh is None or mesh.empty:
+        return _moe_dense_fallback(p, x, cfg), jnp.float32(0)
+
+    b_axes, s_axes, ep = _token_specs(mesh, m.ep_axis)
+    ep_sizes = [mesh.shape[a] for a in ep]
+    N = math.prod(ep_sizes) if ep else 1
+    if N <= 1 or m.num_experts % N != 0:
+        y, aux = _moe_dense_fallback(p, x, cfg), jnp.float32(0)
+        return y, aux
+    B, S, D = x.shape
+    # tokens per EP rank (static)
+    b_div = math.prod(mesh.shape[a] for a in b_axes) if b_axes else 1
+    s_div = math.prod(mesh.shape[a] for a in s_axes) if s_axes else 1
+    T = (B // b_div) * (S // s_div)
+    tp_axis = "model" if ("model" in mesh.shape and "model" not in ep) else None
+
+    gcfg = EpGroupConfig(
+        num_experts=m.num_experts, max_tokens_per_rank=T, hidden=D,
+        top_k=m.top_k, mode=m.ep_mode, ll_layout=m.ll_layout,
+        capacity_factor=m.capacity_factor,
+        expert_capacity_factor=m.expert_capacity_factor,
+        payload_dtype=cfg.dtype, quantize_dispatch=m.quantize_dispatch,
+        ep_axis=ep, ht_hierarchical=m.ht_hierarchical,
+    )
+    group = ep_create_group(gcfg, ep_size=N, inner_size=ep_sizes[-1])
+
+    tok_spec = P(tuple(b_axes) or None, tuple(s_axes) or None, None)
+    ew_spec = P(tuple(ep), None, "model" if tp_axis else None)
+    ew_spec_t = P(tuple(ep), "model" if tp_axis else None, None)
+    bias = p.get("sel_bias")
+
+    def inner(xs, router_w, w1, w3, w2, sel_bias):
+        Bl, Sl, Dl = xs.shape
+        xt = xs.reshape(Bl * Sl, Dl)
+        logits = xt.astype(jnp.float32) @ router_w
+        r = route(logits, _router_cfg(m), sel_bias)
+        handle = ep_create_handle(group, r.topk_idx, r.topk_weights)
+        y3d, counts = ep_dispatch(group, handle, xt)
+        y3d = _expert_ffn(group, y3d, counts, w1, w3, w2, cfg.act, tp_axis)
+        out = ep_combine(group, handle, y3d).astype(xs.dtype)
+        # aux losses averaged over the token-carrying axes (the value is
+        # invariant along a pure-TP model axis — pmean there is ill-typed)
+        aux = r.aux_loss + r.z_loss
+        vary = tuple(dict.fromkeys(b_axes + s_axes))
+        if vary:
+            aux = jax.lax.pmean(aux, vary)
+        return out.reshape(Bl, Sl, Dl), aux
+
+    sel = bias if bias is not None else jnp.zeros((m.num_experts,), jnp.float32)
+    fn = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(tok_spec, P(None, None), ew_spec, ew_spec, ew_spec_t, P(None)),
+        out_specs=(tok_spec, P()),
+    )
+    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], sel)
+    if m.shared_experts:
+        y = y + ffn_apply(p["shared"], x, cfg.act)
+    return y, aux
+
+
+def _moe_dense_fallback(p, x, cfg: ArchConfig):
+    """Reference MoE for meshless smoke tests: dense routing, no EP comms.
+    Semantics identical to the EP path (same router, same expert math)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    r = route(xt.astype(jnp.float32) @ p["router"], _router_cfg(m),
+              p.get("sel_bias"))
+    w1, w3, w2 = p["w_gate"], p["w_up"], p["w_down"]
+    h_g = jnp.einsum("td,edf->tef", xt, w1)
+    h_u = jnp.einsum("td,edf->tef", xt, w3)
+    h = (jax.nn.silu(h_g.astype(jnp.float32)) * h_u.astype(jnp.float32)).astype(x.dtype)
+    y_all = jnp.einsum("tef,efd->ted", h, w2)            # [T, E, D]
+    oh = jax.nn.one_hot(r.topk_idx, m.num_experts, dtype=jnp.float32)
+    gate = jnp.einsum("tk,tke->te", r.topk_weights, oh)  # [T, E]
+    y = jnp.einsum("ted,te->td", y_all.astype(jnp.float32), gate).astype(x.dtype)
+    y = y.reshape(B, S, D)
+    if m.shared_experts:
+        y = y + ffn_apply(p["shared"], x, cfg.act)
+    return y

@@ -1,0 +1,37 @@
+"""Model registry: family -> (params_spec, forward, decode_state_spec,
+decode_step). Every architecture config resolves through here."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.models import transformer as T
+from repro.models import hybrid as HY
+from repro.models import encdec as ED
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    params_spec: Callable
+    forward: Callable           # (params, batch, cfg, mesh) -> (loss, aux)
+    decode_state_spec: Callable  # (cfg, batch, max_len, long=False) -> spec tree
+    decode_step: Callable       # (params, state, batch, cfg, mesh) -> (logits, state)
+
+
+_REGISTRY = {
+    "lm": ModelFns(T.lm_spec, T.lm_forward, T.lm_decode_state_spec, T.lm_decode_step),
+    "vlm": ModelFns(T.lm_spec, T.lm_forward, T.lm_decode_state_spec, T.lm_decode_step),
+    "gemma3": ModelFns(T.gemma3_spec, T.gemma3_forward,
+                       T.gemma3_decode_state_spec, T.gemma3_decode_step),
+    "ssm": ModelFns(T.ssm_spec, T.ssm_forward, T.ssm_decode_state_spec,
+                    T.ssm_decode_step),
+    "hybrid": ModelFns(HY.hybrid_spec, HY.hybrid_forward,
+                       HY.hybrid_decode_state_spec, HY.hybrid_decode_step),
+    "encdec": ModelFns(ED.encdec_spec, ED.encdec_forward,
+                       ED.encdec_decode_state_spec, ED.encdec_decode_step),
+}
+
+
+def get_model(cfg: ArchConfig) -> ModelFns:
+    return _REGISTRY[cfg.family]

@@ -1,0 +1,4 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ParamSpec, ShardingRules, DEFAULT_RULES, spec_to_named_sharding,
+    logical_to_pspec, init_from_specs, abstract_from_specs, constrain,
+)

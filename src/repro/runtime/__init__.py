@@ -1,0 +1,3 @@
+from repro.runtime.steps import (  # noqa: F401
+    make_train_step, make_serve_step, train_batch_specs, serve_state_specs,
+)

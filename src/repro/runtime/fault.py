@@ -1,0 +1,79 @@
+"""Fault tolerance: preemption-safe checkpointing, restart, stragglers.
+
+At 1000+-node scale the failure model is: (a) planned preemption (SIGTERM
+with grace), (b) hard node loss (step dies; orchestrator restarts the job on
+a reconfigured slice), (c) stragglers (synchronous collectives make the step
+time the max over nodes). The corresponding mechanisms here:
+
+  * SIGTERM/SIGINT handler sets a flag checked once per step; the loop then
+    writes a synchronous checkpoint (data-pipeline state included) and exits
+    cleanly — restart resumes bit-exact from (params, opt, data.step).
+  * restart: `latest_step()` + elastic `restore_checkpoint` re-shards onto
+    the new mesh — node replacement and scale changes are the same code path.
+  * stragglers: a step-time watchdog keeps an EMA and flags outliers
+    (> factor x EMA). Under synchronous SPMD the mitigation is detect ->
+    checkpoint -> evict -> elastic restart; the watchdog emits the signal an
+    orchestrator would consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+
+
+class PreemptionGuard:
+    """Installs SIGTERM/SIGINT handlers; `should_stop` is polled per step."""
+
+    def __init__(self):
+        self._stop = False
+        self._orig = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._orig[sig] = signal.signal(sig, self._handler)
+            except ValueError:      # non-main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._stop = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop
+
+    def restore(self):
+        for sig, h in self._orig.items():
+            signal.signal(sig, h)
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EMA step-time monitor; returns True when the step is an outlier."""
+    factor: float = 2.5
+    decay: float = 0.9
+    ema: float | None = None
+    flagged: int = 0
+
+    def observe(self, step_time: float) -> bool:
+        if self.ema is None:
+            self.ema = step_time
+            return False
+        outlier = step_time > self.factor * self.ema
+        if outlier:
+            self.flagged += 1
+        else:
+            self.ema = self.decay * self.ema + (1 - self.decay) * step_time
+        return outlier
+
+
+class StepTimer:
+    def __init__(self):
+        self.t0 = None
+        self.times = []
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.times.append(time.perf_counter() - self.t0)

@@ -1,0 +1,77 @@
+"""Decode serving loop: continuous batched greedy decoding against a KV/state
+cache — the vLLM-style harness the paper's LL mode targets (§VI-C). Tracks
+the serving metrics of Table VII: output tok/s, TTFT, ITL/TPOT."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import init_from_specs
+from repro.runtime.steps import make_serve_step, serve_state_specs
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    ttft_s: float
+    itl_mean_s: float
+    itl_p99_s: float
+    output_tok_s: float
+    total_tokens: int
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class DecodeServer:
+    def __init__(self, cfg: ArchConfig, batch: int, max_len: int, mesh=None,
+                 params=None, seed=0):
+        self.cfg, self.mesh, self.batch = cfg, mesh, batch
+        self.model = get_model(cfg)
+        if params is None:
+            params = init_from_specs(jax.random.PRNGKey(seed),
+                                     self.model.params_spec(cfg), mesh)
+        self.params = params
+        st_spec, _ = serve_state_specs(cfg, batch, max_len)
+        self.state = jax.tree.map(
+            jnp.zeros_like, init_from_specs(jax.random.PRNGKey(1), st_spec, mesh))
+        self.step = jax.jit(make_serve_step(cfg, mesh), donate_argnums=(1,))
+
+    def prefill(self, prompts: jax.Array):
+        """Token-by-token prefill through the decode path (keeps this harness
+        family-agnostic; a production server runs a fused prefill)."""
+        t0 = time.perf_counter()
+        tok = None
+        for i in range(prompts.shape[1]):
+            tok, self.state = self.step(self.params, self.state,
+                                        {"tokens": prompts[:, i:i + 1]})
+        jax.block_until_ready(tok)
+        return tok, time.perf_counter() - t0
+
+    def decode(self, first_tok: jax.Array, steps: int):
+        tok = first_tok
+        itls = []
+        outs = [np.asarray(tok)]
+        for _ in range(steps):
+            t0 = time.perf_counter()
+            tok, self.state = self.step(self.params, self.state,
+                                        {"tokens": tok})
+            jax.block_until_ready(tok)
+            itls.append(time.perf_counter() - t0)
+            outs.append(np.asarray(tok))
+        return np.concatenate(outs, axis=1), np.asarray(itls)
+
+    def serve(self, prompts: jax.Array, gen_steps: int) -> ServeMetrics:
+        first, ttft = self.prefill(prompts)
+        toks, itls = self.decode(first, gen_steps)
+        total = toks.shape[0] * toks.shape[1]
+        return ServeMetrics(
+            ttft_s=ttft, itl_mean_s=float(itls.mean()),
+            itl_p99_s=float(np.percentile(itls, 99)),
+            output_tok_s=total / (ttft + float(itls.sum())),
+            total_tokens=total)

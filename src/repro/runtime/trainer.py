@@ -1,0 +1,116 @@
+"""Training loop: jitted train_step + checkpointing + fault tolerance +
+straggler watchdog. Drives any registered architecture on any mesh."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.data import DataConfig, DataPipeline
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_init_specs
+from repro.parallel.sharding import init_from_specs, abstract_from_specs
+from repro.runtime.fault import PreemptionGuard, StragglerWatchdog, StepTimer
+from repro.runtime.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, mesh=None,
+                 opt_cfg: AdamWConfig | None = None):
+        self.cfg, self.tcfg, self.mesh = cfg, tcfg, mesh
+        self.opt_cfg = opt_cfg or AdamWConfig(
+            total_steps=tcfg.steps, warmup_steps=max(tcfg.steps // 20, 1))
+        self.model = get_model(cfg)
+        self.data = DataPipeline(DataConfig(
+            vocab=cfg.vocab, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, microbatch=max(cfg.microbatch, 1),
+            seed=tcfg.seed), mesh)
+        self.step_fn = jax.jit(make_train_step(cfg, mesh, self.opt_cfg),
+                               donate_argnums=(0, 1))
+        self.guard = PreemptionGuard()
+        self.watchdog = StragglerWatchdog()
+        self.metrics_log: list[dict] = []
+
+    # ---- state management -------------------------------------------------
+    def init_state(self):
+        from repro.parallel.sharding import arch_rules
+        pspec = self.model.params_spec(self.cfg)
+        params = init_from_specs(jax.random.PRNGKey(self.tcfg.seed), pspec,
+                                 self.mesh, arch_rules(self.cfg))
+        opt = adamw_init(params, self.opt_cfg)
+        return params, opt
+
+    def maybe_restore(self):
+        if not self.tcfg.ckpt_dir:
+            return None
+        step = latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return None
+        pspec = self.model.params_spec(self.cfg)
+        ospec = adamw_init_specs(pspec, self.opt_cfg)
+        (params, opt, dstate), idx = restore_checkpoint(
+            self.tcfg.ckpt_dir, step, (pspec, ospec,
+                                       dict(step=np.zeros((), np.int64),
+                                            seed=np.zeros((), np.int64))),
+            mesh=self.mesh)
+        self.data.restore({k: int(v) for k, v in dstate.items()})
+        return params, opt
+
+    def save(self, params, opt):
+        if not self.tcfg.ckpt_dir:
+            return
+        ds = self.data.state()
+        save_checkpoint(self.tcfg.ckpt_dir, self.data.step,
+                        (params, opt, {k: np.int64(v) for k, v in ds.items()}))
+
+    # ---- main loop ---------------------------------------------------------
+    def run(self):
+        restored = self.maybe_restore()
+        if restored is not None:
+            params, opt = restored
+            print(f"[trainer] resumed at data step {self.data.step}")
+        else:
+            params, opt = self.init_state()
+        preempted = False
+        while self.data.step < self.tcfg.steps:
+            batch = next(self.data)
+            t = StepTimer()
+            with t:
+                params, opt, m = self.step_fn(params, opt, batch)
+                jax.block_until_ready(m["loss"])
+            if self.watchdog.observe(t.times[-1]):
+                print(f"[watchdog] straggler step {self.data.step}: "
+                      f"{t.times[-1]:.2f}s vs ema {self.watchdog.ema:.2f}s")
+            if self.data.step % self.tcfg.log_every == 0:
+                rec = dict(step=self.data.step, loss=float(m["loss"]),
+                           gnorm=float(m["grad_norm"]), t=t.times[-1])
+                self.metrics_log.append(rec)
+                print(f"[train] step={rec['step']} loss={rec['loss']:.4f} "
+                      f"gnorm={rec['gnorm']:.3f} {rec['t']*1e3:.0f}ms")
+            if (self.tcfg.ckpt_dir and
+                    self.data.step % self.tcfg.ckpt_every == 0):
+                self.save(params, opt)
+            if self.guard.should_stop:
+                print("[trainer] preemption signal — checkpoint + exit")
+                self.save(params, opt)
+                preempted = True
+                break
+        if not preempted and self.tcfg.ckpt_dir:
+            self.save(params, opt)
+        return params, opt

@@ -1,0 +1,12 @@
+"""Test fixtures. EP-collective tests need a handful of devices to exercise
+shard_map all-to-alls, so we ask the host platform for 8 (NOT the production
+512 — that belongs exclusively to launch/dryrun.py). Single-device smoke
+tests are unaffected: they just use device 0.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

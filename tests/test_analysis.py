@@ -1,0 +1,52 @@
+"""HLO collective-byte parser + roofline-correction unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+    assert _shape_bytes("f32[4,4,4]") == 64 * 4
+    assert _shape_bytes("(f32[8], bf16[8,2]{1,0})") == 32 + 32
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_counts_real_ops():
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def f(x):
+        a = jax.lax.psum(x, "model")
+        b = jax.lax.all_gather(x, "data", axis=0, tiled=True)
+        c = jax.lax.all_to_all(x.reshape(4, -1, x.shape[-1]), "data",
+                               split_axis=0, concat_axis=0, tiled=False)
+        s = a.sum() + b.sum() + c.sum()
+        return jax.lax.psum(s, ("data", "model"))
+
+    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data", "model"),
+                              out_specs=P()))
+    x = jnp.ones((16, 32), jnp.float32)
+    txt = g.lower(x).compile().as_text()
+    cb = collective_bytes(txt)
+    assert cb.get("all-to-all", 0) > 0
+    assert cb.get("all-gather", 0) > 0
+    assert cb["total"] >= cb.get("all-to-all", 0) + cb.get("all-gather", 0)
+
+
+def test_scan_correction_math():
+    from repro.launch.roofline import corrected_terms
+    rec = dict(
+        microbatch=2,
+        program=dict(cost={"flops": 100.0, "bytes accessed": 50.0},
+                     collectives={"total": 10}),
+        stacks=[dict(trips=4, cost={"flops": 20.0, "bytes accessed": 8.0},
+                     collectives={"total": 2})],
+    )
+    t = corrected_terms(rec)
+    # trips*microbatch - 1 = 7 extra bodies
+    assert t["flops"] == 100.0 + 7 * 20.0
+    assert t["hbm_bytes"] == 50.0 + 7 * 8.0
+    assert t["coll_bytes"] == 10 + 7 * 2

@@ -1,0 +1,157 @@
+"""HT-mode correctness: flat and hierarchical paths vs the dense oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.group import EpGroupConfig, ep_create_group
+from repro.core import ht
+
+
+def oracle(x, topk, w):
+    scale = (w * (1.0 + topk)).sum(-1)
+    return x * scale[..., None]
+
+
+def rand_routing(rng, N, T, K, E):
+    topk = np.stack([np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+                     for _ in range(N)]).astype(np.int32)
+    w = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    return jnp.asarray(topk), w
+
+
+def run_flat(cfg, x, topk, w):
+    N = x.shape[0]
+    mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    group = ep_create_group(cfg, ep_size=N)
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        h = ht.ht_create_handle(group, topk, w)
+        y3d, counts = ht.ht_dispatch(group, h, x)
+        me = jax.lax.axis_index("data")
+        e_glob = me * group.local_experts + jnp.arange(group.local_experts)
+        y3d = y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+        out = ht.ht_combine(group, h, y3d)
+        return out[None], counts[None], h.num_recv_tokens[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                              out_specs=(P("data"), P("data"), P("data"))))
+    return f(x, topk, w)
+
+
+def run_hier(cfg, x, topk, w, No, Ni):
+    mesh = jax.make_mesh((No, Ni), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    group = ep_create_group(cfg, ep_size=No * Ni, inner_size=Ni)
+
+    def step(x, topk, w):
+        x, topk, w = x[0, 0], topk[0, 0], w[0, 0]
+        h = ht.ht_create_handle(group, topk, w)
+        y3d, counts = ht.ht_dispatch(group, h, x)
+        me = (jax.lax.axis_index("pod") * Ni + jax.lax.axis_index("data"))
+        e_glob = me * group.local_experts + jnp.arange(group.local_experts)
+        y3d = y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+        out = ht.ht_combine(group, h, y3d)
+        return out[None, None], counts[None, None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(P("pod", "data"),) * 3,
+                              out_specs=(P("pod", "data"), P("pod", "data"))))
+    return f(x, topk, w)
+
+
+@pytest.mark.parametrize("E,K,T,H", [(16, 4, 32, 64), (8, 8, 16, 32), (64, 4, 64, 16)])
+def test_ht_flat_roundtrip(E, K, T, H):
+    N = 8
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk, w = rand_routing(rng, N, T, K, E)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode="ht", payload_dtype=jnp.float32)  # zero-drop caps
+    out, counts, nrecv = run_flat(cfg, x, topk, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle(x, topk, w)),
+                               rtol=2e-5, atol=2e-5)
+    assert int(counts.sum()) == N * T * K
+    # the paper's GetNumRecvTokens query: exact per-rank receive totals
+    np.testing.assert_array_equal(np.asarray(nrecv), np.asarray(counts.sum(1)))
+
+
+def test_ht_flat_capacity_drop_is_bounded():
+    """With a tight capacity factor, dropped entries zero their contribution
+    but never corrupt other tokens (the static-shape overflow semantics)."""
+    N, E, K, T, H = 8, 16, 4, 32, 16
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk, w = rand_routing(rng, N, T, K, E)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode="ht", capacity_factor=1.0, payload_dtype=jnp.float32)
+    out, counts, _ = run_flat(cfg, x, topk, w)
+    ref = np.asarray(oracle(x, topk, w))
+    got = np.asarray(out)
+    # each token's output is a partial weighted sum: |got| <= oracle's bound
+    # and rows either match (no drops for that token) or are strictly smaller
+    per_err = np.abs(got - ref).max(-1)
+    full_match = per_err < 1e-4
+    assert full_match.mean() > 0.5  # most tokens survive at cf=1.0
+    # dropped contributions only *remove* terms: verify via magnitude bound
+    assert np.all(np.abs(got).max(-1) <= np.abs(ref).max(-1) * (1.0 + K) + 1e-4)
+
+
+@pytest.mark.parametrize("No,Ni", [(2, 4), (4, 2)])
+@pytest.mark.parametrize("E,K", [(16, 4), (8, 3)])
+def test_ht_hierarchical_roundtrip(No, Ni, E, K):
+    T, H = 16, 32
+    N = No * Ni
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(No, Ni, T, H), jnp.float32)
+    topk, w = rand_routing(rng, N, T, K, E)
+    topk = topk.reshape(No, Ni, T, K)
+    w = w.reshape(No, Ni, T, K)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode="ht", ep_axis=("pod", "data"), ht_hierarchical=True,
+                        payload_dtype=jnp.float32)
+    out, counts = run_hier(cfg, x, topk, w, No, Ni)
+    ref = oracle(x.reshape(N, T, H), topk.reshape(N, T, K), w.reshape(N, T, K))
+    np.testing.assert_allclose(np.asarray(out).reshape(N, T, H), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    assert int(counts.sum()) == N * T * K
+
+
+def test_ht_hier_matches_flat():
+    """The hierarchical path must compute exactly the same function as the
+    flat path (same tokens to same experts, same weighted combine)."""
+    No, Ni, E, K, T, H = 2, 4, 16, 4, 8, 16
+    N = No * Ni
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk, w = rand_routing(rng, N, T, K, E)
+    cfg_f = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                          mode="ht", payload_dtype=jnp.float32)
+    out_f, _, _ = run_flat(cfg_f, x, topk, w)
+    cfg_h = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                          mode="ht", ep_axis=("pod", "data"), ht_hierarchical=True,
+                          payload_dtype=jnp.float32)
+    out_h, _ = run_hier(cfg_h, x.reshape(No, Ni, T, H), topk.reshape(No, Ni, T, K),
+                        w.reshape(No, Ni, T, K), No, Ni)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_h).reshape(N, T, H),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ht_grad_flows():
+    N, E, K, T, H = 8, 8, 2, 16, 16
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk, w = rand_routing(rng, N, T, K, E)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode="ht", payload_dtype=jnp.float32)
+
+    def loss(x):
+        out, _, _ = run_flat(cfg, x, topk, w)
+        return jnp.sum(out ** 2)
+
+    g = jax.grad(loss)(x)
+    s = (w * (1.0 + topk)).sum(-1)[..., None]
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * s * s * x),
+                               rtol=2e-4, atol=2e-4)

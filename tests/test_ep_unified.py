@@ -1,0 +1,147 @@
+"""Unified-API behaviour: mode selection at group creation, baseline parity,
+auto mode, tagged tensors, and the property tests (hypothesis) over the
+system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
+                        ep_dispatch, ep_combine, EpTensor, EpTensorTag,
+                        ep_dispatch_tensors)
+
+
+def run_mode(cfg, x, topk, w):
+    N = x.shape[0]
+    mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    group = ep_create_group(cfg, ep_size=N)
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        h = ep_create_handle(group, topk, w)
+        y3d, counts = ep_dispatch(group, h, x)
+        me = jax.lax.axis_index("data")
+        e_glob = me * group.local_experts + jnp.arange(group.local_experts)
+        y3d = y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+        out = ep_combine(group, h, y3d)
+        return out[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                              out_specs=P("data")))
+    return f(x, topk, w)
+
+
+def oracle(x, topk, w):
+    return x * (w * (1.0 + topk)).sum(-1)[..., None]
+
+
+def mk(rng, N, T, K, E, H):
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk = jnp.asarray(np.stack([
+        np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+        for _ in range(N)]), jnp.int32)
+    w = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    return x, topk, w
+
+
+@pytest.mark.parametrize("mode", ["ll", "ht", "baseline"])
+def test_all_modes_same_function(mode):
+    """The unified API's core promise: switching the algorithm mode at group
+    creation never changes results (paper §III-A.i)."""
+    N, E, K, T, H = 8, 16, 4, 16, 32
+    x, topk, w = mk(np.random.RandomState(0), N, T, K, E, H)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode=mode, payload_dtype=jnp.float32)
+    out = run_mode(cfg, x, topk, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle(x, topk, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_auto_mode_selection():
+    cfg = EpGroupConfig(num_experts=8, max_tokens_per_rank=64, hidden=8, top_k=2)
+    assert ep_create_group(cfg, ep_size=8).mode == "ll"
+    cfg = EpGroupConfig(num_experts=8, max_tokens_per_rank=4096, hidden=8, top_k=2)
+    assert ep_create_group(cfg, ep_size=8).mode == "ht"
+
+
+def test_tagged_tensor_surface():
+    N, E, K, T, H = 8, 8, 2, 8, 16
+    x, topk, w = mk(np.random.RandomState(1), N, T, K, E, H)
+    mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode="ll", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+
+    def step(x, topk, w):
+        h = ep_create_handle(group, topk[0], w[0])
+        out_t, counts_t = ep_dispatch_tensors(
+            group, h, [EpTensor(x[0], EpTensorTag.TOKENS)])
+        assert out_t.tag == EpTensorTag.TOKENS
+        assert counts_t.tag == EpTensorTag.TOKENS_PER_EXPERTS
+        return counts_t.data[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                              out_specs=P("data")))
+    counts = f(x, topk, w)
+    assert int(np.asarray(counts).sum()) == N * T * K
+
+
+def test_wrong_tag_rejected():
+    from repro.core.tensor import validate
+    t = EpTensor(jnp.zeros((4, 4)), EpTensorTag.TOPK_WEIGHTS)
+    with pytest.raises(ValueError):
+        validate(t, tag=EpTensorTag.TOKENS)
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    mode=st.sampled_from(["ll", "ht", "baseline"]),
+    ek=st.sampled_from([(8, 2), (16, 4), (32, 8), (8, 8)]),
+    t=st.sampled_from([4, 8, 24]),
+)
+def test_property_roundtrip_and_conservation(seed, mode, ek, t):
+    """∀ routing: (1) identity experts + normalized weights reproduce the
+    input exactly; (2) every (t,k) entry is delivered exactly once."""
+    E, K = ek
+    N, H = 8, 16
+    rng = np.random.RandomState(seed)
+    x, topk, w = mk(rng, N, t, K, E, H)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=t, hidden=H,
+                        top_k=K, mode=mode, payload_dtype=jnp.float32)
+    mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    group = ep_create_group(cfg, ep_size=N)
+
+    def step(x, topk, w):
+        h = ep_create_handle(group, topk[0], w[0])
+        y3d, counts = ep_dispatch(group, h, x[0])
+        return ep_combine(group, h, y3d)[None], counts[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                              out_specs=(P("data"), P("data"))))
+    out, counts = f(x, topk, w)
+    # identity experts, weights sum to 1 -> output == input
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=2e-5, atol=2e-5)
+    assert int(np.asarray(counts).sum()) == N * t * K
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_permutation_equivariance(seed):
+    """Permuting tokens within a rank permutes outputs identically (LL)."""
+    N, E, K, T, H = 8, 16, 4, 8, 16
+    rng = np.random.RandomState(seed)
+    x, topk, w = mk(rng, N, T, K, E, H)
+    perm = rng.permutation(T)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32)
+    out1 = run_mode(cfg, x, topk, w)
+    out2 = run_mode(cfg, x[:, perm], topk[:, perm], w[:, perm])
+    np.testing.assert_allclose(np.asarray(out1[:, perm]), np.asarray(out2),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,71 @@
+"""Flash-attention Pallas kernel vs dense oracle: shapes x dtypes x GQA x
+windows, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def dense_ref(q, k, v, scale, window, causal=True):
+    B, Hq, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    qp, kp = jnp.arange(Sq), jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp[None] <= qp[:, None]
+    if window is not None:
+        mask &= (qp[:, None] - kp[None]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 1)])
+@pytest.mark.parametrize("S,bq,bk", [(128, 64, 64), (256, 128, 128)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_dense(Hq, Hkv, S, bq, bk, dt):
+    B, d = 1, 32
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, Hq, S, d), dt)
+    k = jnp.asarray(rng.randn(B, Hkv, S, d), dt)
+    v = jnp.asarray(rng.randn(B, Hkv, S, d), dt)
+    got = flash_attention(q, k, v, scale=d ** -0.5, bq=bq, bk=bk,
+                          interpret=True)
+    want = dense_ref(q, k, v, d ** -0.5, None)
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_sliding_window(window):
+    B, H, S, d = 1, 2, 128, 16
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(B, H, S, d), jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, S, d), jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, S, d), jnp.float32)
+    got = flash_attention(q, k, v, scale=0.25, window=window, bq=32, bk=32,
+                          interpret=True)
+    want = dense_ref(q, k, v, 0.25, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal():
+    B, H, S, d = 1, 2, 64, 16
+    rng = np.random.RandomState(2)
+    q = jnp.asarray(rng.randn(B, H, S, d), jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, S, d), jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, S, d), jnp.float32)
+    got = flash_attention(q, k, v, scale=0.25, causal=False, bq=32, bk=32,
+                          interpret=True)
+    want = dense_ref(q, k, v, 0.25, None, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

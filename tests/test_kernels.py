@@ -1,0 +1,103 @@
+"""Per-kernel validation: Pallas (interpret=True — executes the kernel body on
+CPU) against the pure-jnp oracle in kernels/ref.py, swept over shapes and
+dtypes. interpret mode is slow on this 1-core host, so sweeps are compact but
+cover the alignment-relevant boundaries (128-lane tiles, K extremes, dtypes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.combine_reduce import combine_reduce as cr_pallas
+from repro.kernels.dispatch_pack import dispatch_pack as dp_pallas
+from repro.kernels.grouped_gemm import grouped_gemm as gg_pallas
+
+
+def tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,K,H", [(8, 2, 128), (16, 8, 256), (32, 4, 512), (8, 16, 128)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_combine_reduce(T, K, H, dt):
+    rng = np.random.RandomState(0)
+    y = jnp.asarray(rng.randn(T, K, H), dt)
+    w = jax.nn.softmax(jnp.asarray(rng.randn(T, K), jnp.float32), -1)
+    got = cr_pallas(y, w, interpret=True)
+    want = ref.combine_reduce(y, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dt))
+
+
+@pytest.mark.parametrize("bt,bh", [(4, 128), (8, 256)])
+def test_combine_reduce_tilings(bt, bh):
+    rng = np.random.RandomState(1)
+    y = jnp.asarray(rng.randn(16, 4, 256), jnp.float32)
+    w = jnp.asarray(rng.rand(16, 4), jnp.float32)
+    got = cr_pallas(y, w, bt=bt, bh=bh, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.combine_reduce(y, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,H,N,C", [(16, 128, 4, 8), (8, 256, 8, 4)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_dispatch_pack_copy(T, H, N, C, dt):
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(T, H), dt)
+    gmap = jnp.asarray(rng.randint(0, T + 1, (N, C)), jnp.int32)  # T == sentinel
+    got, _ = dp_pallas(x, gmap, out_dtype=dt, interpret=True)
+    want, _ = ref.dispatch_pack(x, gmap)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want.astype(dt), np.float32), **tol(dt))
+
+
+@pytest.mark.parametrize("T,H,qb", [(8, 256, 128), (16, 128, 128)])
+def test_dispatch_pack_quantized(T, H, qb):
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(T, H) * 3, jnp.float32)
+    gmap = jnp.asarray(rng.randint(0, T + 1, (4, 8)), jnp.int32)
+    q, s = dp_pallas(x, gmap, quant_block=qb, interpret=True)
+    qr, sr = ref.dispatch_pack(x, gmap, quant_block=qb)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6, atol=1e-6)
+    got = ref.dequantize_fp8(q.reshape(-1, H), s.reshape(-1, H // qb))
+    want = ref.dequantize_fp8(qr.reshape(-1, H), sr.reshape(-1, H // qb))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("L,A,H,F", [(2, 128, 128, 128), (4, 256, 256, 128)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemm(L, A, H, F, dt):
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(L, A, H) * 0.1, dt)
+    w = jnp.asarray(rng.randn(L, H, F) * 0.1, dt)
+    counts = jnp.asarray(rng.randint(0, A + 1, (L,)), jnp.int32)
+    got = gg_pallas(x, w, counts, interpret=True)
+    want = ref.grouped_gemm(x, w, counts)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dt == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dt == jnp.bfloat16 else 1e-4)
+
+
+def test_grouped_gemm_count_masking():
+    """Rows at/beyond counts must be exactly zero; rows below must be exact."""
+    L, A, H, F = 2, 256, 128, 128
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(L, A, H), jnp.float32)
+    w = jnp.asarray(rng.randn(L, H, F), jnp.float32)
+    counts = jnp.asarray([100, 0], jnp.int32)
+    got = np.asarray(gg_pallas(x, w, counts, interpret=True))
+    assert np.all(got[0, 100:] == 0) and np.all(got[1] == 0)
+    want = np.einsum("ah,hf->af", np.asarray(x[0]), np.asarray(w[0]))[:100]
+    np.testing.assert_allclose(got[0, :100], want, rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_roundtrip_accuracy():
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(32, 512) * 5, jnp.float32)
+    q, s = ref.quantize_fp8(x, 128)
+    back = ref.dequantize_fp8(q, s, out_dtype=jnp.float32)
+    rel = np.abs(np.asarray(back) - np.asarray(x)).mean() / np.abs(np.asarray(x)).mean()
+    assert rel < 0.04, rel  # e4m3 block-quant: ~2-3% mean relative error

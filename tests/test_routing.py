@@ -1,0 +1,62 @@
+"""Router unit tests: top-k selection, group-limited routing, aux-free bias,
+aux losses, bias update direction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import RouterConfig, route, update_selection_bias
+
+
+def test_topk_softmax_basic():
+    logits = jnp.asarray(np.random.RandomState(0).randn(32, 16), jnp.float32)
+    r = route(logits, RouterConfig(num_experts=16, top_k=4))
+    assert r.topk_idx.shape == (32, 4)
+    # indices are the true top-4 of softmax scores
+    want = np.argsort(-np.asarray(jax.nn.softmax(logits, -1)), axis=-1)[:, :4]
+    np.testing.assert_array_equal(np.sort(np.asarray(r.topk_idx), -1),
+                                  np.sort(want, -1))
+    np.testing.assert_allclose(np.asarray(r.topk_weights.sum(-1)),
+                               np.ones(32), rtol=1e-5)
+
+
+def test_group_limited_routing():
+    """With n_groups=4 topk_groups=1, all selected experts must come from
+    one group of 4 per token."""
+    rng = np.random.RandomState(1)
+    logits = jnp.asarray(rng.randn(64, 16), jnp.float32)
+    cfg = RouterConfig(num_experts=16, top_k=4, gating="sigmoid",
+                       n_groups=4, topk_groups=1, norm_topk_prob=True)
+    r = route(logits, cfg)
+    groups = np.asarray(r.topk_idx) // 4
+    assert (groups == groups[:, :1]).all()
+
+
+def test_selection_bias_changes_selection_not_weights():
+    rng = np.random.RandomState(2)
+    logits = jnp.asarray(rng.randn(128, 8), jnp.float32)
+    cfg = RouterConfig(num_experts=8, top_k=2, gating="sigmoid",
+                       use_selection_bias=True, norm_topk_prob=False)
+    bias = jnp.zeros(8).at[3].set(10.0)       # force expert 3 into every top-2
+    r = route(logits, cfg, bias)
+    assert (np.asarray(r.topk_idx) == 3).any(axis=-1).all()
+    # weights come from the raw sigmoid scores, NOT the biased ones
+    scores = np.asarray(jax.nn.sigmoid(logits))
+    got_w = np.asarray(r.topk_weights)
+    for t in range(8):
+        for k in range(2):
+            e = int(r.topk_idx[t, k])
+            np.testing.assert_allclose(got_w[t, k], scores[t, e], rtol=1e-5)
+
+
+def test_bias_update_direction():
+    load = jnp.asarray([0.9, 0.05, 0.05])     # expert 0 overloaded
+    b = update_selection_bias(jnp.zeros(3), load, update_rate=0.1)
+    assert b[0] < 0 < b[1] and b[2] > 0
+
+
+def test_aux_loss_penalizes_imbalance():
+    T, E = 256, 8
+    collapsed = jnp.zeros((T, E)).at[:, 0].set(10.0)
+    uniform = jnp.zeros((T, E))
+    cfg = RouterConfig(num_experts=E, top_k=2, aux_loss_weight=1.0)
+    assert float(route(collapsed, cfg).aux_loss) > float(route(uniform, cfg).aux_loss)
