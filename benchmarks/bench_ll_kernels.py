@@ -37,6 +37,13 @@ def make_fns(layout: str, N: int, H: int, mode="ll"):
                         payload_dtype=jnp.bfloat16)
     group = ep_create_group(cfg, ep_size=N)
 
+    def handle(x, topk, w):
+        # handle creation = metadata gather + the full EpPlan slot-map chain.
+        # Depend on the plan maps so XLA cannot dead-code-eliminate them.
+        h = ep_create_handle(group, topk[0], w[0])
+        live = (h.plan.disp_send_gmap.sum() + h.plan.comb_recv_rows.sum())
+        return (h.tokens_per_expert + live)[None]
+
     def disp(x, topk, w):
         h = ep_create_handle(group, topk[0], w[0])
         y3d, counts = ep_dispatch(group, h, x[0])
@@ -49,7 +56,7 @@ def make_fns(layout: str, N: int, H: int, mode="ll"):
 
     sm = lambda f: jax.jit(jax.shard_map(
         f, mesh=mesh, in_specs=(P("data"),) * 3, out_specs=P("data")))
-    return sm(disp), sm(disp_comb), group
+    return sm(handle), sm(disp), sm(disp_comb), group
 
 
 def wire_bytes(group, phase: str) -> int:
@@ -76,7 +83,8 @@ def main():
             for _ in range(N)]), jnp.int32)
         w = jax.nn.softmax(jnp.asarray(rng.randn(N, B, K), jnp.float32), -1)
         for layout in ("nccl_ep", "deepep", "baseline"):
-            disp, dc, group = make_fns(layout, N, H_HOST)
+            hdl, disp, dc, group = make_fns(layout, N, H_HOST)
+            t_h = timeit(hdl, x, topk, w)
             t_d = timeit(disp, x, topk, w)
             t_dc = timeit(dc, x, topk, w)
             # paper-scale projection: wire bytes at H=7168 over v5e ICI
@@ -89,6 +97,11 @@ def main():
             cb = wire_bytes(gp, "combine")
             rows.append(dict(
                 ranks=N, layout=layout,
+                # per-phase host times (deltas of the nested jits): the
+                # machine-readable perf trajectory across PRs
+                host_handle_ms=round(t_h * 1e3, 1),
+                host_dispatch_phase_ms=round(max(t_d - t_h, 0.0) * 1e3, 1),
+                host_combine_phase_ms=round(max(t_dc - t_d, 0.0) * 1e3, 1),
                 host_dispatch_ms=round(t_d * 1e3, 1),
                 host_dispatch_combine_ms=round(t_dc * 1e3, 1),
                 dispatch_MB_per_rank=round(db / 2**20, 1),
@@ -96,8 +109,8 @@ def main():
                 v5e_dispatch_us=round(db / ICI_BW * 1e6, 1),
                 v5e_combine_us=round(cb / ICI_BW * 1e6, 1),
             ))
-    table(rows, ["ranks", "layout", "host_dispatch_ms",
-                 "host_dispatch_combine_ms", "dispatch_MB_per_rank",
+    table(rows, ["ranks", "layout", "host_handle_ms", "host_dispatch_phase_ms",
+                 "host_combine_phase_ms", "dispatch_MB_per_rank",
                  "combine_MB_per_rank", "v5e_dispatch_us", "v5e_combine_us"],
           "Figs 7-8 analogue: LL dispatch/combine vs ranks (E=256,K=8,B=128)")
     write_result("ll_kernels", dict(config=dict(E=E, K=K, B=B, H_host=H_HOST,

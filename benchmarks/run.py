@@ -3,24 +3,65 @@
   PYTHONPATH=src python -m benchmarks.run [--only name]
 
   memory    — Eq. 3 buffer-footprint reduction (deepep vs nccl_ep layouts)
-  ll        — Figs 7-8 LL dispatch/combine vs rank count
+  ll        — Figs 7-8 LL dispatch/combine vs rank count (per-phase timings)
+  slotmap   — one-hot vs sort-based positions_by_dest microbenchmark
   modes     — Table III LL/HT/baseline crossover by batch size
   serving   — Table VII end-to-end serving metrics by EP backend
 
 Each sub-benchmark needs its own fake-device count, so they run as separate
-processes; results land in results/benchmarks/*.json.
+processes; results land in results/benchmarks/*.json. After the ll and
+slotmap benchmarks run, their results are folded into ``BENCH_ll_kernels.json``
+at the repo root — the machine-readable perf trajectory (handle-create /
+dispatch / combine phase times + slot-map engine comparison) tracked across
+PRs.
 """
 import argparse
+import json
+import pathlib
 import subprocess
 import sys
 
-BENCHES = ["memory", "ll", "modes", "serving"]
+BENCHES = ["memory", "ll", "slotmap", "modes", "serving"]
 MODULES = {
     "memory": "benchmarks.bench_memory",
     "ll": "benchmarks.bench_ll_kernels",
+    "slotmap": "benchmarks.bench_slotmap",
     "modes": "benchmarks.bench_modes",
     "serving": "benchmarks.bench_serving",
 }
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "benchmarks"
+
+
+def emit_bench_ll_kernels() -> bool:
+    """Fold ll (per-phase) + slotmap results into BENCH_ll_kernels.json at the
+    repo root, if both source files exist. Each source's mtime is recorded so
+    mixed-provenance results (e.g. `--only ll` next to a week-old slotmap run)
+    are visible in the emitted file. Returns True when written."""
+    import datetime
+
+    src_ll = RESULTS / "ll_kernels.json"
+    src_sm = RESULTS / "slotmap.json"
+    if not (src_ll.exists() and src_sm.exists()):
+        return False
+    ll = json.loads(src_ll.read_text())
+    sm = json.loads(src_sm.read_text())
+
+    def stamp(p):
+        return datetime.datetime.fromtimestamp(p.stat().st_mtime).isoformat(
+            timespec="seconds")
+
+    payload = {
+        "schema": "bench_ll_kernels/v1",
+        "sources": {"ll_kernels": stamp(src_ll), "slotmap": stamp(src_sm)},
+        "config": ll.get("config", {}),
+        "phases": ll.get("rows", []),       # handle/dispatch/combine per layout
+        "slotmap": {"config": sm.get("config", {}), "rows": sm.get("rows", [])},
+    }
+    (ROOT / "BENCH_ll_kernels.json").write_text(json.dumps(payload, indent=1))
+    print(f"wrote {ROOT / 'BENCH_ll_kernels.json'}")
+    return True
 
 
 def main():
@@ -36,6 +77,7 @@ def main():
     if failed:
         print(f"\nFAILED benchmarks: {failed}")
         sys.exit(1)
+    emit_bench_ll_kernels()
     print("\nAll benchmarks complete. Results in results/benchmarks/.")
 
 

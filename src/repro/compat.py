@@ -1,0 +1,64 @@
+"""JAX version compatibility shims.
+
+The codebase is written against the modern JAX surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``). Older
+runtimes (<= 0.4.x) ship the same functionality under experimental or
+reduced signatures. ``install()`` — called once from ``repro.__init__`` —
+back-fills the missing attributes in place so every call site (library,
+tests, benchmarks, examples) runs unchanged on either version. On a modern
+JAX it is a no-op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+def _axis_type_stub():
+    class AxisType:  # minimal stand-in for jax.sharding.AxisType
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    return AxisType
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _axis_type_stub()
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *args, **kw):
+            # Old check_rep chokes on nested-jit ops over replicated values
+            # (e.g. jnp.argsort of a broadcast iota); modern JAX removed the
+            # flag. Default it off for parity with current semantics.
+            kw.setdefault("check_rep", False)
+            return _shard_map(f, *args, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # pre-0.4.38 spelling; constant-folds to the mapped axis extent
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    # Old jax.make_mesh lacks the axis_types kwarg; accept and drop it.
+    # (Feature-test via the signature — building a probe mesh would force
+    # backend initialization as a side effect of `import repro`.)
+    import inspect
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+            del axis_types
+            return _orig_make_mesh(axis_shapes, axis_names, *args, **kw)
+
+        jax.make_mesh = make_mesh

@@ -6,5 +6,6 @@ from repro.core.api import (  # noqa: F401
     ep_dispatch, ep_combine, ep_complete, ep_handle_get_num_recv_tokens,
     ep_handle_destroy, ep_dispatch_tensors, ep_combine_tensors,
 )
+from repro.core.plan import EpPlan, build_plan  # noqa: F401
 from repro.core.routing import RouterConfig, RouterOutput, route  # noqa: F401
 from repro.core.tensor import EpTensor, EpTensorTag, ep_tensor_create  # noqa: F401

@@ -17,6 +17,11 @@ handle is shared between forward and backward (the Megatron "cached dispatch"
 integration, §VI-B): JAX AD transposes dispatch into combine and vice versa
 through the same traced slot maps, so handle reuse is automatic.
 
+`ep_create_handle` also derives the complete slot-map chain for every phase
+(the `EpPlan` engine, core/plan.py) — dispatch and combine are then pure
+single-pass data movement over precomputed maps; no slot arithmetic runs
+inside them (the one-pass-per-phase invariant).
+
 The tagged-tensor entry points (`ep_dispatch_tensors`) mirror the C API's
 ``ncclNDTensor_t`` signature for framework integrations that want role
 validation.

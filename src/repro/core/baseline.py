@@ -13,7 +13,9 @@ NCCL-EP paths that show up directly in the roofline terms:
   * no staged execution, no quantization — payloads travel at model dtype.
 
 Interface-compatible with LL/HT: returns the [L, A, H] expert-major tensor +
-counts so the same expert FFN consumes it.
+counts so the same expert FFN consumes it. Like LL/HT, the permutation maps
+are precomputed once per handle by the EpPlan engine; dispatch/combine are
+single gather passes.
 """
 from __future__ import annotations
 
@@ -22,20 +24,13 @@ import jax.numpy as jnp
 
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
+from repro.core import plan as P
 from repro.kernels import ops as K
 
 
 def _axis(group):
     a = group.cfg.ep_axis
     return a if len(a) > 1 else a[0]
-
-
-def _my_rank(group):
-    axes = group.cfg.ep_axis
-    r = jax.lax.axis_index(axes[0])
-    for name in axes[1:]:
-        r = r * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    return r
 
 
 def _a2a(x, group):
@@ -60,44 +55,23 @@ def baseline_create_handle(group, topk_idx, topk_weights, num_tokens=None) -> Ep
 
 def baseline_dispatch(group: EpGroup, handle: EpHandle, x: jax.Array, *, send_only=False):
     N, L = group.ep_size, group.local_experts
-    T, Kk = handle.topk_idx.shape
     Ce = _per_expert_cap(group)
-    dst = handle.topk_idx // L                       # [T, K] (sentinel N ok)
-    e_l = handle.topk_idx % L
-    valid = handle.topk_idx < group.cfg.num_experts
-    # permute: position of entry within its (dst, e_l) block
-    block = jnp.where(valid, dst * L + e_l, N * L).reshape(-1)
-    pos, _ = S.positions_by_dest(block, N * L, valid.reshape(-1))
-    t_of = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk)).reshape(-1)
-    gmap = S.build_gather_map(block, pos, t_of, valid.reshape(-1),
-                              N * L, Ce, sentinel=T)
-    send = S.gather_rows(x.astype(group.cfg.payload_dtype),
-                         gmap.reshape(N, L * Ce))    # [N, L*Ce, H]
+    plan = P.ensure_plan(group, handle)
+    send, _ = K.dispatch_pack(x, plan.disp_send_gmap,
+                              out_dtype=group.cfg.payload_dtype)  # [N, L*Ce, H]
     recv = _a2a(send, group)                         # [N, L*Ce, H]
     H = recv.shape[-1]
     out = recv.reshape(N, L, Ce, H).transpose(1, 0, 2, 3).reshape(L, N * Ce, H)
-    me = _my_rank(group)
-    topk_g = handle.topk_global
-    mine = (topk_g // L) == me
-    el_g = (topk_g - me * L).clip(0, L - 1)
-    counts = jnp.zeros((L,), jnp.int32).at[el_g.reshape(-1)].add(
-        mine.reshape(-1).astype(jnp.int32))
-    return out, counts
+    return out, plan.disp_counts
 
 
 def baseline_combine(group: EpGroup, handle: EpHandle, y3d: jax.Array, *, send_only=False):
     N, L = group.ep_size, group.local_experts
-    T, Kk = handle.topk_idx.shape
     Ce = _per_expert_cap(group)
     H = y3d.shape[-1]
+    plan = P.ensure_plan(group, handle)
     send = (y3d.reshape(L, N, Ce, H).transpose(1, 0, 2, 3)
             .reshape(N, L * Ce, H).astype(group.cfg.payload_dtype))
     recv = _a2a(send, group)                         # [N, L*Ce, H] back at src
-    dst = handle.topk_idx // L
-    e_l = handle.topk_idx % L
-    valid = handle.topk_idx < group.cfg.num_experts
-    block = jnp.where(valid, dst * L + e_l, N * L).reshape(-1)
-    pos, _ = S.positions_by_dest(block, N * L, valid.reshape(-1))
-    row = jnp.where(valid.reshape(-1) & (pos < Ce), block * Ce + pos, N * L * Ce)
-    y_tk = S.gather_rows(S.flat_rows(recv), row.reshape(T, Kk))
-    return K.combine_reduce(y_tk, handle.topk_weights)
+    return K.combine_gather_reduce(S.flat_rows(recv), plan.comb_recv_rows,
+                                   handle.topk_weights)

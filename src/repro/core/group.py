@@ -183,6 +183,11 @@ class EpHandle:
     folded into dispatch headers in LL mode; here always at handle creation,
     which is strictly cheaper than headers since the slot maps are then
     computed redundantly-but-locally on every rank instead of being shipped).
+
+    ``plan`` carries the precomputed slot-map engine (``repro.core.plan``):
+    the full chain of gather maps and counts for every dispatch/combine phase,
+    derived exactly once at handle creation so the phases themselves are pure
+    gather/scatter passes (the one-pass-per-phase invariant).
     """
 
     topk_idx: jax.Array          # [T, K] local routing (this rank's tokens)
@@ -192,6 +197,8 @@ class EpHandle:
     num_recv_tokens: jax.Array   # [] int32 — total received (HT query, §III-B)
     # number of *valid* tokens on this rank (<= T); slots beyond are padding
     num_tokens: jax.Array        # [] int32
+    # precomputed slot maps for all phases (None only for hand-built handles)
+    plan: "object | None" = None
 
 
 def ep_handle_get_num_recv_tokens(handle: EpHandle) -> jax.Array:

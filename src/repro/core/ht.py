@@ -20,8 +20,12 @@ Targets training and inference prefill (4096+ tokens/rank). Two paths:
   bytes by the per-token multiplicity.
 
 Metadata (the paper's handle-creation exchange, §III-C2) is the all-gathered
-``topk_idx``; every rank derives the full slot-map chain locally, so payload
-messages carry zero header bytes (see slots.py).
+``topk_idx``; every rank derives the full slot-map chain locally — exactly
+once, in the ``EpPlan`` engine (core/plan.py) at handle creation — so payload
+messages carry zero header bytes (see slots.py) and every dispatch/combine
+phase below is a single gather/scatter pass over precomputed int32 maps (the
+one-pass-per-phase invariant). Send paths run the fused ``dispatch_pack``
+kernel; flat combine-recv runs the fused ``combine_gather_reduce`` kernel.
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
+from repro.core import plan as P
 from repro.kernels import ops as K
 
 
@@ -40,10 +45,12 @@ from repro.kernels import ops as K
 def ht_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) -> EpHandle:
     """Metadata exchange at handle creation (paper §III-C2): gather routing
     across the full EP axis; exact receive counts enable the
-    ``ep_handle_get_num_recv_tokens`` query for precise buffer consumption."""
+    ``ep_handle_get_num_recv_tokens`` query for precise buffer consumption.
+    The full slot-map plan (flat, hierarchical, or baseline — whichever the
+    group resolved) is derived here, once."""
     N, L = group.ep_size, group.local_experts
     T, Kk = topk_idx.shape
-    me = _my_rank(group)
+    me = P.my_rank(group)
     if num_tokens is not None:
         pad = jnp.arange(T)[:, None] >= num_tokens
         topk_idx = jnp.where(pad, group.cfg.num_experts, topk_idx)
@@ -57,18 +64,12 @@ def ht_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) ->
     counts = jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
         mine.reshape(-1).astype(jnp.int32))
     nt = jnp.asarray(T, jnp.int32) if num_tokens is None else num_tokens
+    plan = P.build_plan(group, topk_idx, topk_g, nt, topk_weights)
     return EpHandle(
         topk_idx=topk_idx, topk_weights=topk_weights, topk_global=topk_g,
         tokens_per_expert=counts, num_recv_tokens=counts.sum(), num_tokens=nt,
+        plan=plan,
     )
-
-
-def _my_rank(group: EpGroup) -> jax.Array:
-    axes = group.cfg.ep_axis
-    r = jax.lax.axis_index(axes[0])
-    for name in axes[1:]:
-        r = r * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    return r
 
 
 def _hierarchical(group: EpGroup) -> bool:
@@ -84,275 +85,91 @@ def _flat_axis(group):
     return a if len(a) > 1 else a[0]
 
 
-def _flat_maps(group: EpGroup, handle: EpHandle):
-    """Shared sender/receiver geometry for the flat path."""
-    N, L, C = group.ep_size, group.local_experts, group.ht_pair_cap
-    topk = handle.topk_idx
-    T, Kk = topk.shape
-    dst = (topk // L).reshape(-1)                          # [T*K]
-    valid = jnp.broadcast_to((jnp.arange(T) < handle.num_tokens)[:, None],
-                             (T, Kk)).reshape(-1)
-    c_pos, send_counts = S.positions_by_dest(dst, N, valid)
-    return dst, valid, c_pos, send_counts
-
-
 def ht_dispatch_flat(group: EpGroup, handle: EpHandle, x: jax.Array):
-    N, L, C, A = group.ep_size, group.local_experts, group.ht_pair_cap, group.ht_expert_cap
-    T, Kk = handle.topk_idx.shape
-    dst, valid, c_pos, _ = _flat_maps(group, handle)
-    t_of = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk)).reshape(-1)
-    gmap = S.build_gather_map(dst, c_pos, t_of, valid, N, C, sentinel=T)
-    xq, scales = _quant(group, x)
-    send = S.gather_rows(xq, gmap)                         # [N, C, H]
+    plan = P.ensure_plan(group, handle)
+    send, scales = _pack(group, x, plan.disp_send_gmap)      # [N, C, ...]
     recv = _a2a(send, _flat_axis(group))
-    recv_s = _a2a(S.gather_rows(scales, gmap), _flat_axis(group)) if scales is not None else None
-
-    # ---- receiver: entries of every src rank routed to me, in deterministic
-    # (expert, src, token, k) order -> [L, A, H]
-    me = _my_rank(group)
-    topk_g = handle.topk_global
-    mine = (topk_g // L) == me                             # [N, T, K]
-    e_l = (topk_g - me * L).clip(0, L - 1)
-    # sender's slot for each entry: running count per src restricted to dst==me
-    flat_mine = mine.reshape(N, T * Kk)
-    pos_r = jnp.cumsum(flat_mine.astype(jnp.int32), axis=1) - 1   # [N, T*K]
-    slot_ok = flat_mine & (pos_r < C)
-    rows = jnp.arange(N)[:, None] * C + pos_r              # recv flat row
-    ent_valid = slot_ok.reshape(-1)
-    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
-    gmap2 = S.build_gather_map(e_l.reshape(-1), a_pos, rows.reshape(-1), ent_valid,
-                               L, A, sentinel=N * C)
-    out = S.gather_rows(S.flat_rows(recv), gmap2)
+    recv_s = _a2a(scales, _flat_axis(group)) if scales is not None else None
+    # receiver: single gather into the deterministic [L, A, H] layout
+    out = S.gather_rows(S.flat_rows(recv), plan.disp_recv_gmap)
     if recv_s is not None:
-        sc = S.gather_rows(S.flat_rows(recv_s), gmap2, fill=0)
+        sc = S.gather_rows(S.flat_rows(recv_s), plan.disp_recv_gmap, fill=0)
         out = K.dequantize_fp8(out, sc)
-    return out, counts
+    return out, plan.disp_counts
 
 
 def ht_combine_flat(group: EpGroup, handle: EpHandle, y3d: jax.Array):
     """Mirror a2a: expert side repacks [L, A, H] into the same [N, C, H]
     blocks (same slots as dispatch), then the source applies the weighted
-    reduction — per-token at the receiver, matching LL semantics."""
-    N, L, C, A = group.ep_size, group.local_experts, group.ht_pair_cap, group.ht_expert_cap
-    me = _my_rank(group)
-    topk_g = handle.topk_global
-    Nn, T, Kk = topk_g.shape
-    mine = (topk_g // L) == me
-    e_l = (topk_g - me * L).clip(0, L - 1)
-    flat_mine = mine.reshape(N, T * Kk)
-    pos_r = jnp.cumsum(flat_mine.astype(jnp.int32), axis=1) - 1
-    slot_ok = flat_mine & (pos_r < C)
-    ent_valid = slot_ok.reshape(-1)
-    a_pos, _ = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
-    y_row = e_l.reshape(-1) * A + a_pos
-    r_of = jnp.broadcast_to(jnp.arange(N)[:, None, None], (N, T, Kk)).reshape(-1)
-    # send slot within me->r block == the dispatch slot pos_r (mirror layout)
-    gmap = S.build_gather_map(r_of, pos_r.reshape(-1), y_row,
-                              ent_valid & (a_pos < A), N, C, sentinel=L * A)
-    send = S.gather_rows(S.flat_rows(y3d.astype(group.cfg.payload_dtype)), gmap)
-    recv = _a2a(send, _flat_axis(group))                   # [N, C, H]
-
-    # source side: my entry (t,k) sits in block dst at my own dispatch slot
-    dst, valid, c_pos, _ = _flat_maps(group, handle)
-    T2, Kk2 = handle.topk_idx.shape
-    row = jnp.where(valid & (c_pos < C), dst * C + c_pos, N * C)
-    y_tk = S.gather_rows(S.flat_rows(recv), row.reshape(T2, Kk2))
-    return K.combine_reduce(y_tk, handle.topk_weights)
+    reduction — fused gather+reduce at the receiver, matching LL semantics."""
+    plan = P.ensure_plan(group, handle)
+    send, _ = K.dispatch_pack(S.flat_rows(y3d), plan.comb_send_gmap,
+                              out_dtype=group.cfg.payload_dtype)
+    recv = _a2a(send, _flat_axis(group))                     # [N, C, H]
+    return K.combine_gather_reduce(S.flat_rows(recv), plan.comb_recv_rows,
+                                   handle.topk_weights)
 
 
 # --------------------------------------------------------------------------
 # hierarchical path (two-stage, pod-aware)
 # --------------------------------------------------------------------------
 
-def _hier_geometry(group: EpGroup, handle: EpHandle):
-    """Full slot-map chain, computed identically on every chip from the
-    replicated routing. Returns a dict of the intermediate maps."""
-    L, Ni, No = group.local_experts, group.inner_size, group.outer_size
-    C1, C2 = group.ht_stage1_cap, group.ht_stage2_cap
-    topk_g = handle.topk_global          # [N, T, K], N = No*Ni (outer-major)
-    N, T, Kk = topk_g.shape
-    g = topk_g.reshape(No, Ni, T, Kk)
-    r_dst = g // L
-    o_dst, i_dst = r_dst // Ni, r_dst % Ni                  # [No, Ni, T, K]
-
-    # stage 1 (per source chip): dedup over destination inner coordinate.
-    # Invalid entries (sentinel expert) have r_dst == N -> i_dst computed from
-    # it could alias a real coordinate, so mask by dst validity explicitly.
-    ent_ok = r_dst < (No * Ni)
-    i_dst_s = jnp.where(ent_ok, i_dst, Ni)                  # sentinel -> dropped
-    sends1 = jnp.zeros((No, Ni, T, Ni), bool).at[
-        jnp.arange(No)[:, None, None, None],
-        jnp.arange(Ni)[None, :, None, None],
-        jnp.arange(T)[None, None, :, None],
-        i_dst_s].set(True, mode="drop")
-    pos1 = jnp.cumsum(sends1.astype(jnp.int32), axis=2) - 1  # over tokens
-    ok1 = sends1 & (pos1 < C1)
-    # mask destination coords of invalid entries everywhere downstream
-    o_dst = jnp.where(ent_ok, o_dst, No)
-    i_dst = jnp.where(ent_ok, i_dst, Ni)
-    return dict(g=g, o_dst=o_dst, i_dst=i_dst, sends1=sends1, pos1=pos1, ok1=ok1)
-
-
 def ht_dispatch_hier(group: EpGroup, handle: EpHandle, x: jax.Array):
     ax_o, ax_i = group.cfg.ep_axis[0], group.cfg.ep_axis[-1]
-    L, Ni, No = group.local_experts, group.inner_size, group.outer_size
-    C1, C2, A = group.ht_stage1_cap, group.ht_stage2_cap, group.ht_expert_cap
-    me_o, me_i = jax.lax.axis_index(ax_o), jax.lax.axis_index(ax_i)
-    T, Kk = handle.topk_idx.shape
-    geo = _hier_geometry(group, handle)
+    plan = P.ensure_plan(group, handle)
 
-    # ---- stage 1 send (local views of the global maps)
-    s1 = geo["sends1"][me_o, me_i]                          # [T, Ni]
-    p1 = geo["pos1"][me_o, me_i]
-    t_of = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Ni)).reshape(-1)
-    i_of = jnp.broadcast_to(jnp.arange(Ni)[None, :], (T, Ni)).reshape(-1)
-    gmap1 = S.build_gather_map(i_of, p1.reshape(-1), t_of, s1.reshape(-1),
-                               Ni, C1, sentinel=T)
-    xq, scales = _quant(group, x)
-    recv1 = _a2a(S.gather_rows(xq, gmap1), ax_i)            # [Ni, C1, H] at rail
-    recv1_s = _a2a(S.gather_rows(scales, gmap1), ax_i) if scales is not None else None
+    # ---- stage 1: fused pack + intra-pod a2a -> rail chips hold [Ni, C1, H]
+    send1, scales1 = _pack(group, x, plan.h_gmap1)
+    recv1 = _a2a(send1, ax_i)
+    recv1_s = _a2a(scales1, ax_i) if scales1 is not None else None
 
-    # ---- stage 2: rail (me_o, me_i) fans held tokens over destination pods.
-    # Held slot (r_i, c) <-> token (me_o, r_i, t): needs pod o' iff any k with
-    # i_dst == me_i and o_dst == o'.
-    need = (geo["i_dst"][me_o] == me_i)                     # [Ni, T, K]
-    fan = jnp.zeros((Ni, T, No), bool).at[
-        jnp.arange(Ni)[:, None, None], jnp.arange(T)[None, :, None],
-        jnp.where(need, geo["o_dst"][me_o], No)].set(True, mode="drop")
-    ok1_me = geo["ok1"][me_o, :, :, me_i]                   # [Ni, T] held?
-    fan = fan & ok1_me[..., None]
-    # slot-2 positions: flat order (r_i-major, token) == recv1 slot order
-    pos2, _ = S.positions_by_dest(
-        jnp.broadcast_to(jnp.arange(No)[None, None, :], (Ni, T, No)).reshape(-1),
-        No, fan.reshape(-1))
-    pos2 = pos2.reshape(Ni, T, No)
-    # recv1 flat row of token (r_i, t)
-    row1 = jnp.arange(Ni)[:, None] * C1 + geo["pos1"][me_o, :, :, me_i]  # [Ni, T]
-    gmap2 = S.build_gather_map(
-        jnp.broadcast_to(jnp.arange(No)[None, None, :], (Ni, T, No)).reshape(-1),
-        pos2.reshape(-1),
-        jnp.broadcast_to(row1[..., None], (Ni, T, No)).reshape(-1),
-        fan.reshape(-1), No, C2, sentinel=Ni * C1)
-    recv2 = _a2a(S.gather_rows(S.flat_rows(recv1), gmap2), ax_o)   # [No, C2, H]
-    recv2_s = (_a2a(S.gather_rows(S.flat_rows(recv1_s), gmap2, fill=0), ax_o)
-               if recv1_s is not None else None)
+    # ---- stage 2: rail fans held rows over destination pods (pure gather)
+    send2 = S.gather_rows(S.flat_rows(recv1), plan.h_gmap2)
+    recv2 = _a2a(send2, ax_o)                                # [No, C2, H]
+    recv2_s = None
+    if recv1_s is not None:
+        recv2_s = _a2a(S.gather_rows(S.flat_rows(recv1_s), plan.h_gmap2, fill=0),
+                       ax_o)
 
-    # ---- unpack at destination chip (me_o, me_i): reconstruct, for every
-    # source pod o_s, the (r_i, t) -> c2 chain that pod's rail used.
-    out, counts, _ = _hier_unpack(group, handle, geo, recv2, recv2_s, me_o, me_i)
-    return out, counts
-
-
-def _hier_recv_chain(group, geo, me_o, me_i):
-    """For every (o_s, r_i, t): the stage-2 slot c2 (at source pod o_s's rail
-    with inner coord me_i, sending to pod me_o) and validity."""
-    L, Ni, No = group.local_experts, group.inner_size, group.outer_size
-    C1, C2 = group.ht_stage1_cap, group.ht_stage2_cap
-    No_, Ni_, T, Kk = geo["g"].shape
-    # held at rail (o_s, me_i): ok1[o_s, r_i, t, me_i]
-    held = geo["ok1"][:, :, :, me_i]                        # [No, Ni, T]
-    # needs my pod: any k with i_dst==me_i and o_dst==me_o
-    needs_me = ((geo["i_dst"] == me_i) & (geo["o_dst"] == me_o)).any(-1)  # [No, Ni, T]
-    fanned = held & needs_me
-    # c2 = running count in (r_i, t) order per source pod (matches the rail's
-    # flat (r_i*C1+pos1) order because pos1 is monotone in t)
-    c2 = jnp.cumsum(fanned.reshape(No, Ni * T).astype(jnp.int32), axis=1) - 1
-    c2 = c2.reshape(No, Ni, T)
-    ok2 = fanned & (c2 < C2)
-    return c2, ok2
-
-
-def _hier_unpack(group, handle, geo, recv2, recv2_s, me_o, me_i):
-    L, Ni, No = group.local_experts, group.inner_size, group.outer_size
-    C2, A = group.ht_stage2_cap, group.ht_expert_cap
-    No_, Ni_, T, Kk = geo["g"].shape
-    me = me_o * Ni + me_i
-    c2, ok2 = _hier_recv_chain(group, geo, me_o, me_i)
-    # entries on me: (o_s, r_i, t, k) with dst rank == me
-    mine = (geo["g"] // L) == me                            # [No, Ni, T, K]
-    e_l = (geo["g"] - me * L).clip(0, L - 1)
-    ent_valid = (mine & ok2[..., None]).reshape(-1)
-    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
-    rows = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]  # [No, Ni, T, 1]
-    rows = jnp.broadcast_to(rows, (No, Ni, T, Kk)).reshape(-1)
-    gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows, ent_valid,
-                              L, A, sentinel=No * C2)
-    out = S.gather_rows(S.flat_rows(recv2), gmap)
+    # ---- unpack at destination chip: single gather via the plan's map
+    out = S.gather_rows(S.flat_rows(recv2), plan.disp_recv_gmap)
     if recv2_s is not None:
-        sc = S.gather_rows(S.flat_rows(recv2_s), gmap, fill=0)
+        sc = S.gather_rows(S.flat_rows(recv2_s), plan.disp_recv_gmap, fill=0)
         out = K.dequantize_fp8(out, sc)
-    return out, counts, (a_pos, ent_valid, gmap)
+    return out, plan.disp_counts
 
 
 def ht_combine_hier(group: EpGroup, handle: EpHandle, y3d: jax.Array):
     """Reverse path with hierarchical reduction: weight at the expert chip,
     partial-sum per token at the stage-2 slot, reduce across pods at the rail,
-    final sum across rails at the source chip."""
+    final sum across rails at the source chip. All maps precomputed; all
+    H-wide work stays in the slot domain (<= L*A rows): materializing
+    per-global-entry rows (No*Ni*T*K of them) costed ~870 GB/layer on the
+    deepseek train cell — slot-domain rewrite is ~200x less traffic
+    (EXPERIMENTS.md §Perf D2)."""
     ax_o, ax_i = group.cfg.ep_axis[0], group.cfg.ep_axis[-1]
-    L, Ni, No = group.local_experts, group.inner_size, group.outer_size
-    C1, C2, A = group.ht_stage1_cap, group.ht_stage2_cap, group.ht_expert_cap
-    me_o, me_i = jax.lax.axis_index(ax_o), jax.lax.axis_index(ax_i)
-    me = me_o * Ni + me_i
-    geo = _hier_geometry(group, handle)
-    No_, Ni_, T, Kk = geo["g"].shape
+    Ni, No = group.inner_size, group.outer_size
+    C1, C2 = group.ht_stage1_cap, group.ht_stage2_cap
+    plan = P.ensure_plan(group, handle)
     H = y3d.shape[-1]
     dt = group.cfg.payload_dtype
 
-    # weights of every entry, globally (gathered topk_weights ride the handle's
-    # metadata path: gather once here — small [N, T, K] f32)
-    w_g = handle.topk_weights
-    for ax in reversed(group.cfg.ep_axis):
-        w_g = jax.lax.all_gather(w_g, ax, axis=0, tiled=False)
-    w_g = w_g.reshape(No, Ni, T, Kk)
-
-    # ---- expert side: weighted scatter-add into [No, C2, H]. All H-wide
-    # work happens in the y3d SLOT domain (<= L*A rows): materializing
-    # per-global-entry rows (No*Ni*T*K of them) costed ~870 GB/layer on the
-    # deepseek train cell — slot-domain rewrite is ~200x less traffic
-    # (EXPERIMENTS.md §Perf D2). Entry->slot maps stay in the int domain.
-    c2, ok2 = _hier_recv_chain(group, geo, me_o, me_i)
-    mine = (geo["g"] // L) == me
-    e_l = (geo["g"] - me * L).clip(0, L - 1)
-    ent_valid = (mine & ok2[..., None]).reshape(-1)
-    a_pos, _ = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
-    slot_of_entry = jnp.where(ent_valid & (a_pos < A),
-                              e_l.reshape(-1) * A + a_pos, L * A)
-    idx2 = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]
-    idx2 = jnp.broadcast_to(idx2, (No, Ni, T, Kk)).reshape(-1)
-    idx2 = jnp.where(ent_valid, idx2, No * C2)
-    # per-slot destination + weight (each y3d slot holds <= 1 entry)
-    slot_tgt = jnp.full((L * A + 1,), No * C2, jnp.int32).at[
-        slot_of_entry].set(idx2.astype(jnp.int32), mode="drop")[:L * A]
-    w_slot = jnp.zeros((L * A + 1,), jnp.float32).at[
-        slot_of_entry].set(w_g.reshape(-1), mode="drop")[:L * A]
-    weighted = S.flat_rows(y3d).astype(jnp.float32) * w_slot[:, None]
+    # ---- expert side: weighted scatter-add into [No, C2, H]
+    weighted = S.flat_rows(y3d).astype(jnp.float32) * plan.h_w_slot[:, None]
     buf2 = jnp.zeros((No * C2 + 1, H), jnp.float32).at[
-        slot_tgt].add(weighted, mode="drop")
+        plan.h_slot_tgt].add(weighted, mode="drop")
     back2 = _a2a(buf2[:-1].reshape(No, C2, H).astype(dt), ax_o)   # -> rails
 
-    # ---- rail: accumulate partials from every pod into its held-slot buffer
-    # (second reduction level), using the same c2 chain per destination pod.
-    held = geo["ok1"][me_o, :, :, me_i]                     # [Ni, T] my rail
-    flat1_rows = jnp.arange(Ni)[:, None] * C1 + geo["pos1"][me_o, :, :, me_i]
-    buf_rail = jnp.zeros((Ni * C1 + 1, H), jnp.float32)
-    for o_p in range(No):   # No is tiny (pods); unrolled scatter-adds
-        needs_p = ((geo["i_dst"][me_o] == me_i) &
-                   (geo["o_dst"][me_o] == o_p)).any(-1)     # [Ni, T]
-        fanned = held & needs_p
-        c2p = jnp.cumsum(fanned.reshape(-1).astype(jnp.int32)) - 1
-        okp = fanned.reshape(-1) & (c2p < C2)
-        dst_rows = jnp.where(okp & (geo["pos1"][me_o, :, :, me_i].reshape(-1) < C1),
-                             flat1_rows.reshape(-1), Ni * C1)
-        src_rows = jnp.where(okp, o_p * C2 + c2p, No * C2)
-        vals = S.gather_rows(S.flat_rows(back2.astype(jnp.float32)), src_rows)
-        buf_rail = buf_rail.at[dst_rows].add(jnp.where(okp[:, None], vals, 0))
+    # ---- rail: one scatter-add accumulates partials from every pod into the
+    # held-slot buffer (second reduction level); sentinel rows no-op via pads.
+    vals = S.gather_rows(S.flat_rows(back2).astype(jnp.float32),
+                         plan.h_rail_src_rows.reshape(-1))
+    buf_rail = jnp.zeros((Ni * C1 + 1, H), jnp.float32).at[
+        plan.h_rail_dst_rows.reshape(-1)].add(vals)
     back1 = _a2a(buf_rail[:-1].reshape(Ni, C1, H).astype(dt), ax_i)  # -> sources
 
     # ---- source chip: sum contributions across rails
-    s1 = geo["sends1"][me_o, me_i]                          # [T, Ni]
-    p1 = geo["pos1"][me_o, me_i]
-    rows = jnp.where(s1 & (p1 < C1), jnp.arange(Ni)[None, :] * C1 + p1, Ni * C1)
-    parts = S.gather_rows(S.flat_rows(back1), rows)         # [T, Ni, H]
+    parts = S.gather_rows(S.flat_rows(back1), plan.h_src_rows)   # [T, Ni, H]
     return jnp.sum(parts.astype(jnp.float32), axis=1).astype(
         jnp.bfloat16 if dt == jnp.bfloat16 else jnp.float32)
 
@@ -381,7 +198,8 @@ def _a2a(x, axis):
     return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
 
 
-def _quant(group: EpGroup, x):
-    if not group.cfg.quantize_dispatch:
-        return x.astype(group.cfg.payload_dtype), None
-    return K.quantize_fp8(x, block=group.cfg.quant_block)
+def _pack(group: EpGroup, x, gmap):
+    """Fused send-path pass: slot gather + optional fp8 quantization."""
+    if group.cfg.quantize_dispatch:
+        return K.dispatch_pack(x, gmap, quant_block=group.cfg.quant_block)
+    return K.dispatch_pack(x, gmap, out_dtype=group.cfg.payload_dtype)

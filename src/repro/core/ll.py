@@ -17,6 +17,15 @@ Two buffer layouts, selected by ``EpGroupConfig.ll_layout``:
   headers; here both sides compute identical slot maps from the handle's
   replicated ``topk_idx``, so the header is zero bytes (see slots.py).
 
+Every slot map is precomputed once at handle creation by the ``EpPlan``
+engine (core/plan.py); the four phase bodies below are single-pass data
+movement over those maps — dispatch-send runs the fused ``dispatch_pack``
+kernel (gather + optional fp8 quantization in one pass, §IV-C(a)) and
+combine-recv runs the fused ``combine_gather_reduce`` kernel (gather through
+the slot rows + top-k weighted reduction with no [T, K, H] materialization,
+§IV-C(c)). This is the one-pass-per-phase invariant tests/test_plan.py
+enforces.
+
 Both layouts support staged execution (``send_only=True`` + ``ll_complete``),
 the JAX rendering of the paper's double-buffered overlap: the returned pending
 buffers let XLA schedule the expert GEMM of one micro-batch against the
@@ -34,23 +43,13 @@ import jax.numpy as jnp
 
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
+from repro.core import plan as P
 from repro.kernels import ops as K
 
 
 def _axis(group: EpGroup):
     a = group.cfg.ep_axis
     return a if len(a) > 1 else a[0]
-
-
-def _my_rank(group: EpGroup) -> jax.Array:
-    a = group.cfg.ep_axis
-    if len(a) == 1:
-        return jax.lax.axis_index(a[0])
-    # row-major over (outer, inner) — must match expert block distribution
-    r = jax.lax.axis_index(a[0])
-    for name in a[1:]:
-        r = r * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    return r
 
 
 def _a2a(x, group):
@@ -62,13 +61,14 @@ def _a2a(x, group):
 # --------------------------------------------------------------------------
 
 def ll_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) -> EpHandle:
-    """All-gather routing metadata; compute per-local-expert counts.
+    """All-gather routing metadata; derive the full slot-map plan.
 
     In the paper LL metadata travels in dispatch headers; gathering it at
-    handle creation is the synchronized-collective equivalent (§IV-D a)."""
+    handle creation is the synchronized-collective equivalent (§IV-D a).
+    The EpPlan computed here is the only place slot arithmetic happens."""
     N, L = group.ep_size, group.local_experts
     T, Kk = topk_idx.shape
-    me = _my_rank(group)
+    me = P.my_rank(group)
     if num_tokens is not None:
         # padded tokens route to sentinel expert E (rank N, OOB everywhere):
         # every rank's slot accounting then agrees without gathering counts.
@@ -81,9 +81,11 @@ def ll_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) ->
     counts = jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
         mine.reshape(-1).astype(jnp.int32))
     nt = jnp.asarray(T, jnp.int32) if num_tokens is None else num_tokens
+    plan = P.build_plan(group, topk_idx, topk_g, nt, topk_weights)
     return EpHandle(
         topk_idx=topk_idx, topk_weights=topk_weights, topk_global=topk_g,
         tokens_per_expert=counts, num_recv_tokens=counts.sum(), num_tokens=nt,
+        plan=plan,
     )
 
 
@@ -102,21 +104,6 @@ class PendingDispatch:
 @dataclasses.dataclass
 class PendingCombine:
     recv: jax.Array                    # [N, C_c, H]
-
-
-# --------------------------------------------------------------------------
-# shared entry geometry
-# --------------------------------------------------------------------------
-
-def _entry_geometry(group: EpGroup, topk_g: jax.Array, me):
-    """Per-entry coordinates used by unpack/combine, derived identically on
-    every rank. Entries are flattened (src-rank-major, then token, then k)."""
-    N, L = group.ep_size, group.local_experts
-    _, T, Kk = topk_g.shape
-    dst_g = topk_g // L                                  # [N, T, K] dest rank
-    mine = dst_g == me
-    e_l = (topk_g - me * L).clip(0, L - 1)
-    return dst_g, mine, e_l
 
 
 # --------------------------------------------------------------------------
@@ -142,10 +129,12 @@ def ll_complete_dispatch(group: EpGroup, handle: EpHandle, pending: PendingDispa
     return _ncclep_dispatch_recv(group, handle, pending)
 
 
-def _quantize(group: EpGroup, x):
-    if not group.cfg.quantize_dispatch:
-        return x.astype(group.cfg.payload_dtype), None
-    return K.quantize_fp8(x, block=group.cfg.quant_block)
+def _pack_send(group: EpGroup, x, gmap):
+    """One fused pass over the send path: gather rows through the plan's slot
+    map and (when configured) quantize to fp8 in the same kernel."""
+    if group.cfg.quantize_dispatch:
+        return K.dispatch_pack(x, gmap, quant_block=group.cfg.quant_block)
+    return K.dispatch_pack(x, gmap, out_dtype=group.cfg.payload_dtype)
 
 
 def _dequant_rows(group: EpGroup, rows, scales):
@@ -157,80 +146,39 @@ def _dequant_rows(group: EpGroup, rows, scales):
 # ---- nccl_ep (memory-optimized) layout ----
 
 def _ncclep_dispatch_send(group, handle, x):
-    N = group.ep_size
-    T, Kk = handle.topk_idx.shape
-    C = group.ll_disp_cap
-    dst = handle.topk_idx // group.local_experts            # [T, K]
-    token_valid = jnp.arange(T) < handle.num_tokens
-    sends = jnp.zeros((T, N), bool).at[
-        jnp.arange(T)[:, None], dst].set(True, mode="drop")
-    sends = sends & token_valid[:, None]                    # [T, N] dedup per rank
-    # slot of token t in the r->d block: running count over t (the "counter")
-    pos = jnp.cumsum(sends.astype(jnp.int32), axis=0) - 1   # [T, N]
-    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, N)).reshape(-1)
-    d_idx = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N)).reshape(-1)
-    gmap = S.build_gather_map(d_idx, pos.reshape(-1), t_idx, sends.reshape(-1),
-                              N, C, sentinel=T)
-    xq, scales = _quantize(group, x)
-    send = S.gather_rows(xq, gmap)                          # [N, C, H]
+    plan = P.ensure_plan(group, handle)
+    send, scales = _pack_send(group, x, plan.disp_send_gmap)   # [N, Cd, ...]
     recv = _a2a(send, group)
-    recv_s = None
-    if scales is not None:
-        recv_s = _a2a(S.gather_rows(scales, gmap), group)
+    recv_s = _a2a(scales, group) if scales is not None else None
     return PendingDispatch(recv=recv, recv_scales=recv_s)
 
 
 def _ncclep_dispatch_recv(group, handle, pending):
-    """Unpack [N, C_d, H] into the 3D expert-major tensor [L, A, H]."""
-    N, L, A, C = group.ep_size, group.local_experts, group.ll_expert_cap, group.ll_disp_cap
-    me = _my_rank(group)
-    topk_g = handle.topk_global
-    _, T, Kk = topk_g.shape
-    dst_g, mine, e_l = _entry_geometry(group, topk_g, me)
-    # slot of token (r,t) in the r->me block (same counter as the sender's)
-    sends_to_me = mine.any(-1)                              # [N, T]
-    pos_to_me = jnp.cumsum(sends_to_me.astype(jnp.int32), axis=1) - 1   # [N, T]
-    slot_valid = sends_to_me & (pos_to_me < C)
-    # recv flat row index of token (r, t)
-    recv_row = jnp.arange(N)[:, None] * C + pos_to_me       # [N, T]
-    # expert-region position of entry (r,t,k): running count per local expert
-    ent_valid = (mine & slot_valid[:, :, None]).reshape(-1)
-    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
-    rows_src = jnp.broadcast_to(recv_row[:, :, None], (N, T, Kk)).reshape(-1)
-    gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows_src, ent_valid,
-                              L, A, sentinel=N * C)
-    out = S.gather_rows(S.flat_rows(pending.recv), gmap)    # [L, A, H]
+    """Unpack [N, C_d, H] into the 3D expert-major tensor [L, A, H]: a single
+    gather over the plan's precomputed expert-region map."""
+    plan = P.ensure_plan(group, handle)
+    out = S.gather_rows(S.flat_rows(pending.recv), plan.disp_recv_gmap)
     if pending.recv_scales is not None:
-        sc = S.gather_rows(S.flat_rows(pending.recv_scales), gmap, fill=0)
+        sc = S.gather_rows(S.flat_rows(pending.recv_scales),
+                           plan.disp_recv_gmap, fill=0)
         out = _dequant_rows(group, out, sc)
-    return out, counts
+    return out, plan.disp_counts
 
 
 # ---- deepep (per-(expert,rank)-slot) layout ----
 
 def _deepep_dispatch_send(group, handle, x):
     """One send per (t, k) entry into slot (dst_rank, e_local*B + t)."""
-    N, L = group.ep_size, group.local_experts
-    T, Kk = handle.topk_idx.shape
-    B = group.cfg.max_tokens_per_rank
-    assert T <= B
-    dst = handle.topk_idx // L
-    e_l = handle.topk_idx % L
-    token_valid = (jnp.arange(T) < handle.num_tokens)
-    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk))
-    slot = e_l * B + t_idx                                   # [T, K]
-    gmap = S.build_gather_map(dst.reshape(-1), slot.reshape(-1), t_idx.reshape(-1),
-                              jnp.broadcast_to(token_valid[:, None], (T, Kk)).reshape(-1),
-                              N, L * B, sentinel=T)
-    xq, scales = _quantize(group, x)
-    send = S.gather_rows(xq, gmap)                           # [N, L*B, H]
+    plan = P.ensure_plan(group, handle)
+    send, scales = _pack_send(group, x, plan.disp_send_gmap)   # [N, L*B, ...]
     recv = _a2a(send, group)
-    recv_s = _a2a(S.gather_rows(scales, gmap), group) if scales is not None else None
+    recv_s = _a2a(scales, group) if scales is not None else None
     return PendingDispatch(recv=recv, recv_scales=recv_s)
 
 
 def _deepep_dispatch_recv(group, handle, pending):
     """[N, L*B, H] -> [L, N*B, H] is a pure transpose (the layout's virtue)."""
+    plan = P.ensure_plan(group, handle)
     N, L = group.ep_size, group.local_experts
     B = group.cfg.max_tokens_per_rank
     H = pending.recv.shape[-1]
@@ -239,11 +187,7 @@ def _deepep_dispatch_recv(group, handle, pending):
         q = pending.recv_scales.shape[-1]
         sc = pending.recv_scales.reshape(N, L, B, q).transpose(1, 0, 2, 3).reshape(L, N * B, q)
         out = _dequant_rows(group, out, sc)
-    me = _my_rank(group)
-    _, mine, e_l = _entry_geometry(group, handle.topk_global, me)
-    counts = jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
-        mine.reshape(-1).astype(jnp.int32))
-    return out, counts
+    return out, plan.disp_counts
 
 
 # --------------------------------------------------------------------------
@@ -268,51 +212,20 @@ def ll_complete_combine(group: EpGroup, handle: EpHandle, pending: PendingCombin
 
 
 def _ncclep_combine_send(group, handle, y3d):
-    """Expert side: pack owned responses compactly per source rank."""
-    N, L, A, Cd = group.ep_size, group.local_experts, group.ll_expert_cap, group.ll_disp_cap
-    Cc = group.ll_comb_cap
-    me = _my_rank(group)
-    topk_g = handle.topk_global
-    _, T, Kk = topk_g.shape
-    dst_g, mine, e_l = _entry_geometry(group, topk_g, me)
-    # recompute the dispatch-side expert-region slot of each owned entry
-    sends_to_me = mine.any(-1)
-    pos_to_me = jnp.cumsum(sends_to_me.astype(jnp.int32), axis=1) - 1
-    slot_valid = sends_to_me & (pos_to_me < Cd)
-    ent_valid = (mine & slot_valid[:, :, None]).reshape(-1)
-    a_pos, _ = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
-    y_row = e_l.reshape(-1) * A + a_pos                      # flat index into y3d
-    # combine slot of entry (r,t,k) within the me->r block: running count
-    # over (t,k) of entries of r owned by me — identical on both sides.
-    r_of = jnp.broadcast_to(jnp.arange(N)[:, None, None], (N, T, Kk)).reshape(-1)
-    c_pos, _ = S.positions_by_dest(r_of, N, ent_valid)
-    gmap = S.build_gather_map(r_of, c_pos, y_row, ent_valid & (a_pos < A),
-                              N, Cc, sentinel=L * A)
-    send = S.gather_rows(S.flat_rows(y3d.astype(group.cfg.payload_dtype)), gmap)
+    """Expert side: pack owned responses compactly per source rank — one
+    fused gather over the plan's combine map."""
+    plan = P.ensure_plan(group, handle)
+    send, _ = K.dispatch_pack(S.flat_rows(y3d), plan.comb_send_gmap,
+                              out_dtype=group.cfg.payload_dtype)
     return PendingCombine(recv=_a2a(send, group))
 
 
 def _ncclep_combine_recv(group, handle, pending):
-    """DP side: slot of MY entry (t,k) in block from owner d equals the same
-    running count the owner used; gather [T,K,H] then weighted-reduce."""
-    N, L, Cc = group.ep_size, group.local_experts, group.ll_comb_cap
-    me = _my_rank(group)
-    topk = handle.topk_idx
-    T, Kk = topk.shape
-    dst = topk // L                                          # [T, K] owner rank
-    # my tokens' dispatch-slot validity (drops propagate to combine)
-    token_valid = jnp.arange(T) < handle.num_tokens
-    sends = jnp.zeros((T, N), bool).at[
-        jnp.arange(T)[:, None], dst].set(True, mode="drop")
-    sends = sends & token_valid[:, None]
-    pos = jnp.cumsum(sends.astype(jnp.int32), axis=0) - 1
-    tok_slot_ok = jnp.take_along_axis(pos, dst, axis=1) < group.ll_disp_cap  # [T, K]
-    ent_valid = (tok_slot_ok & token_valid[:, None]).reshape(-1)
-    c_pos, _ = S.positions_by_dest(dst.reshape(-1), N, ent_valid)
-    row = dst.reshape(-1) * Cc + c_pos
-    row = jnp.where(ent_valid & (c_pos < Cc), row, N * Cc)
-    y_tk = S.gather_rows(S.flat_rows(pending.recv), row.reshape(T, Kk))  # [T,K,H]
-    return K.combine_reduce(y_tk, handle.topk_weights)
+    """DP side: gather each (t, k) response through the plan's slot rows and
+    apply the weighted reduction in one fused pass (no [T, K, H] buffer)."""
+    plan = P.ensure_plan(group, handle)
+    return K.combine_gather_reduce(S.flat_rows(pending.recv),
+                                   plan.comb_recv_rows, handle.topk_weights)
 
 
 def _deepep_combine_send(group, handle, y3d):
@@ -325,14 +238,6 @@ def _deepep_combine_send(group, handle, y3d):
 
 
 def _deepep_combine_recv(group, handle, pending):
-    N, L = group.ep_size, group.local_experts
-    B = group.cfg.max_tokens_per_rank
-    topk = handle.topk_idx
-    T, Kk = topk.shape
-    dst, e_l = topk // L, topk % L
-    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk))
-    row = dst * (L * B) + e_l * B + t_idx                    # [T, K]
-    token_valid = jnp.arange(T)[:, None] < handle.num_tokens
-    row = jnp.where(token_valid, row, N * L * B)
-    y_tk = S.gather_rows(S.flat_rows(pending.recv), row)     # [T, K, H]
-    return K.combine_reduce(y_tk, handle.topk_weights)
+    plan = P.ensure_plan(group, handle)
+    return K.combine_gather_reduce(S.flat_rows(pending.recv),
+                                   plan.comb_recv_rows, handle.topk_weights)

@@ -1,0 +1,406 @@
+"""EpPlan: the precomputed slot-map engine (paper §IV-B/D rendered statically).
+
+The paper's LL mode wins by making slot reservation and packing essentially
+free on the device: GPU-initiated transfers address buffers by (pair, slot)
+with no headers, and both endpoints agree on slots via atomic counters. The
+JAX rendering of that counter arithmetic (``slots.positions_by_dest`` et al.)
+is deterministic, so there is no reason to recompute it inside every
+dispatch/combine call — it depends only on the handle's routing metadata.
+
+``EpPlan`` therefore derives the complete chain of gather maps, slot
+positions, validity masks, and per-expert counts **once, at handle-creation
+time**, for whichever algorithm the group selected (LL ``nccl_ep``/``deepep``
+layouts, HT flat/hierarchical, baseline). Every dispatch/combine phase then
+reduces to a single gather/scatter pass over precomputed int32 maps — the
+**one-pass-per-phase invariant**: no ``positions_by_dest`` (or any other
+slot arithmetic) appears inside a dispatch/combine body, and each payload row
+is touched exactly once per phase. tests/test_plan.py enforces the invariant
+by inspecting the phase implementations.
+
+Map conventions (shared with slots.py): a gather map value equal to the
+source row count is the "empty" sentinel — gathers route it to an appended
+zero pad row; scatters route it to an appended trash row that is sliced off.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import slots as S
+from repro.core.group import EpGroup
+
+
+def my_rank(group: EpGroup) -> jax.Array:
+    """Linear EP rank of the calling shard — row-major over cfg.ep_axis,
+    matching the expert block distribution. Must run inside shard_map."""
+    axes = group.cfg.ep_axis
+    r = jax.lax.axis_index(axes[0])
+    for name in axes[1:]:
+        r = r * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return r
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EpPlan:
+    """Precomputed gather/scatter maps for every phase of the group's mode.
+
+    Fields unused by the active mode/layout are None. All maps are int32
+    except ``h_w_slot`` (f32 combine weights in the y3d slot domain).
+    """
+
+    # -- shared across LL / HT-flat / baseline --
+    disp_send_gmap: jax.Array | None = None   # [N, C] slot -> local token row
+    disp_recv_gmap: jax.Array | None = None   # [L, A] expert slot -> recv row
+    disp_counts: jax.Array | None = None      # [L] capacity-aware recv counts
+    comb_send_gmap: jax.Array | None = None   # [N, Cc] slot -> y3d flat row
+    comb_recv_rows: jax.Array | None = None   # [T, K] entry -> recv flat row
+    # -- HT hierarchical extras --
+    h_gmap1: jax.Array | None = None          # [Ni, C1] stage-1 slot -> token
+    h_gmap2: jax.Array | None = None          # [No, C2] stage-2 slot -> recv1 row
+    h_slot_tgt: jax.Array | None = None       # [L*A] y3d slot -> stage-2 row
+    h_w_slot: jax.Array | None = None         # [L*A] f32 combine weight / slot
+    h_rail_dst_rows: jax.Array | None = None  # [No, Ni*T] rail accumulation dst
+    h_rail_src_rows: jax.Array | None = None  # [No, Ni*T] rail accumulation src
+    h_src_rows: jax.Array | None = None       # [T, Ni] source-chip final gather
+
+
+def build_plan(group: EpGroup, topk_idx: jax.Array, topk_global: jax.Array,
+               num_tokens: jax.Array, topk_weights: jax.Array | None = None) -> EpPlan:
+    """Derive the full slot-map chain for the group's resolved mode. Runs
+    inside the sharded region (uses axis_index); called from handle creation
+    so the maps are computed exactly once per handle."""
+    mode = group.mode
+    if mode == "ll":
+        if group.cfg.ll_layout == "deepep":
+            return _ll_deepep_plan(group, topk_idx, topk_global, num_tokens)
+        return _ll_ncclep_plan(group, topk_idx, topk_global, num_tokens)
+    if mode == "ht":
+        if (group.cfg.ht_hierarchical and len(group.cfg.ep_axis) > 1
+                and group.outer_size > 1):
+            return _ht_hier_plan(group, topk_idx, topk_global, num_tokens,
+                                 topk_weights)
+        return _ht_flat_plan(group, topk_idx, topk_global, num_tokens)
+    return _baseline_plan(group, topk_idx, topk_global, num_tokens)
+
+
+def ensure_plan(group: EpGroup, handle) -> EpPlan:
+    """Return the handle's plan, deriving it on the fly for handles built
+    without one (compat path for hand-constructed EpHandles)."""
+    if handle.plan is not None:
+        return handle.plan
+    return build_plan(group, handle.topk_idx, handle.topk_global,
+                      handle.num_tokens, handle.topk_weights)
+
+
+# --------------------------------------------------------------------------
+# LL layouts (paper §IV)
+# --------------------------------------------------------------------------
+
+def _ll_ncclep_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
+    """Memory-optimized layout (§IV-D): dispatch dedups per destination rank,
+    combine packs responses compactly per (t, k). Four maps, one per phase."""
+    N, L = group.ep_size, group.local_experts
+    Cd, Cc, A = group.ll_disp_cap, group.ll_comb_cap, group.ll_expert_cap
+    me = my_rank(group)
+    T, Kk = topk_idx.shape
+
+    # ---- sender side (local tokens): slot of token t in the me->d block is
+    # the running count of senders to d over t — the "atomic counter".
+    dst = topk_idx // L                                     # [T, K]
+    token_valid = jnp.arange(T) < num_tokens
+    sends = jnp.zeros((T, N), bool).at[
+        jnp.arange(T)[:, None], dst].set(True, mode="drop")
+    sends = sends & token_valid[:, None]                    # [T, N] rank dedup
+    pos = jnp.cumsum(sends.astype(jnp.int32), axis=0) - 1   # [T, N]
+    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, N)).reshape(-1)
+    d_idx = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N)).reshape(-1)
+    disp_send_gmap = S.build_gather_map(d_idx, pos.reshape(-1), t_idx,
+                                        sends.reshape(-1), N, Cd, sentinel=T)
+
+    # ---- receiver side (global entries): mirror the senders' counters.
+    dst_g = topk_g // L                                     # [N, T, K]
+    mine = dst_g == me
+    e_l = (topk_g - me * L).clip(0, L - 1)
+    sends_to_me = mine.any(-1)                              # [N, T]
+    pos_to_me = jnp.cumsum(sends_to_me.astype(jnp.int32), axis=1) - 1
+    slot_valid = sends_to_me & (pos_to_me < Cd)
+    recv_row = jnp.arange(N)[:, None] * Cd + pos_to_me      # [N, T]
+    ent_valid = (mine & slot_valid[:, :, None]).reshape(-1)
+    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
+    rows_src = jnp.broadcast_to(recv_row[:, :, None], (N, T, Kk)).reshape(-1)
+    disp_recv_gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows_src,
+                                        ent_valid, L, A, sentinel=N * Cd)
+
+    # ---- combine send (expert side): same a_pos chain, packed per src rank.
+    y_row = e_l.reshape(-1) * A + a_pos                     # flat row into y3d
+    r_of = np.broadcast_to(np.arange(N, dtype=np.int32)[:, None, None],
+                           (N, T, Kk)).reshape(-1)
+    c_pos, _ = S.positions_by_dest(r_of, N, ent_valid)
+    comb_send_gmap = S.build_gather_map(r_of, c_pos, y_row,
+                                        ent_valid & (a_pos < A), N, Cc,
+                                        sentinel=L * A)
+
+    # ---- combine recv (source side): my entry (t, k) sits at the same
+    # running count its owner used; dispatch drops propagate.
+    tok_slot_ok = jnp.take_along_axis(pos, dst.clip(0, N - 1), axis=1) < Cd
+    ent_valid2 = (tok_slot_ok & token_valid[:, None]).reshape(-1)
+    c_pos2, _ = S.positions_by_dest(dst.reshape(-1), N, ent_valid2)
+    row = jnp.where(ent_valid2 & (c_pos2 < Cc),
+                    dst.reshape(-1).clip(0, N - 1) * Cc + c_pos2, N * Cc)
+    return EpPlan(
+        disp_send_gmap=disp_send_gmap, disp_recv_gmap=disp_recv_gmap,
+        disp_counts=counts, comb_send_gmap=comb_send_gmap,
+        comb_recv_rows=row.reshape(T, Kk).astype(jnp.int32),
+    )
+
+
+def _ll_deepep_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
+    """Per-(expert, src-rank)-slot layout: slot ids are positional (e_l*B + t)
+    so recv/combine-send are pure transposes — only the send gather map and
+    the combine source rows need precomputing."""
+    N, L = group.ep_size, group.local_experts
+    B = group.cfg.max_tokens_per_rank
+    me = my_rank(group)
+    T, Kk = topk_idx.shape
+    assert T <= B
+    dst = topk_idx // L
+    e_l = topk_idx % L
+    token_valid = jnp.arange(T) < num_tokens
+    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk))
+    slot = e_l * B + t_idx                                   # [T, K]
+    disp_send_gmap = S.build_gather_map(
+        dst.reshape(-1), slot.reshape(-1), t_idx.reshape(-1),
+        jnp.broadcast_to(token_valid[:, None], (T, Kk)).reshape(-1),
+        N, L * B, sentinel=T)
+    row = dst * (L * B) + e_l * B + t_idx                    # [T, K]
+    row = jnp.where(token_valid[:, None], row, N * L * B)
+    mine = (topk_g // L) == me
+    e_lg = (topk_g - me * L).clip(0, L - 1)
+    counts = jnp.zeros((L,), jnp.int32).at[e_lg.reshape(-1)].add(
+        mine.reshape(-1).astype(jnp.int32))
+    return EpPlan(disp_send_gmap=disp_send_gmap, disp_counts=counts,
+                  comb_recv_rows=row.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# HT flat path (paper §V, single EP axis)
+# --------------------------------------------------------------------------
+
+def _ht_flat_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
+    """Entry-level all-to-all: every (t, k) is its own slot; combine mirrors
+    dispatch slots exactly (the deterministic Fig. 4 layout)."""
+    N, L = group.ep_size, group.local_experts
+    C, A = group.ht_pair_cap, group.ht_expert_cap
+    me = my_rank(group)
+    T, Kk = topk_idx.shape
+
+    # ---- sender side
+    dst = (topk_idx // L).reshape(-1)                       # [T*K]
+    valid = jnp.broadcast_to((jnp.arange(T) < num_tokens)[:, None],
+                             (T, Kk)).reshape(-1)
+    c_pos, _ = S.positions_by_dest(dst, N, valid)
+    t_of = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk)).reshape(-1)
+    disp_send_gmap = S.build_gather_map(dst, c_pos, t_of, valid, N, C, sentinel=T)
+
+    # ---- receiver side: reconstruct every sender's counter restricted to me
+    mine = (topk_g // L) == me                              # [N, T, K]
+    e_l = (topk_g - me * L).clip(0, L - 1)
+    flat_mine = mine.reshape(N, T * Kk)
+    pos_r = jnp.cumsum(flat_mine.astype(jnp.int32), axis=1) - 1
+    slot_ok = flat_mine & (pos_r < C)
+    rows = jnp.arange(N)[:, None] * C + pos_r               # recv flat row
+    ent_valid = slot_ok.reshape(-1)
+    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
+    disp_recv_gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows.reshape(-1),
+                                        ent_valid, L, A, sentinel=N * C)
+
+    # ---- combine send: y3d rows back into the mirrored [N, C] blocks
+    y_row = e_l.reshape(-1) * A + a_pos
+    r_of = np.broadcast_to(np.arange(N, dtype=np.int32)[:, None, None],
+                           (N, T, Kk)).reshape(-1)
+    comb_send_gmap = S.build_gather_map(r_of, pos_r.reshape(-1), y_row,
+                                        ent_valid & (a_pos < A), N, C,
+                                        sentinel=L * A)
+
+    # ---- combine recv: my own dispatch slots
+    row = jnp.where(valid & (c_pos < C), dst.clip(0, N - 1) * C + c_pos, N * C)
+    return EpPlan(
+        disp_send_gmap=disp_send_gmap, disp_recv_gmap=disp_recv_gmap,
+        disp_counts=counts, comb_send_gmap=comb_send_gmap,
+        comb_recv_rows=row.reshape(T, Kk).astype(jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# HT hierarchical path (paper §V / Hybrid-EP two-tier scheme)
+# --------------------------------------------------------------------------
+
+def _hier_geometry(group: EpGroup, topk_g: jax.Array):
+    """Global stage-1 maps, computed identically on every chip."""
+    L, Ni, No = group.local_experts, group.inner_size, group.outer_size
+    C1 = group.ht_stage1_cap
+    N, T, Kk = topk_g.shape
+    g = topk_g.reshape(No, Ni, T, Kk)
+    r_dst = g // L
+    o_dst, i_dst = r_dst // Ni, r_dst % Ni                  # [No, Ni, T, K]
+    # stage 1 (per source chip): dedup over destination inner coordinate.
+    # Invalid entries (sentinel expert) have r_dst == N -> i_dst computed from
+    # it could alias a real coordinate, so mask by dst validity explicitly.
+    ent_ok = r_dst < (No * Ni)
+    i_dst_s = jnp.where(ent_ok, i_dst, Ni)                  # sentinel -> dropped
+    sends1 = jnp.zeros((No, Ni, T, Ni), bool).at[
+        jnp.arange(No)[:, None, None, None],
+        jnp.arange(Ni)[None, :, None, None],
+        jnp.arange(T)[None, None, :, None],
+        i_dst_s].set(True, mode="drop")
+    pos1 = jnp.cumsum(sends1.astype(jnp.int32), axis=2) - 1  # over tokens
+    ok1 = sends1 & (pos1 < C1)
+    o_dst = jnp.where(ent_ok, o_dst, No)
+    i_dst = jnp.where(ent_ok, i_dst, Ni)
+    return dict(g=g, o_dst=o_dst, i_dst=i_dst, sends1=sends1, pos1=pos1, ok1=ok1)
+
+
+def _hier_recv_chain(group, geo, me_o, me_i):
+    """For every (o_s, r_i, t): the stage-2 slot c2 (at source pod o_s's rail
+    with inner coord me_i, sending to pod me_o) and validity."""
+    Ni, No = group.inner_size, group.outer_size
+    C2 = group.ht_stage2_cap
+    No_, Ni_, T, Kk = geo["g"].shape
+    held = geo["ok1"][:, :, :, me_i]                        # [No, Ni, T]
+    needs_me = ((geo["i_dst"] == me_i) & (geo["o_dst"] == me_o)).any(-1)
+    fanned = held & needs_me
+    # c2 = running count in (r_i, t) order per source pod (matches the rail's
+    # flat (r_i*C1+pos1) order because pos1 is monotone in t)
+    c2 = jnp.cumsum(fanned.reshape(No, Ni * T).astype(jnp.int32), axis=1) - 1
+    c2 = c2.reshape(No, Ni, T)
+    ok2 = fanned & (c2 < C2)
+    return c2, ok2
+
+
+def _ht_hier_plan(group, topk_idx, topk_g, num_tokens, topk_weights) -> EpPlan:
+    """Two-stage scheme: every map of the dispatch chain (stage-1 dedup,
+    stage-2 fan-out, destination unpack) plus the mirror combine chain with
+    hierarchical reduction (slot-domain weighting, rail partial sums, source
+    final sum) — all derived once from the replicated routing."""
+    ax_o, ax_i = group.cfg.ep_axis[0], group.cfg.ep_axis[-1]
+    L, Ni, No = group.local_experts, group.inner_size, group.outer_size
+    C1, C2, A = group.ht_stage1_cap, group.ht_stage2_cap, group.ht_expert_cap
+    me_o, me_i = jax.lax.axis_index(ax_o), jax.lax.axis_index(ax_i)
+    me = me_o * Ni + me_i
+    T, Kk = topk_idx.shape
+    geo = _hier_geometry(group, topk_g)
+
+    # ---- stage-1 send map (local chip's view)
+    s1 = geo["sends1"][me_o, me_i]                          # [T, Ni]
+    p1 = geo["pos1"][me_o, me_i]
+    t_of = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Ni)).reshape(-1)
+    i_of = jnp.broadcast_to(jnp.arange(Ni)[None, :], (T, Ni)).reshape(-1)
+    h_gmap1 = S.build_gather_map(i_of, p1.reshape(-1), t_of, s1.reshape(-1),
+                                 Ni, C1, sentinel=T)
+
+    # ---- stage-2 fan map: rail (me_o, me_i) fans held tokens over dest pods
+    need = (geo["i_dst"][me_o] == me_i)                     # [Ni, T, K]
+    fan = jnp.zeros((Ni, T, No), bool).at[
+        jnp.arange(Ni)[:, None, None], jnp.arange(T)[None, :, None],
+        jnp.where(need, geo["o_dst"][me_o], No)].set(True, mode="drop")
+    ok1_me = geo["ok1"][me_o, :, :, me_i]                   # [Ni, T] held?
+    fan = fan & ok1_me[..., None]
+    o_bcast = np.broadcast_to(np.arange(No, dtype=np.int32)[None, None, :],
+                              (Ni, T, No)).reshape(-1)
+    pos2, _ = S.positions_by_dest(o_bcast, No, fan.reshape(-1))
+    row1 = jnp.arange(Ni)[:, None] * C1 + geo["pos1"][me_o, :, :, me_i]  # [Ni, T]
+    h_gmap2 = S.build_gather_map(
+        o_bcast, pos2,
+        jnp.broadcast_to(row1[..., None], (Ni, T, No)).reshape(-1),
+        fan.reshape(-1), No, C2, sentinel=Ni * C1)
+
+    # ---- destination unpack map
+    c2, ok2 = _hier_recv_chain(group, geo, me_o, me_i)
+    mine = (geo["g"] // L) == me                            # [No, Ni, T, K]
+    e_l = (geo["g"] - me * L).clip(0, L - 1)
+    ent_valid = (mine & ok2[..., None]).reshape(-1)
+    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
+    rows = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]  # [No, Ni, T, 1]
+    rows = jnp.broadcast_to(rows, (No, Ni, T, Kk)).reshape(-1)
+    disp_recv_gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows, ent_valid,
+                                        L, A, sentinel=No * C2)
+
+    # ---- combine, expert side: per-y3d-slot weight + stage-2 target. All
+    # H-wide combine work stays in the slot domain (<= L*A rows; see ht.py).
+    w_g = topk_weights
+    for ax in reversed(group.cfg.ep_axis):
+        w_g = jax.lax.all_gather(w_g, ax, axis=0, tiled=False)
+    w_g = w_g.reshape(No, Ni, T, Kk)
+    slot_of_entry = jnp.where(ent_valid & (a_pos < A),
+                              e_l.reshape(-1) * A + a_pos, L * A)
+    idx2 = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]
+    idx2 = jnp.broadcast_to(idx2, (No, Ni, T, Kk)).reshape(-1)
+    idx2 = jnp.where(ent_valid, idx2, No * C2)
+    h_slot_tgt = jnp.full((L * A + 1,), No * C2, jnp.int32).at[
+        slot_of_entry].set(idx2.astype(jnp.int32), mode="drop")[:L * A]
+    h_w_slot = jnp.zeros((L * A + 1,), jnp.float32).at[
+        slot_of_entry].set(w_g.reshape(-1), mode="drop")[:L * A]
+
+    # ---- combine, rail side: accumulate partials from every pod into the
+    # held-slot buffer. Same c2 chain per destination pod, vectorized over o_p
+    # (a single scatter-add replaces the seed's unrolled per-pod loop).
+    held = geo["ok1"][me_o, :, :, me_i]                     # [Ni, T] my rail
+    p1i = geo["pos1"][me_o, :, :, me_i]                     # [Ni, T]
+    flat1_rows = jnp.arange(Ni)[:, None] * C1 + p1i
+    needs = ((geo["i_dst"][me_o] == me_i)[None] &
+             (geo["o_dst"][me_o][None] ==
+              jnp.arange(No)[:, None, None, None])).any(-1)  # [No, Ni, T]
+    fanned = held[None] & needs
+    c2p = jnp.cumsum(fanned.reshape(No, Ni * T).astype(jnp.int32), axis=1) - 1
+    okp = fanned.reshape(No, Ni * T) & (c2p < C2)
+    h_rail_dst_rows = jnp.where(
+        okp & (p1i.reshape(-1)[None] < C1),
+        jnp.broadcast_to(flat1_rows.reshape(-1)[None], (No, Ni * T)), Ni * C1)
+    h_rail_src_rows = jnp.where(
+        okp, jnp.arange(No)[:, None] * C2 + c2p, No * C2)
+
+    # ---- combine, source side: sum contributions across rails
+    h_src_rows = jnp.where(s1 & (p1 < C1),
+                           jnp.arange(Ni)[None, :] * C1 + p1, Ni * C1)  # [T, Ni]
+    return EpPlan(
+        disp_recv_gmap=disp_recv_gmap, disp_counts=counts,
+        h_gmap1=h_gmap1, h_gmap2=h_gmap2,
+        h_slot_tgt=h_slot_tgt, h_w_slot=h_w_slot,
+        h_rail_dst_rows=h_rail_dst_rows.astype(jnp.int32),
+        h_rail_src_rows=h_rail_src_rows.astype(jnp.int32),
+        h_src_rows=h_src_rows.astype(jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# baseline (Megatron AllToAll dispatcher, paper §I)
+# --------------------------------------------------------------------------
+
+def _baseline_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
+    """Per-(expert, src) capacity blocks; dispatch permute and combine
+    unpermute share the same position chain."""
+    from repro.core.baseline import _per_expert_cap
+    N, L = group.ep_size, group.local_experts
+    T, Kk = topk_idx.shape
+    Ce = _per_expert_cap(group)
+    dst = topk_idx // L                                     # [T, K]
+    e_l = topk_idx % L
+    valid = topk_idx < group.cfg.num_experts
+    block = jnp.where(valid, dst * L + e_l, N * L).reshape(-1)
+    pos, _ = S.positions_by_dest(block, N * L, valid.reshape(-1))
+    t_of = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk)).reshape(-1)
+    gmap = S.build_gather_map(block, pos, t_of, valid.reshape(-1),
+                              N * L, Ce, sentinel=T)
+    row = jnp.where(valid.reshape(-1) & (pos < Ce),
+                    block.clip(0, N * L - 1) * Ce + pos, N * L * Ce)
+    me = my_rank(group)
+    mine = (topk_g // L) == me
+    el_g = (topk_g - me * L).clip(0, L - 1)
+    counts = jnp.zeros((L,), jnp.int32).at[el_g.reshape(-1)].add(
+        mine.reshape(-1).astype(jnp.int32))
+    return EpPlan(disp_send_gmap=gmap.reshape(N, L * Ce), disp_counts=counts,
+                  comb_recv_rows=row.reshape(T, Kk).astype(jnp.int32))

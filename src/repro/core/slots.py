@@ -8,8 +8,12 @@ metadata: an exclusive cumulative count over a fixed entry order plays the
 role of the atomic counter. Both endpoints of every transfer derive identical
 (pair, slot) coordinates, so messages need no headers at all.
 
-All functions are static-shape and O(M·D) via one-hot cumsum (M = entries,
-D = destinations) — fine for the M ≤ ~1e6 sizes EP metadata has.
+``positions_by_dest`` is the core of that counter arithmetic. It is
+O(M log M) via a stable sort by destination plus segment-relative ranks —
+the one-hot-cumsum O(M·D) formulation it replaced survives as the oracle in
+``repro.kernels.ref.positions_by_dest`` and the two are bitwise identical
+(tests/test_plan.py asserts so, including invalid and out-of-range entries).
+All functions remain static-shape.
 """
 from __future__ import annotations
 
@@ -23,14 +27,35 @@ def positions_by_dest(dest: jax.Array, num_dest: int, valid: jax.Array):
     destination's block (exclusive running count over the fixed entry order),
     plus per-destination totals.
 
-    Returns (pos [M] int32, counts [num_dest] int32). Invalid entries get an
-    arbitrary position but must be masked by the caller.
+    Returns (pos [M] int32, counts [num_dest] int32). For every entry m,
+    ``pos[m]`` equals the number of valid in-range entries j < m with
+    ``dest[j] == clip(dest[m])`` — which for a valid entry is its reserved
+    slot, and for an invalid/out-of-range entry is an arbitrary-but-
+    deterministic value the caller must mask (same contract as the one-hot
+    oracle, bit for bit).
+
+    Sort-based O(M log M): stable-argsort by clipped destination groups
+    entries per destination while preserving entry order; an exclusive
+    cumsum of validity minus each segment's base count yields the
+    within-destination rank; a scatter restores entry order.
     """
-    oh = jax.nn.one_hot(dest, num_dest, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
-    incl = jnp.cumsum(oh, axis=0)
-    pos = jnp.take_along_axis(incl - oh, dest[:, None].clip(0, num_dest - 1), axis=1)[:, 0]
-    counts = incl[-1] if dest.shape[0] > 0 else jnp.zeros((num_dest,), jnp.int32)
-    return pos.astype(jnp.int32), counts.astype(jnp.int32)
+    dest = jnp.asarray(dest)
+    M = dest.shape[0]
+    if M == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((num_dest,), jnp.int32)
+    d_clip = dest.clip(0, num_dest - 1).astype(jnp.int32)
+    eff = (valid & (dest >= 0) & (dest < num_dest)).astype(jnp.int32)
+    order = jnp.argsort(d_clip, stable=True)
+    d_s = d_clip[order]
+    v_s = eff[order]
+    excl = jnp.cumsum(v_s) - v_s                  # valid-before count, sorted order
+    is_start = jnp.concatenate([jnp.ones((1,), bool), d_s[1:] != d_s[:-1]])
+    # segment base = excl at the segment's first element; excl is monotone so a
+    # running max of (start ? excl : 0) carries each segment's base forward.
+    base = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, excl, 0))
+    pos = jnp.zeros((M,), jnp.int32).at[order].set((excl - base).astype(jnp.int32))
+    counts = jnp.zeros((num_dest,), jnp.int32).at[d_clip].add(eff)
+    return pos, counts
 
 
 def build_gather_map(

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused slot-gather + K-way weighted combine reduction.
+
+Paper §IV-C(c) combine/recv: responses for token t sit at precomputed slots
+of the receive buffer; a TMA warp stages the K rows and reduction warps apply
+the gate-weighted sum. The TPU rendering: the slot rows (the EpPlan's
+``comb_recv_rows`` — the counter arithmetic's output) are scalar-prefetched
+into SMEM and drive the input BlockSpec index_map, so each grid step DMAs
+exactly the receive-buffer row the (t, k) entry needs, multiplies by the gate
+weight on the VPU, and accumulates into a VMEM fp32 scratch tile; the k
+innermost grid dimension revisits the same output tile, which pallas keeps
+resident. Sentinel rows (== R) hit a guaranteed-zero pad row, keeping the
+index_map branch-free — a dropped entry contributes exactly zero.
+
+This replaces the seed's two-pass gather-then-reduce, which materialized the
+full [T, K, H] response tensor in HBM between the passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, y_ref, w_ref, o_ref, acc_ref, *, K):
+    # y_ref: [1, bh] the gathered recv row for entry (t, k); w_ref: [1, K]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += (y_ref[...].astype(jnp.float32)
+                     * w_ref[0, k].astype(jnp.float32))
+
+    @pl.when(k == K - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def combine_gather_reduce(recv: jax.Array, rows: jax.Array, w: jax.Array, *,
+                          bh: int = 512, interpret: bool = False) -> jax.Array:
+    """recv: [R, H] flat received rows; rows: [T, K] int32 slot rows with
+    sentinel == R meaning "no contribution"; w: [T, K] gate weights.
+    Returns [T, H] = sum_k w[t,k] * recv[rows[t,k]] in fp32 accumulation.
+
+    Grid (T, H/bh, K): hidden in lane-aligned bh-wide blocks, K innermost so
+    the output tile stays VMEM-resident across the reduction."""
+    R, H = recv.shape
+    T, K = rows.shape
+    bh = min(bh, H)
+    while H % bh != 0:        # largest lane-aligned tile dividing H
+        bh -= 128
+    assert bh > 0 and H % bh == 0, (H, bh)
+    # pad row R is zeros => sentinel entries contribute zero
+    recv_p = jnp.concatenate([recv, jnp.zeros((1, H), recv.dtype)], axis=0)
+    out_dt = (recv.dtype if recv.dtype in (jnp.bfloat16, jnp.float32, jnp.float16)
+              else jnp.bfloat16)
+    kern = functools.partial(_kernel, K=K)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((T, H), out_dt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(T, H // bh, K),
+            in_specs=[
+                pl.BlockSpec((1, bh), lambda t, j, k, rows_ref: (rows_ref[t * K + k], j)),
+                pl.BlockSpec((1, K), lambda t, j, k, rows_ref: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bh), lambda t, j, k, rows_ref: (t, j)),
+            scratch_shapes=[pltpu.VMEM((1, bh), jnp.float32)],
+        ),
+        interpret=interpret,
+    )(rows.reshape(-1), recv_p, w)

@@ -40,12 +40,15 @@ def _kernel_copy(gmap_ref, x_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("quant_block", "out_dtype", "interpret"))
 def dispatch_pack(x: jax.Array, gmap: jax.Array, *, quant_block: int | None = None,
-                  out_dtype=jnp.bfloat16, interpret: bool = False):
+                  out_dtype=None, interpret: bool = False):
     """x: [T, H]; gmap: [N, C] int32 (sentinel == T -> empty slot).
 
     Returns packed [N, C, H] (+ scales [N, C, H//quant_block] if quantizing).
+    ``out_dtype`` (copy mode) casts the packed payload; None keeps x.dtype.
     """
     T, H = x.shape
+    if out_dtype is None:
+        out_dtype = x.dtype
     N, C = gmap.shape
     # pad row T is zeros => sentinel slots come out zero
     xp = jnp.concatenate([x, jnp.zeros((1, H), x.dtype)], axis=0)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernels: block-wise FP8(e4m3) quantize / dequantize.
+
+Paper §IV-B: dispatch payloads travel as fp8 token data plus one 4-byte scale
+per 128 elements, computed in-kernel. Standalone quantize/dequantize passes
+are still needed off the fused-pack path (dequantization of received rows,
+re-quantization of expert outputs), and previously always fell back to the
+pure-jnp oracle; these kernels close that gap. The grid walks (row-block,
+hidden-block) tiles with the hidden block a multiple of the quant block, so
+each invocation computes whole scale groups on the VPU: amax over each
+``block``-wide group, scale = amax/448 (e4m3 max normal), payload = value /
+scale. Zero groups get unit scale, matching the oracle bit for bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, block):
+    x = x_ref[...].astype(jnp.float32)                  # [bm, bh]
+    bm, bh = x.shape
+    g = x.reshape(bm, bh // block, block)
+    amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 448.0, 1.0)
+    q_ref[...] = (g / scale).reshape(bm, bh).astype(q_ref.dtype)
+    s_ref[...] = scale[..., 0].astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, block):
+    q = q_ref[...].astype(jnp.float32)                  # [bm, bh]
+    bm, bh = q.shape
+    g = q.reshape(bm, bh // block, block)
+    o_ref[...] = (g * s_ref[...][..., None]).reshape(bm, bh).astype(o_ref.dtype)
+
+
+def _pick_bh(H: int, block: int, bh: int | None) -> int:
+    """Largest whole-scale-group tile <= the requested bh that divides H
+    (callers guarantee H % block == 0, so bh == block always works)."""
+    bh = min(bh or max(block, 512), H)
+    bh = (bh // block) * block
+    while H % bh != 0:
+        bh -= block
+    return bh
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bm", "bh", "interpret"))
+def quantize_fp8(x: jax.Array, block: int = 128, *, bm: int = 8,
+                 bh: int | None = None, interpret: bool = False):
+    """x: [M, H] with H % block == 0 and M % bm == 0 ->
+    (q [M, H] f8e4m3, scales [M, H/block] f32)."""
+    M, H = x.shape
+    bh = _pick_bh(H, block, bh)
+    bm = min(bm, M)
+    assert M % bm == 0 and H % bh == 0 and bh % block == 0, (M, H, bm, bh, block)
+    kern = functools.partial(_quant_kernel, block=block)
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((M, H), jnp.float8_e4m3fn),
+            jax.ShapeDtypeStruct((M, H // block), jnp.float32),
+        ),
+        grid=(M // bm, H // bh),
+        in_specs=[pl.BlockSpec((bm, bh), lambda i, j: (i, j))],
+        out_specs=(
+            pl.BlockSpec((bm, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bh // block), lambda i, j: (i, j)),
+        ),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "bm", "bh", "interpret"))
+def dequantize_fp8(q: jax.Array, scales: jax.Array, out_dtype=jnp.bfloat16, *,
+                   bm: int = 8, bh: int | None = None, interpret: bool = False):
+    """Inverse of quantize_fp8. q: [M, H], scales: [M, H/block] -> [M, H]."""
+    M, H = q.shape
+    block = H // scales.shape[-1]
+    bh = _pick_bh(H, block, bh)
+    bm = min(bm, M)
+    assert M % bm == 0 and H % bh == 0 and bh % block == 0, (M, H, bm, bh, block)
+    kern = functools.partial(_dequant_kernel, block=block)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((M, H), out_dtype),
+        grid=(M // bm, H // bh),
+        in_specs=[
+            pl.BlockSpec((bm, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bh // block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bh), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(q, scales)

@@ -4,9 +4,14 @@ Backend selection: on TPU the Pallas kernels run compiled; elsewhere the
 pure-jnp oracles from ref.py are used (bitwise-identical semantics — the test
 suite asserts so under interpret mode). `REPRO_FORCE_PALLAS=interpret` forces
 interpret-mode Pallas everywhere (slow; used by kernel tests and debugging).
+
+Every EP hot-path op is fused single-pass on TPU: dispatch_pack (slot gather
++ fp8 quant), combine_gather_reduce (slot gather + K-way weighted reduce),
+combine_reduce, quantize/dequantize_fp8, grouped_gemm, flash attention.
 """
 from __future__ import annotations
 
+import math
 import os
 
 import jax
@@ -14,7 +19,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels import combine_reduce as _cr
+from repro.kernels import combine_gather_reduce as _cgr
 from repro.kernels import dispatch_pack as _dp
+from repro.kernels import fp8 as _fp8
 from repro.kernels import grouped_gemm as _gg
 
 
@@ -37,19 +44,52 @@ def combine_reduce(y: jax.Array, w: jax.Array) -> jax.Array:
     return _ref.combine_reduce(y, w)
 
 
+def combine_gather_reduce(recv: jax.Array, rows: jax.Array, w: jax.Array) -> jax.Array:
+    """Fused gather-through-slot-rows + weighted top-k reduction.
+
+    recv: [R, H] flat received rows; rows: [T, K] int32 (sentinel == R);
+    w: [T, K] -> [T, H]. One pass; no [T, K, H] materialization on TPU."""
+    use, interp = _use_pallas()
+    H = recv.shape[-1]
+    if use and H % 128 == 0:
+        return _cgr.combine_gather_reduce(recv, rows, w, interpret=interp)
+    return _ref.combine_gather_reduce(recv, rows, w)
+
+
 def quantize_fp8(x: jax.Array, block: int = 128):
+    use, interp = _use_pallas()
+    H = x.shape[-1]
+    M = math.prod(x.shape[:-1])
+    if use and H % block == 0 and block % 128 == 0 and M > 0 and M % 8 == 0:
+        q, s = _fp8.quantize_fp8(x.reshape(M, H), block, interpret=interp)
+        return q.reshape(x.shape), s.reshape(x.shape[:-1] + (H // block,))
     return _ref.quantize_fp8(x, block)
 
 
 def dequantize_fp8(q: jax.Array, scales: jax.Array, out_dtype=jnp.bfloat16):
+    use, interp = _use_pallas()
+    H = q.shape[-1]
+    M = math.prod(q.shape[:-1])
+    block = H // scales.shape[-1] if scales.shape[-1] else 0
+    if (use and block and H % block == 0 and block % 128 == 0
+            and M > 0 and M % 8 == 0):
+        out = _fp8.dequantize_fp8(q.reshape(M, H), scales.reshape(M, H // block),
+                                  out_dtype, interpret=interp)
+        return out.reshape(q.shape)
     return _ref.dequantize_fp8(q, scales, out_dtype)
 
 
-def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None):
+def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None,
+                  out_dtype=None):
+    """Fused slot-pack (+ optional fp8 quantization) over a [N, C] slot map.
+
+    ``out_dtype`` (copy mode only) casts the packed payload; None keeps
+    x.dtype. Quantizing always yields (f8e4m3 payload, f32 scales)."""
     use, interp = _use_pallas()
     if use and x.shape[-1] % 128 == 0:
-        return _dp.dispatch_pack(x, gmap, quant_block=quant_block, interpret=interp)
-    return _ref.dispatch_pack(x, gmap, quant_block)
+        return _dp.dispatch_pack(x, gmap, quant_block=quant_block,
+                                 out_dtype=out_dtype, interpret=interp)
+    return _ref.dispatch_pack(x, gmap, quant_block, out_dtype)
 
 
 def flash_attention_bshd(q, k, v, *, scale, window=None, causal=True):

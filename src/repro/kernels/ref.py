@@ -4,11 +4,29 @@ These are the semantics of record: each Pallas kernel's test sweeps shapes and
 dtypes and asserts allclose against the function of the same name here. They
 are also the production path on non-TPU backends (interpret-mode Pallas is
 orders of magnitude slower on CPU; XLA fuses these fine there).
+
+``positions_by_dest`` is the one exception to the "Pallas oracle" rule: it is
+the O(M·D) one-hot-cumsum oracle for the sort-based O(M log M) production
+implementation in ``repro.core.slots`` (bitwise-identical by contract).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def positions_by_dest(dest: jax.Array, num_dest: int, valid: jax.Array):
+    """One-hot-cumsum slot-position oracle (the seed implementation).
+
+    O(M·D) — kept as the semantics of record for
+    ``repro.core.slots.positions_by_dest``; tests assert the sort-based
+    production version matches this bit for bit on every entry, including
+    invalid and out-of-range destinations."""
+    oh = jax.nn.one_hot(dest, num_dest, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
+    incl = jnp.cumsum(oh, axis=0)
+    pos = jnp.take_along_axis(incl - oh, dest[:, None].clip(0, num_dest - 1), axis=1)[:, 0]
+    counts = incl[-1] if dest.shape[0] > 0 else jnp.zeros((num_dest,), jnp.int32)
+    return pos.astype(jnp.int32), counts.astype(jnp.int32)
 
 
 def combine_reduce(y: jax.Array, w: jax.Array) -> jax.Array:
@@ -20,6 +38,18 @@ def combine_reduce(y: jax.Array, w: jax.Array) -> jax.Array:
     acc = jnp.einsum("tkh,tk->th", y.astype(jnp.float32), w.astype(jnp.float32))
     out_dt = y.dtype if y.dtype in (jnp.bfloat16, jnp.float32, jnp.float16) else jnp.bfloat16
     return acc.astype(out_dt)
+
+
+def combine_gather_reduce(recv: jax.Array, rows: jax.Array, w: jax.Array) -> jax.Array:
+    """Fused gather + weighted K-way reduction — combine/recv without the
+    [T, K, H] materialization.
+
+    recv: [R, H] flat received rows; rows: [T, K] int32 with sentinel == R
+    meaning "no contribution"; w: [T, K] gate weights. Returns [T, H] =
+    sum_k w[t,k] * recv[rows[t,k]] (sentinel rows contribute zero)."""
+    pad = jnp.zeros((1, recv.shape[-1]), recv.dtype)
+    y = jnp.concatenate([recv, pad], axis=0)[rows]          # [T, K, H]
+    return combine_reduce(y, w)
 
 
 def quantize_fp8(x: jax.Array, block: int = 128):
@@ -45,12 +75,14 @@ def dequantize_fp8(q: jax.Array, scales: jax.Array, out_dtype=jnp.bfloat16):
     return out.reshape(q.shape).astype(out_dtype)
 
 
-def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None):
+def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None,
+                  out_dtype=None):
     """Fused slot-pack (+ optional quantization) — paper §IV-C(a) Send Tokens.
 
     x: [T, H] tokens; gmap: [N, C] int32 slot->token map with sentinel == T
     meaning empty. Returns packed [N, C, H] (and scales [N, C, H/qb] if
-    quantizing). Empty slots are zero."""
+    quantizing). Empty slots are zero. ``out_dtype`` (copy mode only) casts
+    the packed payload; None keeps x.dtype."""
     T, H = x.shape
     if quant_block is not None:
         xq, sc = quantize_fp8(x, quant_block)
@@ -59,7 +91,10 @@ def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None)
         sp = jnp.concatenate([sc, jnp.ones((1, sc.shape[-1]), sc.dtype)], 0)
         return xp[gmap], sp[gmap]
     xp = jnp.concatenate([x, jnp.zeros((1, H), x.dtype)], 0)
-    return xp[gmap], None
+    out = xp[gmap]
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return out, None
 
 
 def grouped_gemm(x: jax.Array, w: jax.Array, counts: jax.Array) -> jax.Array:

@@ -5,8 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
                         ep_dispatch, ep_combine, EpTensor, EpTensorTag,

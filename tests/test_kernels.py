@@ -10,7 +10,10 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.combine_reduce import combine_reduce as cr_pallas
+from repro.kernels.combine_gather_reduce import combine_gather_reduce as cgr_pallas
 from repro.kernels.dispatch_pack import dispatch_pack as dp_pallas
+from repro.kernels.fp8 import quantize_fp8 as qfp8_pallas
+from repro.kernels.fp8 import dequantize_fp8 as dqfp8_pallas
 from repro.kernels.grouped_gemm import grouped_gemm as gg_pallas
 
 
@@ -92,6 +95,64 @@ def test_grouped_gemm_count_masking():
     assert np.all(got[0, 100:] == 0) and np.all(got[1] == 0)
     want = np.einsum("ah,hf->af", np.asarray(x[0]), np.asarray(w[0]))[:100]
     np.testing.assert_allclose(got[0, :100], want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("R,T,K,H", [(32, 8, 2, 128), (16, 8, 4, 256), (64, 4, 1, 128),
+                                     (16, 4, 2, 640)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_combine_gather_reduce(R, T, K, H, dt):
+    """Fused gather+reduce vs the two-pass oracle, sentinel rows included."""
+    rng = np.random.RandomState(7)
+    recv = jnp.asarray(rng.randn(R, H), dt)
+    rows = jnp.asarray(rng.randint(0, R + 1, (T, K)), jnp.int32)  # R == sentinel
+    w = jax.nn.softmax(jnp.asarray(rng.randn(T, K), jnp.float32), -1)
+    got = cgr_pallas(recv, rows, w, interpret=True)
+    want = ref.combine_gather_reduce(recv, rows, w)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dt))
+
+
+def test_combine_gather_reduce_all_sentinel():
+    recv = jnp.asarray(np.random.RandomState(8).randn(8, 128), jnp.float32)
+    rows = jnp.full((4, 2), 8, jnp.int32)
+    w = jnp.ones((4, 2), jnp.float32)
+    got = np.asarray(cgr_pallas(recv, rows, w, interpret=True))
+    assert np.all(got == 0)
+
+
+@pytest.mark.parametrize("M,H,block", [(8, 256, 128), (16, 512, 128), (8, 128, 128),
+                                       (8, 640, 128)])
+def test_fp8_quantize_pallas_matches_ref(M, H, block):
+    rng = np.random.RandomState(9)
+    x = jnp.asarray(rng.randn(M, H) * 4, jnp.float32)
+    q, s = qfp8_pallas(x, block, interpret=True)
+    qr, sr = ref.quantize_fp8(x, block)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6, atol=0)
+    got = ref.dequantize_fp8(q, s, jnp.float32)
+    want = ref.dequantize_fp8(qr, sr, jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("M,H,block", [(8, 256, 128), (16, 128, 128)])
+def test_fp8_dequantize_pallas_matches_ref(M, H, block):
+    rng = np.random.RandomState(10)
+    x = jnp.asarray(rng.randn(M, H) * 4, jnp.float32)
+    q, s = ref.quantize_fp8(x, block)
+    got = dqfp8_pallas(q, s, jnp.float32, interpret=True)
+    want = ref.dequantize_fp8(q, s, jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_quantize_zero_rows_unit_scale():
+    """Zero groups must quantize with unit scale in both implementations."""
+    x = jnp.zeros((8, 256), jnp.float32)
+    q, s = qfp8_pallas(x, 128, interpret=True)
+    qr, sr = ref.quantize_fp8(x, 128)
+    np.testing.assert_array_equal(np.asarray(s), np.ones((8, 2), np.float32))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
 
 
 def test_quantize_roundtrip_accuracy():

@@ -1,0 +1,256 @@
+"""EpPlan slot-map engine: sort-based positions_by_dest vs the one-hot
+oracle (bitwise), the one-pass-per-phase invariant, and plan-driven
+dispatch/combine round-trips under padding and capacity drops.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.group import EpGroupConfig, ep_create_group
+from repro.core import ll, ht, baseline, plan as plan_mod
+from repro.core import slots as S
+from repro.kernels import ref
+
+
+# --------------------------------------------------------------------------
+# sort-based engine == one-hot oracle, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("M,D", [(1, 1), (7, 3), (64, 8), (257, 16), (1024, 64)])
+def test_positions_by_dest_bitwise_matches_onehot(seed, M, D):
+    rng = np.random.RandomState(seed)
+    # include out-of-range destinations on both sides and invalid entries —
+    # the contract covers them all, bit for bit
+    dest = jnp.asarray(rng.randint(-2, D + 3, M), jnp.int32)
+    valid = jnp.asarray(rng.rand(M) < 0.7)
+    p_sort, c_sort = S.positions_by_dest(dest, D, valid)
+    p_ref, c_ref = ref.positions_by_dest(dest, D, valid)
+    np.testing.assert_array_equal(np.asarray(p_sort), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(c_sort), np.asarray(c_ref))
+    assert p_sort.dtype == p_ref.dtype and c_sort.dtype == c_ref.dtype
+
+
+def test_positions_by_dest_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 200), st.integers(1, 12), st.integers(0, 2**31 - 1))
+    def prop(M, D, seed):
+        rng = np.random.RandomState(seed)
+        dest = jnp.asarray(rng.randint(-1, D + 2, M), jnp.int32)
+        valid = jnp.asarray(rng.rand(M) < 0.6)
+        p_s, c_s = S.positions_by_dest(dest, D, valid)
+        p_r, c_r = ref.positions_by_dest(dest, D, valid)
+        assert np.array_equal(np.asarray(p_s), np.asarray(p_r))
+        assert np.array_equal(np.asarray(c_s), np.asarray(c_r))
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# one-pass-per-phase invariant: no slot arithmetic in phase bodies
+# --------------------------------------------------------------------------
+
+PHASE_FNS = [
+    ll._ncclep_dispatch_send, ll._ncclep_dispatch_recv,
+    ll._ncclep_combine_send, ll._ncclep_combine_recv,
+    ll._deepep_dispatch_send, ll._deepep_dispatch_recv,
+    ll._deepep_combine_send, ll._deepep_combine_recv,
+    ht.ht_dispatch_flat, ht.ht_combine_flat,
+    ht.ht_dispatch_hier, ht.ht_combine_hier,
+    baseline.baseline_dispatch, baseline.baseline_combine,
+]
+
+
+@pytest.mark.parametrize("fn", PHASE_FNS, ids=lambda f: f.__name__)
+def test_no_slot_arithmetic_in_phase_bodies(fn):
+    """Slot maps are computed exactly once per handle (in plan.build_plan);
+    dispatch/combine bodies must be pure data movement over plan fields."""
+    src = inspect.getsource(fn)
+    for banned in ("positions_by_dest", "cumsum", "argsort", "build_gather_map"):
+        assert banned not in src, (fn.__name__, banned)
+
+
+def test_plan_built_once_at_handle_creation():
+    """Handles carry a populated EpPlan; ensure_plan returns it untouched."""
+    N = 8
+    cfg = EpGroupConfig(num_experts=16, max_tokens_per_rank=8, hidden=32,
+                        top_k=4, mode="ll", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    topk = jnp.asarray(rng.randint(0, 16, (N, 8, 4)), jnp.int32)
+    w = jnp.ones((N, 8, 4), jnp.float32)
+
+    def step(topk, w):
+        h = ll.ll_create_handle(group, topk[0], w[0])
+        assert h.plan is not None and h.plan.disp_send_gmap is not None
+        assert plan_mod.ensure_plan(group, h) is h.plan
+        return h.plan.disp_send_gmap[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 2,
+                              out_specs=P("data")))
+    gmap = np.asarray(f(topk, w))
+    assert gmap.shape == (N, N, group.ll_disp_cap)
+
+
+# --------------------------------------------------------------------------
+# plan-driven round-trips: padding and capacity drops, all modes/layouts
+# --------------------------------------------------------------------------
+
+def oracle(x, topk, w):
+    scale = (w * (1.0 + topk)).sum(-1)
+    return x * scale[..., None]
+
+
+def run_ep(cfg, x, topk, w, nt=None, module="ll"):
+    N = x.shape[0]
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    group = ep_create_group(cfg, ep_size=N)
+    mod = {"ll": ll, "ht": ht}[module]
+    create = {"ll": ll.ll_create_handle, "ht": ht.ht_create_handle}[module]
+    disp = {"ll": ll.ll_dispatch, "ht": ht.ht_dispatch}[module]
+    comb = {"ll": ll.ll_combine, "ht": ht.ht_combine}[module]
+
+    def step(x, topk, w, nt):
+        x, topk, w = x[0], topk[0], w[0]
+        n = nt[0] if nt is not None else None
+        h = create(group, topk, w, num_tokens=n)
+        y3d, counts = disp(group, h, x)
+        me = jax.lax.axis_index("data")
+        L = group.local_experts
+        e_glob = me * L + jnp.arange(L)
+        y3d = y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+        out = comb(group, h, y3d)
+        return out[None], counts[None]
+
+    if nt is None:
+        f = jax.jit(jax.shard_map(lambda x, t, w: step(x, t, w, None),
+                                  mesh=mesh, in_specs=(P("data"),) * 3,
+                                  out_specs=(P("data"), P("data"))))
+        return f(x, topk, w)
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 4,
+                              out_specs=(P("data"), P("data"))))
+    return f(x, topk, w, nt)
+
+
+def rand_inputs(rng, N, T, K, E, H):
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk = jnp.asarray(
+        np.stack([np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+                  for _ in range(N)]), jnp.int32)
+    w = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    return x, topk, w
+
+
+@pytest.mark.parametrize("module,layout", [("ll", "nccl_ep"), ("ll", "deepep"),
+                                           ("ht", "nccl_ep")])
+def test_plan_roundtrip_with_padded_tokens(module, layout):
+    """num_tokens < T: padded rows must contribute nothing and real rows must
+    match the dense oracle exactly — exercises the sentinel-expert chain
+    through every precomputed map."""
+    N, E, K, T, H = 8, 16, 4, 16, 32
+    rng = np.random.RandomState(7)
+    x, topk, w = rand_inputs(rng, N, T, K, E, H)
+    nt = jnp.asarray(rng.randint(1, T + 1, (N,)), jnp.int32)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode=module, ll_layout=layout, payload_dtype=jnp.float32)
+    out, counts = run_ep(cfg, x, topk, w, nt=nt, module=module)
+    ref_out = np.asarray(oracle(x, topk, w))
+    got = np.asarray(out)
+    for r in range(N):
+        n = int(nt[r])
+        np.testing.assert_allclose(got[r, :n], ref_out[r, :n], rtol=2e-5, atol=2e-5)
+    # conservation counts only the valid entries
+    assert int(counts.sum()) == int(nt.sum()) * K
+
+
+def test_plan_roundtrip_capacity_drop():
+    """cf < zero-drop: dropped entries zero their contribution but never
+    corrupt surviving tokens (LL nccl_ep — the layout with both caps)."""
+    N, E, K, T, H = 8, 16, 4, 32, 16
+    rng = np.random.RandomState(8)
+    x, topk, w = rand_inputs(rng, N, T, K, E, H)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode="ll", capacity_factor=1.0, payload_dtype=jnp.float32)
+    out, _ = run_ep(cfg, x, topk, w, module="ll")
+    ref_out = np.asarray(oracle(x, topk, w))
+    got = np.asarray(out)
+    per_err = np.abs(got - ref_out).max(-1)
+    assert (per_err < 1e-4).mean() > 0.5       # most tokens survive at cf=1.0
+    assert np.all(np.abs(got).max(-1) <= np.abs(ref_out).max(-1) * (1.0 + K) + 1e-4)
+
+
+def test_plan_gmaps_match_oracle_construction():
+    """The plan's LL nccl_ep dispatch-send map must equal the map built from
+    the one-hot oracle's positions — the end-to-end bitwise check that the
+    sort-based engine slots entries identically."""
+    N = 8
+    T, K, E = 16, 4, 16
+    L = E // N
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=32,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(3)
+    topk = jnp.asarray(
+        np.stack([np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+                  for _ in range(N)]), jnp.int32)
+    w = jnp.ones((N, T, K), jnp.float32)
+
+    def step(topk, w):
+        h = ll.ll_create_handle(group, topk[0], w[0])
+        return h.plan.disp_send_gmap[None], h.plan.comb_recv_rows[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 2,
+                              out_specs=(P("data"), P("data"))))
+    gmaps, rows = map(np.asarray, f(topk, w))
+
+    Cd, Cc = group.ll_disp_cap, group.ll_comb_cap
+    for r in range(N):
+        # reconstruct with the one-hot oracle in numpy
+        dst = np.asarray(topk[r]) // L                      # [T, K]
+        sends = np.zeros((T, N), bool)
+        for t in range(T):
+            for k in range(K):
+                sends[t, dst[t, k]] = True
+        pos = np.cumsum(sends, 0) - 1
+        want = np.full((N, Cd), T, np.int32)
+        for t in range(T):
+            for d in range(N):
+                if sends[t, d] and pos[t, d] < Cd:
+                    want[d, pos[t, d]] = t
+        np.testing.assert_array_equal(gmaps[r], want)
+        # combine rows: running count per destination over (t, k) order
+        cnt = np.zeros(N, np.int64)
+        for t in range(T):
+            for k in range(K):
+                d = dst[t, k]
+                assert rows[r, t, k] == d * Cc + cnt[d]
+                cnt[d] += 1
+
+
+def test_ht_flat_staged_counts_query():
+    """disp_counts rides the plan; the paper's GetNumRecvTokens query and the
+    per-expert counts must agree with the routing histogram."""
+    N, E, K, T, H = 8, 16, 4, 16, 32
+    rng = np.random.RandomState(5)
+    x, topk, w = rand_inputs(rng, N, T, K, E, H)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+                        mode="ht", payload_dtype=jnp.float32)
+    out, counts = run_ep(cfg, x, topk, w, module="ht")
+    hist = np.zeros(E)
+    for r in range(N):
+        for t in range(T):
+            for k in range(K):
+                hist[int(topk[r, t, k])] += 1
+    np.testing.assert_array_equal(np.asarray(counts).reshape(-1), hist)

@@ -19,6 +19,8 @@ def test_gate_reports_cpu_unsupported():
 
 
 def test_ragged_traces_and_lowers():
+    if not hasattr(jax.lax, "ragged_all_to_all"):
+        pytest.skip("jax.lax.ragged_all_to_all not in this JAX version")
     N, E, K, T, H = 8, 16, 4, 8, 32
     mesh = jax.make_mesh((8,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
