@@ -10,8 +10,14 @@ bounds the 64-rank full-hidden point) with the paper's layouts head-to-head:
 
 Outputs per point: host wall-time (relative), per-rank wire bytes from the
 group's buffer accounting, and the v5e ICI-bound projection bytes/(link bw).
+
+Also tracks the recv-side unpack op latency in isolation (fp8 payloads at
+LL sizes) next to the seed's two-pass formulation — a host-regression guard
+for the fused ``recv_unpack`` entry point; see ``bench_recv_unpack`` for
+why host parity (not a host speedup) is the expected result.
 """
-from benchmarks.common import ensure_devices, timeit, write_result, table, ICI_BW
+from benchmarks.common import (ensure_devices, interleaved_best, timeit,
+                               write_result, table, ICI_BW)
 
 ensure_devices(32)
 
@@ -73,6 +79,46 @@ def wire_bytes(group, phase: str) -> int:
     return int(group.ll_combine_buffer_bytes() * frac)
 
 
+def bench_recv_unpack():
+    """Recv-unpack op latency at LL recv-buffer sizes (fp8 payloads), the
+    tracked trajectory row for the fused kernel's entry point, next to the
+    seed's two-pass formulation (gather -> separate dequant) on identical
+    inputs.
+
+    On this host both compile to the same fused XLA graph, so
+    ``host_ratio`` (two_pass/fused) is EXPECTED to be ~1.0 — it guards
+    against a host-path regression from routing recv through the new op,
+    nothing more. The kernel's actual win is TPU-only: the scalar-prefetch
+    index map DMAs each receive row exactly once with no gathered-fp8 HBM
+    materialization between passes, which no CPU timing can exhibit."""
+    from repro.core import slots as S
+    from repro.kernels import ref
+
+    rng = np.random.RandomState(1)
+    rows = []
+    for R, M in ((1024, 2048), (4096, 8192)):
+        gmap = jnp.asarray(rng.randint(0, R + 1, (M,)), jnp.int32)
+        x = jnp.asarray(rng.randn(R, H_HOST) * 3, jnp.float32)
+        q, s = ref.quantize_fp8(x, 128)
+
+        def two_pass(q, s, gmap):
+            out = S.gather_rows(q, gmap)
+            sc = S.gather_rows(s, gmap, fill=0)
+            return ref.dequantize_fp8(out, sc)
+
+        def fused(q, s, gmap):
+            return ref.recv_unpack(q, gmap, s)
+
+        t2, t1 = interleaved_best([jax.jit(two_pass), jax.jit(fused)],
+                                  [(q, s, gmap)] * 2, iters=8)
+        rows.append(dict(
+            rows=R, slots=M, payload="fp8+scales",
+            two_pass_ms=round(t2 * 1e3, 3), fused_ms=round(t1 * 1e3, 3),
+            host_ratio=round(t2 / t1, 2) if t1 > 0 else float("inf"),
+        ))
+    return rows
+
+
 def main():
     rng = np.random.RandomState(0)
     rows = []
@@ -113,8 +159,14 @@ def main():
                  "host_combine_phase_ms", "dispatch_MB_per_rank",
                  "combine_MB_per_rank", "v5e_dispatch_us", "v5e_combine_us"],
           "Figs 7-8 analogue: LL dispatch/combine vs ranks (E=256,K=8,B=128)")
+    ru_rows = bench_recv_unpack()
+    table(ru_rows, ["rows", "slots", "payload", "two_pass_ms", "fused_ms",
+                    "host_ratio"],
+          "recv unpack op latency (host_ratio ~1.0 expected: XLA fuses both;"
+          " the kernel's win is TPU DMA scheduling)")
     write_result("ll_kernels", dict(config=dict(E=E, K=K, B=B, H_host=H_HOST,
-                                                H_paper=H_PAPER), rows=rows))
+                                                H_paper=H_PAPER), rows=rows,
+                                    recv_unpack=ru_rows))
     return rows
 
 

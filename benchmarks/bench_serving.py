@@ -16,14 +16,16 @@ from repro.configs import get_smoke              # noqa: E402
 from repro.runtime.server import DecodeServer    # noqa: E402
 
 
-def bench_backend(mode: str, ll_layout: str = "nccl_ep"):
+def bench_backend(mode: str, ll_layout: str = "nccl_ep",
+                  pipeline_depth: int = 1):
     cfg = get_smoke("dbrx-132b")
     moe = dataclasses.replace(cfg.moe, ep_mode=mode, ll_layout=ll_layout,
                               ep_axis=("data",))
     cfg = dataclasses.replace(cfg, moe=moe)
     mesh = jax.make_mesh((8,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
-    srv = DecodeServer(cfg, batch=16, max_len=64, mesh=mesh)
+    srv = DecodeServer(cfg, batch=16, max_len=64, mesh=mesh,
+                       pipeline_depth=pipeline_depth)
     prompts = jnp.asarray(np.random.RandomState(0).randint(
         0, cfg.vocab, (16, 8)), jnp.int32)
     m = srv.serve(prompts, gen_steps=24)
@@ -32,10 +34,12 @@ def bench_backend(mode: str, ll_layout: str = "nccl_ep"):
 
 def main():
     rows = []
-    for name, mode, layout in [("nccl_ep (LL)", "ll", "nccl_ep"),
-                               ("deepep-layout (LL)", "ll", "deepep"),
-                               ("alltoall baseline", "baseline", "nccl_ep")]:
-        m = bench_backend(mode, layout)
+    for name, mode, layout, depth in [
+            ("nccl_ep (LL)", "ll", "nccl_ep", 1),
+            ("nccl_ep (LL, pipelined x2)", "ll", "nccl_ep", 2),
+            ("deepep-layout (LL)", "ll", "deepep", 1),
+            ("alltoall baseline", "baseline", "nccl_ep", 1)]:
+        m = bench_backend(mode, layout, depth)
         rows.append(dict(backend=name,
                          output_tok_s=round(m.output_tok_s, 1),
                          ttft_ms=round(m.ttft_s * 1e3, 1),

@@ -4,10 +4,12 @@ metadata actually sees (M = tokens*top_k*ranks scales into the hundreds of
 thousands on the training cells).
 
 No devices needed — this is pure local compute; both variants are jitted and
-timed on identical inputs. Acceptance gate for PR 1: sort beats one-hot for
-M >= 64k (it loses nothing at small M where both are microseconds).
+timed on identical inputs (interleaved, min-estimated — see
+``common.interleaved_best`` — so a host load burst cannot flip the tracked
+comparison). Acceptance gate for PR 1: sort beats one-hot for M >= 64k (it
+loses nothing at small M where both are microseconds).
 """
-from benchmarks.common import timeit, write_result, table
+from benchmarks.common import interleaved_best, write_result, table
 
 import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
@@ -33,8 +35,8 @@ def main():
         po, co = f_onehot(dest, valid)
         assert np.array_equal(np.asarray(ps), np.asarray(po))
         assert np.array_equal(np.asarray(cs), np.asarray(co))
-        t_sort = timeit(f_sort, dest, valid, warmup=2, iters=5)
-        t_onehot = timeit(f_onehot, dest, valid, warmup=2, iters=5)
+        t_onehot, t_sort = interleaved_best(
+            [f_onehot, f_sort], [(dest, valid)] * 2, iters=7)
         rows.append(dict(
             M=M, D=NUM_DEST,
             onehot_ms=round(t_onehot * 1e3, 3),

@@ -36,6 +36,26 @@ def timeit(fn, *args, warmup=1, iters=2):
     return (time.perf_counter() - t0) / iters
 
 
+def interleaved_best(fns, args, iters=5):
+    """Best (min) per-fn wall time over ``iters`` rounds, visiting every fn
+    each round. For A-vs-B comparisons on a shared host: interleaving
+    spreads load drift over all variants and the min is the noise-free
+    estimate (a background burst can only inflate a timing, never deflate
+    it) — back-to-back ``timeit`` calls can flip a comparison's sign when a
+    burst lands on one of them. ``args``: one argument tuple per fn."""
+    import numpy as np
+    import jax
+    for f, a in zip(fns, args):
+        jax.block_until_ready(f(*a))                     # compile + warm
+    times = [[] for _ in fns]
+    for _ in range(iters):
+        for i, (f, a) in enumerate(zip(fns, args)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*a))
+            times[i].append(time.perf_counter() - t0)
+    return [float(np.min(t)) for t in times]
+
+
 def write_result(name: str, payload: dict):
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))

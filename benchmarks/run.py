@@ -3,17 +3,21 @@
   PYTHONPATH=src python -m benchmarks.run [--only name]
 
   memory    — Eq. 3 buffer-footprint reduction (deepep vs nccl_ep layouts)
-  ll        — Figs 7-8 LL dispatch/combine vs rank count (per-phase timings)
+  ll        — Figs 7-8 LL dispatch/combine vs rank count (per-phase timings
+              + recv-unpack two-pass-vs-fused microbenchmark)
   slotmap   — one-hot vs sort-based positions_by_dest microbenchmark
+  decode    — decode-pipeline steady state: naive vs double-buffered +
+              handle refresh vs create (routing-hash fast path)
   modes     — Table III LL/HT/baseline crossover by batch size
   serving   — Table VII end-to-end serving metrics by EP backend
 
 Each sub-benchmark needs its own fake-device count, so they run as separate
 processes; results land in results/benchmarks/*.json. After the ll and
 slotmap benchmarks run, their results are folded into ``BENCH_ll_kernels.json``
-at the repo root — the machine-readable perf trajectory (handle-create /
-dispatch / combine phase times + slot-map engine comparison) tracked across
-PRs.
+at the repo root — the machine-readable perf trajectory (schema
+bench_ll_kernels/v2: handle-create / dispatch / combine phase times,
+recv-unpack kernel timings, slot-map engine comparison, and the
+decode-pipeline steady-state rows) tracked across PRs.
 """
 import argparse
 import json
@@ -21,11 +25,12 @@ import pathlib
 import subprocess
 import sys
 
-BENCHES = ["memory", "ll", "slotmap", "modes", "serving"]
+BENCHES = ["memory", "ll", "slotmap", "decode", "modes", "serving"]
 MODULES = {
     "memory": "benchmarks.bench_memory",
     "ll": "benchmarks.bench_ll_kernels",
     "slotmap": "benchmarks.bench_slotmap",
+    "decode": "benchmarks.bench_decode_pipeline",
     "modes": "benchmarks.bench_modes",
     "serving": "benchmarks.bench_serving",
 }
@@ -35,30 +40,41 @@ RESULTS = ROOT / "results" / "benchmarks"
 
 
 def emit_bench_ll_kernels() -> bool:
-    """Fold ll (per-phase) + slotmap results into BENCH_ll_kernels.json at the
-    repo root, if both source files exist. Each source's mtime is recorded so
-    mixed-provenance results (e.g. `--only ll` next to a week-old slotmap run)
-    are visible in the emitted file. Returns True when written."""
+    """Fold ll (per-phase + recv-unpack), slotmap, and decode-pipeline
+    results into BENCH_ll_kernels.json at the repo root, if the ll and
+    slotmap source files exist (decode is folded when present). Each
+    source's mtime is recorded so mixed-provenance results (e.g. `--only ll`
+    next to a week-old slotmap run) are visible in the emitted file.
+    Returns True when written."""
     import datetime
 
     src_ll = RESULTS / "ll_kernels.json"
     src_sm = RESULTS / "slotmap.json"
+    src_dp = RESULTS / "decode_pipeline.json"
     if not (src_ll.exists() and src_sm.exists()):
         return False
     ll = json.loads(src_ll.read_text())
     sm = json.loads(src_sm.read_text())
+    dp = json.loads(src_dp.read_text()) if src_dp.exists() else None
 
     def stamp(p):
         return datetime.datetime.fromtimestamp(p.stat().st_mtime).isoformat(
             timespec="seconds")
 
+    sources = {"ll_kernels": stamp(src_ll), "slotmap": stamp(src_sm)}
+    if dp is not None:
+        sources["decode_pipeline"] = stamp(src_dp)
     payload = {
-        "schema": "bench_ll_kernels/v1",
-        "sources": {"ll_kernels": stamp(src_ll), "slotmap": stamp(src_sm)},
+        "schema": "bench_ll_kernels/v2",
+        "sources": sources,
         "config": ll.get("config", {}),
         "phases": ll.get("rows", []),       # handle/dispatch/combine per layout
+        "recv_unpack": ll.get("recv_unpack", []),  # two-pass vs fused unpack
         "slotmap": {"config": sm.get("config", {}), "rows": sm.get("rows", [])},
     }
+    if dp is not None:
+        # steady-state decode: naive vs pipelined + handle create vs refresh
+        payload["decode_pipeline"] = dp
     (ROOT / "BENCH_ll_kernels.json").write_text(json.dumps(payload, indent=1))
     print(f"wrote {ROOT / 'BENCH_ll_kernels.json'}")
     return True

@@ -38,12 +38,13 @@ from repro.core.group import (EpGroup, EpGroupConfig, EpHandle, ep_create_group,
 from repro.core import ll as _ll
 from repro.core import ht as _ht
 from repro.core import baseline as _bl
+from repro.core import plan as _plan
 from repro.core.tensor import EpTensor, EpTensorTag, validate
 
 __all__ = [
     "EpGroup", "EpGroupConfig", "EpHandle", "ep_create_group",
-    "ep_create_handle", "ep_dispatch", "ep_combine", "ep_complete",
-    "ep_handle_get_num_recv_tokens", "ep_handle_destroy",
+    "ep_create_handle", "ep_handle_refresh", "ep_dispatch", "ep_combine",
+    "ep_complete", "ep_handle_get_num_recv_tokens", "ep_handle_destroy",
     "ep_dispatch_tensors", "ep_combine_tensors",
 ]
 
@@ -61,6 +62,23 @@ def ep_create_handle(group: EpGroup, topk_idx: jax.Array,
     if mode == "ht":
         return _ht.ht_create_handle(group, topk_idx, topk_weights, num_tokens)
     return _bl.baseline_create_handle(group, topk_idx, topk_weights, num_tokens)
+
+
+def ep_handle_refresh(group: EpGroup, handle: EpHandle,
+                      topk_weights: jax.Array,
+                      topk_idx: jax.Array | None = None,
+                      num_tokens=None) -> EpHandle:
+    """``ncclEpHandleRefresh``-style steady-state path: rebind per-step
+    routing state into an existing handle without rebuilding slot maps.
+
+    ``topk_idx=None`` (or passing the handle's own array) rebinds weights
+    only — every precomputed map is reused verbatim. With a new ``topk_idx``
+    the routing-hash fast path decides at runtime: unchanged routing
+    (speculative-decode replay, cached dispatch in backward) skips plan
+    construction entirely; changed routing rebuilds like ``ep_create_handle``.
+    Mode-agnostic — works for LL, HT, and baseline handles alike."""
+    return _plan.refresh_handle(group, handle, topk_weights, topk_idx,
+                                num_tokens)
 
 
 def ep_dispatch(group: EpGroup, handle: EpHandle, tokens: jax.Array, *,

@@ -188,6 +188,13 @@ class EpHandle:
     the full chain of gather maps and counts for every dispatch/combine phase,
     derived exactly once at handle creation so the phases themselves are pure
     gather/scatter passes (the one-pass-per-phase invariant).
+
+    ``routing_hash`` is the [2]-uint32 checksum of ``topk_global`` (the
+    gathered routing — every slot map depends on every rank's choices) that
+    powers ``ep_handle_refresh``'s fast path: an unchanged-routing refresh
+    compares hashes at runtime and reuses every precomputed map verbatim
+    instead of rebuilding the plan (speculative-decode replay, cached
+    dispatch).
     """
 
     topk_idx: jax.Array          # [T, K] local routing (this rank's tokens)
@@ -199,6 +206,9 @@ class EpHandle:
     num_tokens: jax.Array        # [] int32
     # precomputed slot maps for all phases (None only for hand-built handles)
     plan: "object | None" = None
+    # [2]-uint32 checksum of topk_global for the refresh fast path
+    # (None: hand-built handle)
+    routing_hash: "jax.Array | None" = None
 
 
 def ep_handle_get_num_recv_tokens(handle: EpHandle) -> jax.Array:

@@ -25,7 +25,11 @@ once, in the ``EpPlan`` engine (core/plan.py) at handle creation — so payload
 messages carry zero header bytes (see slots.py) and every dispatch/combine
 phase below is a single gather/scatter pass over precomputed int32 maps (the
 one-pass-per-phase invariant). Send paths run the fused ``dispatch_pack``
-kernel; flat combine-recv runs the fused ``combine_gather_reduce`` kernel.
+kernel; every dispatch-recv unpack (flat recv, both hierarchical stages)
+runs its mirror ``recv_unpack`` through the shared ``core.recv.unpack_recv``
+helper — gather + in-kernel fp8 dequantization, never a gather followed by a
+separate dequant pass; flat combine-recv runs the fused
+``combine_gather_reduce`` kernel.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ import jax.numpy as jnp
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
 from repro.core import plan as P
+from repro.core.recv import unpack_recv
 from repro.kernels import ops as K
 
 
@@ -48,27 +53,14 @@ def ht_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) ->
     ``ep_handle_get_num_recv_tokens`` query for precise buffer consumption.
     The full slot-map plan (flat, hierarchical, or baseline — whichever the
     group resolved) is derived here, once."""
-    N, L = group.ep_size, group.local_experts
-    T, Kk = topk_idx.shape
-    me = P.my_rank(group)
-    if num_tokens is not None:
-        pad = jnp.arange(T)[:, None] >= num_tokens
-        topk_idx = jnp.where(pad, group.cfg.num_experts, topk_idx)
-    axes = group.cfg.ep_axis
-    g = topk_idx
-    for ax in reversed(axes):
-        g = jax.lax.all_gather(g, ax, axis=0, tiled=False)
-    topk_g = g.reshape(N, T, Kk)
-    mine = (topk_g // L) == me
-    e_l = (topk_g - me * L).clip(0, L - 1)
-    counts = jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
-        mine.reshape(-1).astype(jnp.int32))
-    nt = jnp.asarray(T, jnp.int32) if num_tokens is None else num_tokens
+    topk_idx, nt = P.mask_padding(group, topk_idx, num_tokens)
+    topk_g = P.gather_routing(group, topk_idx)
+    counts = P.recv_counts(group, topk_g)
     plan = P.build_plan(group, topk_idx, topk_g, nt, topk_weights)
     return EpHandle(
         topk_idx=topk_idx, topk_weights=topk_weights, topk_global=topk_g,
         tokens_per_expert=counts, num_recv_tokens=counts.sum(), num_tokens=nt,
-        plan=plan,
+        plan=plan, routing_hash=P.routing_hash(topk_g),
     )
 
 
@@ -90,11 +82,8 @@ def ht_dispatch_flat(group: EpGroup, handle: EpHandle, x: jax.Array):
     send, scales = _pack(group, x, plan.disp_send_gmap)      # [N, C, ...]
     recv = _a2a(send, _flat_axis(group))
     recv_s = _a2a(scales, _flat_axis(group)) if scales is not None else None
-    # receiver: single gather into the deterministic [L, A, H] layout
-    out = S.gather_rows(S.flat_rows(recv), plan.disp_recv_gmap)
-    if recv_s is not None:
-        sc = S.gather_rows(S.flat_rows(recv_s), plan.disp_recv_gmap, fill=0)
-        out = K.dequantize_fp8(out, sc)
+    # receiver: one fused unpack pass into the deterministic [L, A, H] layout
+    out = unpack_recv(recv, plan.disp_recv_gmap, recv_s)
     return out, plan.disp_counts
 
 
@@ -123,19 +112,16 @@ def ht_dispatch_hier(group: EpGroup, handle: EpHandle, x: jax.Array):
     recv1 = _a2a(send1, ax_i)
     recv1_s = _a2a(scales1, ax_i) if scales1 is not None else None
 
-    # ---- stage 2: rail fans held rows over destination pods (pure gather)
-    send2 = S.gather_rows(S.flat_rows(recv1), plan.h_gmap2)
+    # ---- stage 2: rail fans held rows over destination pods — a copy-mode
+    # unpack (payload stays quantized across the slow hop; scales ride along)
+    send2 = unpack_recv(recv1, plan.h_gmap2)
     recv2 = _a2a(send2, ax_o)                                # [No, C2, H]
     recv2_s = None
     if recv1_s is not None:
-        recv2_s = _a2a(S.gather_rows(S.flat_rows(recv1_s), plan.h_gmap2, fill=0),
-                       ax_o)
+        recv2_s = _a2a(unpack_recv(recv1_s, plan.h_gmap2), ax_o)
 
-    # ---- unpack at destination chip: single gather via the plan's map
-    out = S.gather_rows(S.flat_rows(recv2), plan.disp_recv_gmap)
-    if recv2_s is not None:
-        sc = S.gather_rows(S.flat_rows(recv2_s), plan.disp_recv_gmap, fill=0)
-        out = K.dequantize_fp8(out, sc)
+    # ---- unpack at destination chip: one fused pass (gather + dequant)
+    out = unpack_recv(recv2, plan.disp_recv_gmap, recv2_s)
     return out, plan.disp_counts
 
 

@@ -20,11 +20,20 @@ Two buffer layouts, selected by ``EpGroupConfig.ll_layout``:
 Every slot map is precomputed once at handle creation by the ``EpPlan``
 engine (core/plan.py); the four phase bodies below are single-pass data
 movement over those maps — dispatch-send runs the fused ``dispatch_pack``
-kernel (gather + optional fp8 quantization in one pass, §IV-C(a)) and
-combine-recv runs the fused ``combine_gather_reduce`` kernel (gather through
-the slot rows + top-k weighted reduction with no [T, K, H] materialization,
-§IV-C(c)). This is the one-pass-per-phase invariant tests/test_plan.py
-enforces.
+kernel (gather + optional fp8 quantization in one pass, §IV-C(a)),
+dispatch-recv runs its mirror ``recv_unpack`` via the shared
+``core.recv.unpack_recv`` helper (gather through the expert-region map +
+in-kernel fp8 dequantization, §IV-C(b)), and combine-recv runs the fused
+``combine_gather_reduce`` kernel (gather through the slot rows + top-k
+weighted reduction with no [T, K, H] materialization, §IV-C(c)). This is the
+one-pass-per-phase invariant tests/test_plan.py enforces — on the recv side
+it additionally greps that no phase performs a gather followed by a separate
+dequantize pass.
+
+Across decode steps, handles are steady-state-cheap: ``ep_handle_refresh``
+(core/plan.py) rebinds per-step weights without rebuilding these maps, and
+its routing-hash fast path skips plan construction entirely when the routing
+replays (speculative decode, cached dispatch in backward).
 
 Both layouts support staged execution (``send_only=True`` + ``ll_complete``),
 the JAX rendering of the paper's double-buffered overlap: the returned pending
@@ -44,6 +53,7 @@ import jax.numpy as jnp
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
 from repro.core import plan as P
+from repro.core.recv import unpack_recv, dequant_rows
 from repro.kernels import ops as K
 
 
@@ -66,26 +76,14 @@ def ll_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) ->
     In the paper LL metadata travels in dispatch headers; gathering it at
     handle creation is the synchronized-collective equivalent (§IV-D a).
     The EpPlan computed here is the only place slot arithmetic happens."""
-    N, L = group.ep_size, group.local_experts
-    T, Kk = topk_idx.shape
-    me = P.my_rank(group)
-    if num_tokens is not None:
-        # padded tokens route to sentinel expert E (rank N, OOB everywhere):
-        # every rank's slot accounting then agrees without gathering counts.
-        pad = jnp.arange(T)[:, None] >= num_tokens
-        topk_idx = jnp.where(pad, group.cfg.num_experts, topk_idx)
-    topk_g = jax.lax.all_gather(topk_idx, _axis(group), axis=0, tiled=False)
-    topk_g = topk_g.reshape(N, T, Kk)
-    mine = (topk_g // L) == me                          # [N, T, K]
-    e_l = (topk_g - me * L).clip(0, L - 1)
-    counts = jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
-        mine.reshape(-1).astype(jnp.int32))
-    nt = jnp.asarray(T, jnp.int32) if num_tokens is None else num_tokens
+    topk_idx, nt = P.mask_padding(group, topk_idx, num_tokens)
+    topk_g = P.gather_routing(group, topk_idx)
+    counts = P.recv_counts(group, topk_g)
     plan = P.build_plan(group, topk_idx, topk_g, nt, topk_weights)
     return EpHandle(
         topk_idx=topk_idx, topk_weights=topk_weights, topk_global=topk_g,
         tokens_per_expert=counts, num_recv_tokens=counts.sum(), num_tokens=nt,
-        plan=plan,
+        plan=plan, routing_hash=P.routing_hash(topk_g),
     )
 
 
@@ -137,12 +135,6 @@ def _pack_send(group: EpGroup, x, gmap):
     return K.dispatch_pack(x, gmap, out_dtype=group.cfg.payload_dtype)
 
 
-def _dequant_rows(group: EpGroup, rows, scales):
-    if scales is None:
-        return rows
-    return K.dequantize_fp8(rows, scales)
-
-
 # ---- nccl_ep (memory-optimized) layout ----
 
 def _ncclep_dispatch_send(group, handle, x):
@@ -154,14 +146,11 @@ def _ncclep_dispatch_send(group, handle, x):
 
 
 def _ncclep_dispatch_recv(group, handle, pending):
-    """Unpack [N, C_d, H] into the 3D expert-major tensor [L, A, H]: a single
-    gather over the plan's precomputed expert-region map."""
+    """Unpack [N, C_d, H] into the 3D expert-major tensor [L, A, H]: one
+    fused pass over the plan's precomputed expert-region map (gather +
+    in-kernel fp8 dequantization when the payload is quantized)."""
     plan = P.ensure_plan(group, handle)
-    out = S.gather_rows(S.flat_rows(pending.recv), plan.disp_recv_gmap)
-    if pending.recv_scales is not None:
-        sc = S.gather_rows(S.flat_rows(pending.recv_scales),
-                           plan.disp_recv_gmap, fill=0)
-        out = _dequant_rows(group, out, sc)
+    out = unpack_recv(pending.recv, plan.disp_recv_gmap, pending.recv_scales)
     return out, plan.disp_counts
 
 
@@ -186,7 +175,7 @@ def _deepep_dispatch_recv(group, handle, pending):
     if pending.recv_scales is not None:
         q = pending.recv_scales.shape[-1]
         sc = pending.recv_scales.reshape(N, L, B, q).transpose(1, 0, 2, 3).reshape(L, N * B, q)
-        out = _dequant_rows(group, out, sc)
+        out = dequant_rows(out, sc)
     return out, plan.disp_counts
 
 

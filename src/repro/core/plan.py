@@ -20,6 +20,16 @@ by inspecting the phase implementations.
 Map conventions (shared with slots.py): a gather map value equal to the
 source row count is the "empty" sentinel — gathers route it to an appended
 zero pad row; scatters route it to an appended trash row that is sliced off.
+
+Across decode steps the plan is also **steady-state-cheap**:
+``refresh_handle`` (exported as ``ep_handle_refresh``) rebinds per-step
+combine weights into an existing handle without rebuilding any map — the
+only weight-dependent plan field (the hierarchical ``h_w_slot``) is a single
+scatter through the stored ``h_entry_slot`` chain. When a new ``topk_idx``
+is supplied, a routing-hash fast path compares checksums at runtime and a
+``lax.cond`` selects the cached maps verbatim on a match (speculative-decode
+replay, cached dispatch in backward), so unchanged routing skips plan
+construction entirely; changed routing rebuilds exactly like handle creation.
 """
 from __future__ import annotations
 
@@ -30,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import slots as S
-from repro.core.group import EpGroup
+from repro.core.group import EpGroup, EpHandle
 
 
 def my_rank(group: EpGroup) -> jax.Array:
@@ -66,6 +76,9 @@ class EpPlan:
     h_rail_dst_rows: jax.Array | None = None  # [No, Ni*T] rail accumulation dst
     h_rail_src_rows: jax.Array | None = None  # [No, Ni*T] rail accumulation src
     h_src_rows: jax.Array | None = None       # [T, Ni] source-chip final gather
+    h_entry_slot: jax.Array | None = None     # [N*T*K] global entry -> y3d slot
+    #   (sentinel L*A) — the weight-rebind chain: lets refresh_handle rebuild
+    #   h_w_slot with one scatter, no slot arithmetic
 
 
 def build_plan(group: EpGroup, topk_idx: jax.Array, topk_global: jax.Array,
@@ -81,8 +94,12 @@ def build_plan(group: EpGroup, topk_idx: jax.Array, topk_global: jax.Array,
     if mode == "ht":
         if (group.cfg.ht_hierarchical and len(group.cfg.ep_axis) > 1
                 and group.outer_size > 1):
-            return _ht_hier_plan(group, topk_idx, topk_global, num_tokens,
-                                 topk_weights)
+            plan = _ht_hier_plan(group, topk_idx, topk_global, num_tokens)
+            # weights enter through the same single-scatter rebind path that
+            # refresh_handle uses — maps never depend on them
+            if topk_weights is not None:
+                plan = rebind_weights(group, plan, topk_weights)
+            return plan
         return _ht_flat_plan(group, topk_idx, topk_global, num_tokens)
     return _baseline_plan(group, topk_idx, topk_global, num_tokens)
 
@@ -94,6 +111,138 @@ def ensure_plan(group: EpGroup, handle) -> EpPlan:
         return handle.plan
     return build_plan(group, handle.topk_idx, handle.topk_global,
                       handle.num_tokens, handle.topk_weights)
+
+
+# --------------------------------------------------------------------------
+# steady-state handle refresh (plan reuse across decode steps)
+# --------------------------------------------------------------------------
+
+def _mix(x: jax.Array) -> jax.Array:
+    """murmur3-style avalanche over uint32 lanes."""
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def routing_hash(topk_idx: jax.Array) -> jax.Array:
+    """Order-sensitive [2]-lane uint32 checksum of a routing tensor.
+
+    Two independently-mixed position-salted sums; computed once per handle
+    and compared by ``refresh_handle`` to detect a routing replay at
+    runtime. Handles hash the **globally gathered** ``topk_global`` — every
+    slot map depends on every rank's routing, so a local-only hash would let
+    a rank whose own routing replayed reuse stale maps while a peer's
+    routing changed (and, being replicated, the global hash makes the
+    reuse/rebuild decision uniform across ranks). A collision would
+    silently reuse stale maps — with two independent 32-bit lanes the odds
+    are ~2^-64 per refresh, far below any hardware soft-error rate."""
+    flat = topk_idx.reshape(-1).astype(jnp.uint32)
+    i = jnp.arange(flat.shape[0], dtype=jnp.uint32)
+    h1 = _mix(flat + i * np.uint32(0x9E3779B9)).sum()
+    h2 = _mix(flat ^ ((i + np.uint32(1)) * np.uint32(0x85EBCA6B))).sum()
+    return jnp.stack([h1, h2])
+
+
+def mask_padding(group: EpGroup, topk_idx: jax.Array, num_tokens):
+    """Shared create/refresh prologue: route padded token rows to the
+    sentinel expert E (rank N, out of range everywhere — every rank's slot
+    accounting then agrees without gathering counts) and coerce the
+    valid-token count. Returns (topk_idx, num_tokens[int32 scalar])."""
+    T = topk_idx.shape[0]
+    if num_tokens is None:
+        return topk_idx, jnp.asarray(T, jnp.int32)
+    pad = jnp.arange(T)[:, None] >= num_tokens
+    return jnp.where(pad, group.cfg.num_experts, topk_idx), num_tokens
+
+
+def gather_routing(group: EpGroup, topk_idx: jax.Array) -> jax.Array:
+    """All-gather local routing across the EP axes into [N, T, K] — row-major
+    over cfg.ep_axis, matching ``my_rank``'s linearization. The single
+    metadata exchange every handle create/refresh performs."""
+    g = topk_idx
+    for ax in reversed(group.cfg.ep_axis):
+        g = jax.lax.all_gather(g, ax, axis=0, tiled=False)
+    return g.reshape((group.ep_size,) + topk_idx.shape)
+
+
+def recv_counts(group: EpGroup, topk_g: jax.Array) -> jax.Array:
+    """[L] tokens received per local expert, from the gathered routing —
+    the one derivation handle create and refresh must agree on (sentinel
+    expert E lands out of every rank's range and is never counted)."""
+    L = group.local_experts
+    me = my_rank(group)
+    mine = (topk_g // L) == me
+    e_l = (topk_g - me * L).clip(0, L - 1)
+    return jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
+        mine.reshape(-1).astype(jnp.int32))
+
+
+def rebind_weights(group: EpGroup, plan: EpPlan | None,
+                   topk_weights: jax.Array) -> EpPlan | None:
+    """Rebind combine weights into a plan without touching any slot map.
+
+    Only the hierarchical ``h_w_slot`` embeds weights — rebuilt here with a
+    single scatter through the stored ``h_entry_slot`` chain. Every other
+    plan is weight-independent and returned unchanged (same object, so
+    callers can assert map reuse by identity)."""
+    if plan is None or plan.h_entry_slot is None:
+        return plan
+    w_g = topk_weights
+    for ax in reversed(group.cfg.ep_axis):
+        w_g = jax.lax.all_gather(w_g, ax, axis=0, tiled=False)
+    L, A = group.local_experts, group.ht_expert_cap
+    h_w_slot = jnp.zeros((L * A + 1,), jnp.float32).at[
+        plan.h_entry_slot].set(w_g.reshape(-1), mode="drop")[:L * A]
+    return dataclasses.replace(plan, h_w_slot=h_w_slot)
+
+
+def refresh_handle(group: EpGroup, handle: EpHandle, topk_weights: jax.Array,
+                   topk_idx: jax.Array | None = None,
+                   num_tokens=None) -> EpHandle:
+    """Rebind per-step routing state into an existing handle — the ROADMAP's
+    plan-reuse-across-decode-steps path (public name ``ep_handle_refresh``).
+
+    With ``topk_idx`` None (or the very same traced array) the routing is
+    unchanged by construction: every slot map is reused verbatim and only the
+    combine weights are rebound. With a (possibly different) ``topk_idx``,
+    the routing-hash fast path compares checksums at runtime: a ``lax.cond``
+    returns the cached maps on a match — plan construction is skipped
+    entirely, which is what makes speculative-decode replay and cached
+    dispatch steady-state-cheap — and rebuilds exactly like handle creation
+    on a mismatch. Must run inside the sharded region, like every EP call."""
+    if topk_idx is None or topk_idx is handle.topk_idx:
+        if num_tokens is not None:
+            # the padding sentinel is baked into topk_idx; a new valid-token
+            # count without new routing is ill-defined — refuse loudly
+            raise ValueError("num_tokens requires topk_idx on refresh")
+        plan = rebind_weights(group, handle.plan, topk_weights)
+        return dataclasses.replace(handle, topk_weights=topk_weights, plan=plan)
+
+    topk_idx, nt = mask_padding(group, topk_idx, num_tokens)
+    topk_g = gather_routing(group, topk_idx)
+    rhash = routing_hash(topk_g)     # global: all maps depend on all ranks
+    counts = recv_counts(group, topk_g)
+
+    if (handle.plan is None or handle.routing_hash is None
+            or topk_idx.shape != handle.topk_idx.shape):
+        # hand-built handle, or a different token count: the cached maps
+        # have different (static) shapes than the rebuild — no cond possible,
+        # rebuild unconditionally, exactly like handle creation
+        plan = build_plan(group, topk_idx, topk_g, nt)
+    else:
+        # weight-free cached plan so both cond branches carry an identical
+        # pytree structure (h_w_slot is rebound below, outside the cond —
+        # keeping collectives out of the branches)
+        cached = (handle.plan if handle.plan.h_entry_slot is None
+                  else dataclasses.replace(handle.plan, h_w_slot=None))
+        same = jnp.all(rhash == handle.routing_hash)
+        plan = jax.lax.cond(same, lambda: cached,
+                            lambda: build_plan(group, topk_idx, topk_g, nt))
+    plan = rebind_weights(group, plan, topk_weights)
+    return EpHandle(
+        topk_idx=topk_idx, topk_weights=topk_weights, topk_global=topk_g,
+        tokens_per_expert=counts, num_recv_tokens=counts.sum(), num_tokens=nt,
+        plan=plan, routing_hash=rhash)
 
 
 # --------------------------------------------------------------------------
@@ -164,7 +313,6 @@ def _ll_deepep_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
     the combine source rows need precomputing."""
     N, L = group.ep_size, group.local_experts
     B = group.cfg.max_tokens_per_rank
-    me = my_rank(group)
     T, Kk = topk_idx.shape
     assert T <= B
     dst = topk_idx // L
@@ -178,11 +326,8 @@ def _ll_deepep_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
         N, L * B, sentinel=T)
     row = dst * (L * B) + e_l * B + t_idx                    # [T, K]
     row = jnp.where(token_valid[:, None], row, N * L * B)
-    mine = (topk_g // L) == me
-    e_lg = (topk_g - me * L).clip(0, L - 1)
-    counts = jnp.zeros((L,), jnp.int32).at[e_lg.reshape(-1)].add(
-        mine.reshape(-1).astype(jnp.int32))
-    return EpPlan(disp_send_gmap=disp_send_gmap, disp_counts=counts,
+    return EpPlan(disp_send_gmap=disp_send_gmap,
+                  disp_counts=recv_counts(group, topk_g),
                   comb_recv_rows=row.astype(jnp.int32))
 
 
@@ -281,11 +426,13 @@ def _hier_recv_chain(group, geo, me_o, me_i):
     return c2, ok2
 
 
-def _ht_hier_plan(group, topk_idx, topk_g, num_tokens, topk_weights) -> EpPlan:
+def _ht_hier_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
     """Two-stage scheme: every map of the dispatch chain (stage-1 dedup,
     stage-2 fan-out, destination unpack) plus the mirror combine chain with
     hierarchical reduction (slot-domain weighting, rail partial sums, source
-    final sum) — all derived once from the replicated routing."""
+    final sum) — all derived once from the replicated routing. Weight-free:
+    combine weights are bound afterwards via ``rebind_weights`` through the
+    stored ``h_entry_slot`` chain, so a weight refresh never re-runs this."""
     ax_o, ax_i = group.cfg.ep_axis[0], group.cfg.ep_axis[-1]
     L, Ni, No = group.local_experts, group.inner_size, group.outer_size
     C1, C2, A = group.ht_stage1_cap, group.ht_stage2_cap, group.ht_expert_cap
@@ -329,12 +476,8 @@ def _ht_hier_plan(group, topk_idx, topk_g, num_tokens, topk_weights) -> EpPlan:
     disp_recv_gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows, ent_valid,
                                         L, A, sentinel=No * C2)
 
-    # ---- combine, expert side: per-y3d-slot weight + stage-2 target. All
-    # H-wide combine work stays in the slot domain (<= L*A rows; see ht.py).
-    w_g = topk_weights
-    for ax in reversed(group.cfg.ep_axis):
-        w_g = jax.lax.all_gather(w_g, ax, axis=0, tiled=False)
-    w_g = w_g.reshape(No, Ni, T, Kk)
+    # ---- combine, expert side: per-y3d-slot stage-2 target. All H-wide
+    # combine work stays in the slot domain (<= L*A rows; see ht.py).
     slot_of_entry = jnp.where(ent_valid & (a_pos < A),
                               e_l.reshape(-1) * A + a_pos, L * A)
     idx2 = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]
@@ -342,8 +485,6 @@ def _ht_hier_plan(group, topk_idx, topk_g, num_tokens, topk_weights) -> EpPlan:
     idx2 = jnp.where(ent_valid, idx2, No * C2)
     h_slot_tgt = jnp.full((L * A + 1,), No * C2, jnp.int32).at[
         slot_of_entry].set(idx2.astype(jnp.int32), mode="drop")[:L * A]
-    h_w_slot = jnp.zeros((L * A + 1,), jnp.float32).at[
-        slot_of_entry].set(w_g.reshape(-1), mode="drop")[:L * A]
 
     # ---- combine, rail side: accumulate partials from every pod into the
     # held-slot buffer. Same c2 chain per destination pod, vectorized over o_p
@@ -369,10 +510,11 @@ def _ht_hier_plan(group, topk_idx, topk_g, num_tokens, topk_weights) -> EpPlan:
     return EpPlan(
         disp_recv_gmap=disp_recv_gmap, disp_counts=counts,
         h_gmap1=h_gmap1, h_gmap2=h_gmap2,
-        h_slot_tgt=h_slot_tgt, h_w_slot=h_w_slot,
+        h_slot_tgt=h_slot_tgt,
         h_rail_dst_rows=h_rail_dst_rows.astype(jnp.int32),
         h_rail_src_rows=h_rail_src_rows.astype(jnp.int32),
         h_src_rows=h_src_rows.astype(jnp.int32),
+        h_entry_slot=slot_of_entry.astype(jnp.int32),
     )
 
 
@@ -397,10 +539,6 @@ def _baseline_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
                               N * L, Ce, sentinel=T)
     row = jnp.where(valid.reshape(-1) & (pos < Ce),
                     block.clip(0, N * L - 1) * Ce + pos, N * L * Ce)
-    me = my_rank(group)
-    mine = (topk_g // L) == me
-    el_g = (topk_g - me * L).clip(0, L - 1)
-    counts = jnp.zeros((L,), jnp.int32).at[el_g.reshape(-1)].add(
-        mine.reshape(-1).astype(jnp.int32))
-    return EpPlan(disp_send_gmap=gmap.reshape(N, L * Ce), disp_counts=counts,
+    return EpPlan(disp_send_gmap=gmap.reshape(N, L * Ce),
+                  disp_counts=recv_counts(group, topk_g),
                   comb_recv_rows=row.reshape(T, Kk).astype(jnp.int32))

@@ -1,0 +1,44 @@
+"""Shared recv-side unpack: the single call site of the fused ``recv_unpack``
+kernel.
+
+Every dispatch-recv phase (LL nccl_ep, HT flat, both HT hierarchical stages)
+unpacks received payload blocks through a plan-precomputed slot map; quantized
+payloads additionally need block-wise FP8 dequantization. The seed did this
+in two passes — an XLA gather followed by a separate ``dequantize_fp8`` over
+the gathered copy — per site, with LL and HT each carrying their own fp8
+plumbing. ``unpack_recv`` below is now the only place recv-side unpack
+happens: one fused pass (kernels/recv_unpack.py — gather through the slot map
++ in-kernel dequant), so the one-pass-per-phase invariant holds on the recv
+side too. tests/test_plan.py greps the phase modules to keep it that way.
+
+``dequant_rows`` covers the one recv path with no gather at all (the LL
+deepep layout, where unpack is a pure transpose): plain block dequantization,
+shared by any layout that lands rows positionally.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import slots as S
+from repro.kernels import ops as K
+
+
+def unpack_recv(recv: jax.Array, gmap: jax.Array,
+                scales: jax.Array | None = None, out_dtype=None) -> jax.Array:
+    """Unpack received payload through a slot map in one fused pass.
+
+    recv: [..., H] received blocks (leading dims collapse to the flat rows
+    the map addresses; sentinel == total rows); gmap: int32 slot map of any
+    shape; scales: matching [..., H/block] f32 when the payload is fp8.
+    Returns ``gmap.shape + (H,)`` — dequantized when scales are given."""
+    flat = S.flat_rows(recv)
+    s_flat = S.flat_rows(scales) if scales is not None else None
+    return K.recv_unpack(flat, gmap, s_flat, out_dtype)
+
+
+def dequant_rows(rows: jax.Array, scales: jax.Array | None) -> jax.Array:
+    """Block-dequantize positionally-landed rows (no slot map). scales None
+    means an unquantized payload — returned unchanged."""
+    if scales is None:
+        return rows
+    return K.dequantize_fp8(rows, scales)

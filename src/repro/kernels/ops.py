@@ -6,8 +6,9 @@ suite asserts so under interpret mode). `REPRO_FORCE_PALLAS=interpret` forces
 interpret-mode Pallas everywhere (slow; used by kernel tests and debugging).
 
 Every EP hot-path op is fused single-pass on TPU: dispatch_pack (slot gather
-+ fp8 quant), combine_gather_reduce (slot gather + K-way weighted reduce),
-combine_reduce, quantize/dequantize_fp8, grouped_gemm, flash attention.
++ fp8 quant), recv_unpack (slot gather + fp8 dequant, its recv-side mirror),
+combine_gather_reduce (slot gather + K-way weighted reduce), combine_reduce,
+quantize/dequantize_fp8, grouped_gemm, flash attention.
 """
 from __future__ import annotations
 
@@ -23,6 +24,7 @@ from repro.kernels import combine_gather_reduce as _cgr
 from repro.kernels import dispatch_pack as _dp
 from repro.kernels import fp8 as _fp8
 from repro.kernels import grouped_gemm as _gg
+from repro.kernels import recv_unpack as _ru
 
 
 def _use_pallas() -> tuple[bool, bool]:
@@ -90,6 +92,25 @@ def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None,
         return _dp.dispatch_pack(x, gmap, quant_block=quant_block,
                                  out_dtype=out_dtype, interpret=interp)
     return _ref.dispatch_pack(x, gmap, quant_block, out_dtype)
+
+
+def recv_unpack(recv: jax.Array, gmap: jax.Array, scales: jax.Array | None = None,
+                out_dtype=None):
+    """Fused recv-side slot unpack (+ optional fp8 dequantization) — the
+    mirror of dispatch_pack. recv: [R, H] flat received rows; gmap: int32
+    slot map of any shape (sentinel == R); scales: [R, H/block] f32 when the
+    payload is quantized. One pass; no intermediate gathered-fp8 copy."""
+    use, interp = _use_pallas()
+    H = recv.shape[-1]
+    if scales is not None:
+        block = H // scales.shape[-1] if scales.shape[-1] else 0
+        ok = bool(block) and H % block == 0 and block % 128 == 0
+    else:
+        ok = H % 128 == 0
+    if use and ok:
+        return _ru.recv_unpack(recv, gmap, scales, out_dtype=out_dtype,
+                               interpret=interp)
+    return _ref.recv_unpack(recv, gmap, scales, out_dtype)
 
 
 def flash_attention_bshd(q, k, v, *, scale, window=None, causal=True):

@@ -97,6 +97,26 @@ def dispatch_pack(x: jax.Array, gmap: jax.Array, quant_block: int | None = None,
     return out, None
 
 
+def recv_unpack(recv: jax.Array, gmap: jax.Array, scales: jax.Array | None = None,
+                out_dtype=None):
+    """Fused recv-side unpack — paper §IV-C(b) Recv Tokens (dispatch_pack's
+    mirror).
+
+    recv: [R, H] flat received rows; gmap: int32 of any shape with sentinel
+    == R meaning "empty slot"; scales: [R, H/block] f32 when the payload is
+    fp8-quantized. Returns ``gmap.shape + (H,)``: the gathered rows,
+    dequantized when scales are given (out_dtype defaults to bf16 then; in
+    copy mode None keeps recv.dtype). Sentinel slots are exactly zero."""
+    R, H = recv.shape
+    pad = jnp.zeros((1, H), recv.dtype)
+    rows = jnp.concatenate([recv, pad], axis=0)[gmap]
+    if scales is None:
+        return rows if out_dtype is None else rows.astype(out_dtype)
+    spad = jnp.zeros((1, scales.shape[-1]), scales.dtype)
+    sc = jnp.concatenate([scales, spad], axis=0)[gmap]
+    return dequantize_fp8(rows, sc, out_dtype or jnp.bfloat16)
+
+
 def grouped_gemm(x: jax.Array, w: jax.Array, counts: jax.Array) -> jax.Array:
     """Expert-major grouped GEMM over the LL 3D layout (§III-E, Fig. 3).
 

@@ -1,3 +1,6 @@
 from repro.runtime.steps import (  # noqa: F401
     make_train_step, make_serve_step, train_batch_specs, serve_state_specs,
 )
+from repro.runtime.decode import (  # noqa: F401
+    naive_decode_step, pipelined_decode_step, decode_loop,
+)

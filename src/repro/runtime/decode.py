@@ -1,0 +1,113 @@
+"""Double-buffered EP decode pipeline — the paper's §IV overlap made a
+driver, not a latent capability.
+
+The paper's LL mode hides all-to-all latency behind expert compute by double
+buffering: while micro-batch *i*'s expert GEMM runs, micro-batch *i+1*'s
+dispatch is already in flight (DeepEP and UCCL-EP build their decode paths
+around the same overlap). The JAX rendering uses the staged
+``send_only=True`` / ``ep_complete`` surface: issuing the second
+micro-batch's dispatch-send *before* completing the first removes the serial
+dependency between the two micro-batches' collectives and compute, so XLA's
+async collective scheduler can overlap B's all-to-all with A's unpack +
+expert GEMM, and A's combine all-to-all with B's expert GEMM.
+
+Steady state is also *plan-free*: handles are refreshed via
+``ep_handle_refresh`` (routing-hash fast path) instead of rebuilt, so an
+unchanged routing (speculative-decode replay) pays one checksum compare
+instead of the full slot-map chain.
+
+All functions here are EP-level and must run inside the sharded region (they
+call the collective EP API), mirroring how a serving engine embeds them in
+its MoE layer. ``DecodeServer`` (runtime/server.py) applies the same
+double-buffering idea one level up: ``pipeline_depth`` keeps two decode
+steps in flight at the host so device work never waits on host dispatch.
+benchmarks/bench_decode_pipeline.py measures the steady-state per-step win
+against the naive (rebuild-plan, unstaged) loop.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+
+from repro.core.api import (ep_create_handle, ep_handle_refresh, ep_dispatch,
+                            ep_combine, ep_complete)
+from repro.core.group import EpGroup, EpHandle
+
+# router_fn: tokens [T, H] -> (topk_idx [T, K], topk_weights [T, K])
+RouterFn = Callable[[jax.Array], tuple[jax.Array, jax.Array]]
+# expert_fn: (y3d [L, A, H], counts [L]) -> [L, A, H]
+ExpertFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def naive_decode_step(group: EpGroup, router_fn: RouterFn, expert_fn: ExpertFn,
+                      x: jax.Array) -> jax.Array:
+    """The unpipelined per-step baseline: rebuild the handle (full plan
+    construction) and run dispatch/expert/combine fully serialized. This is
+    what every decode step cost before the staged surface + plan reuse; the
+    benchmark measures the pipeline against it."""
+    topk_idx, topk_weights = router_fn(x)
+    h = ep_create_handle(group, topk_idx, topk_weights)
+    y3d, counts = ep_dispatch(group, h, x)
+    return ep_combine(group, h, expert_fn(y3d, counts))
+
+
+def _staged_pair(group: EpGroup, expert_fn: ExpertFn,
+                 ha: EpHandle, hb: EpHandle, xa: jax.Array, xb: jax.Array):
+    """The double-buffer schedule over one micro-batch pair: both
+    dispatch-sends are issued back-to-back (B's all-to-all overlaps A's
+    unpack + expert GEMM), and A's combine-send is issued before B's expert
+    work completes (A's all-to-all overlaps B's GEMM)."""
+    pa = ep_dispatch(group, ha, xa, send_only=True)
+    pb = ep_dispatch(group, hb, xb, send_only=True)    # B a2a in flight
+    y3a, ca = ep_complete(group, ha, pa)
+    qa = ep_combine(group, ha, expert_fn(y3a, ca), send_only=True)
+    y3b, cb = ep_complete(group, hb, pb)               # overlaps A combine a2a
+    qb = ep_combine(group, hb, expert_fn(y3b, cb), send_only=True)
+    return ep_complete(group, ha, qa), ep_complete(group, hb, qb)
+
+
+def pipelined_decode_step(group: EpGroup, router_fn: RouterFn,
+                          expert_fn: ExpertFn,
+                          handles: Sequence[EpHandle],
+                          xa: jax.Array, xb: jax.Array):
+    """One steady-state step over a micro-batch pair (the two buffers).
+
+    Handles are refreshed, not rebuilt: the routing-hash fast path reuses
+    the cached slot maps whenever the (global) routing replays. Returns
+    ``((out_a, out_b), (handle_a, handle_b))`` — feed the handles back in
+    for the next step."""
+    assert group.mode == "ll", "staged double buffering is the LL decode path"
+    ta, wa = router_fn(xa)
+    tb, wb = router_fn(xb)
+    ha = ep_handle_refresh(group, handles[0], wa, ta)
+    hb = ep_handle_refresh(group, handles[1], wb, tb)
+    return _staged_pair(group, expert_fn, ha, hb, xa, xb), (ha, hb)
+
+
+def decode_loop(group: EpGroup, router_fn: RouterFn, expert_fn: ExpertFn,
+                xs: Sequence[tuple[jax.Array, jax.Array]]):
+    """Drive a sequence of micro-batch pairs through the pipeline.
+
+    ``xs``: iterable of (xa, xb) pairs, one per decode step. Step 0 creates
+    the two handles and feeds them straight into the staged schedule (the
+    only full plan construction in the window); every later step refreshes
+    them. Returns the list of (out_a, out_b) pairs. Python-level loop —
+    unrolls under jit, matching how a serving engine would trace a fixed
+    decode window."""
+    assert group.mode == "ll", "staged double buffering is the LL decode path"
+    outs = []
+    handles = None
+    for xa, xb in xs:
+        if handles is None:
+            ta, wa = router_fn(xa)
+            tb, wb = router_fn(xb)
+            handles = (ep_create_handle(group, ta, wa),
+                       ep_create_handle(group, tb, wb))
+            outs.append(_staged_pair(group, expert_fn, handles[0], handles[1],
+                                     xa, xb))
+            continue
+        (oa, ob), handles = pipelined_decode_step(
+            group, router_fn, expert_fn, handles, xa, xb)
+        outs.append((oa, ob))
+    return outs

@@ -15,6 +15,7 @@ from repro.kernels.dispatch_pack import dispatch_pack as dp_pallas
 from repro.kernels.fp8 import quantize_fp8 as qfp8_pallas
 from repro.kernels.fp8 import dequantize_fp8 as dqfp8_pallas
 from repro.kernels.grouped_gemm import grouped_gemm as gg_pallas
+from repro.kernels.recv_unpack import recv_unpack as ru_pallas
 
 
 def tol(dt):
@@ -119,6 +120,63 @@ def test_combine_gather_reduce_all_sentinel():
     w = jnp.ones((4, 2), jnp.float32)
     got = np.asarray(cgr_pallas(recv, rows, w, interpret=True))
     assert np.all(got == 0)
+
+
+@pytest.mark.parametrize("R,H,D,C", [(32, 128, 2, 8), (16, 256, 4, 4),
+                                     (64, 640, 3, 8)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_recv_unpack_copy_bitwise(R, H, D, C, dt):
+    """Fused recv unpack (copy mode) vs the gather reference — bitwise,
+    sentinel slots included."""
+    rng = np.random.RandomState(11)
+    recv = jnp.asarray(rng.randn(R, H), dt)
+    gmap = jnp.asarray(rng.randint(0, R + 1, (D, C)), jnp.int32)  # R == sentinel
+    got = ru_pallas(recv, gmap, interpret=True)
+    want = ref.recv_unpack(recv, gmap)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("R,H,D,C", [(32, 256, 2, 8), (16, 128, 4, 4)])
+def test_recv_unpack_dequant_bitwise(R, H, D, C):
+    """Fused recv unpack (fp8 dequant mode) vs the two-pass gather+dequant
+    reference — bitwise (same f32 math elementwise)."""
+    rng = np.random.RandomState(12)
+    x = jnp.asarray(rng.randn(R, H) * 4, jnp.float32)
+    q, s = ref.quantize_fp8(x, 128)
+    gmap = jnp.asarray(rng.randint(0, R + 1, (D, C)), jnp.int32)
+    got = ru_pallas(q, gmap, s, interpret=True)
+    want = ref.recv_unpack(q, gmap, s)
+    assert got.dtype == want.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_recv_unpack_ref_matches_two_pass():
+    """The recv_unpack reference IS the seed's two-pass semantics: gather
+    with zero fill, then block dequant over zero-filled scales."""
+    from repro.core import slots as S
+    rng = np.random.RandomState(13)
+    R, H = 24, 256
+    x = jnp.asarray(rng.randn(R, H) * 2, jnp.float32)
+    q, s = ref.quantize_fp8(x, 128)
+    gmap = jnp.asarray(rng.randint(0, R + 1, (4, 8)), jnp.int32)
+    want = ref.dequantize_fp8(S.gather_rows(q, gmap),
+                              S.gather_rows(s, gmap, fill=0))
+    got = ref.recv_unpack(q, gmap, s)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_recv_unpack_all_sentinel_and_cast():
+    recv = jnp.asarray(np.random.RandomState(14).randn(8, 128), jnp.bfloat16)
+    gmap = jnp.full((2, 4), 8, jnp.int32)
+    got = np.asarray(ru_pallas(recv, gmap, interpret=True), np.float32)
+    assert np.all(got == 0)
+    # out_dtype cast in copy mode
+    got32 = ru_pallas(recv, gmap, out_dtype=jnp.float32, interpret=True)
+    assert got32.dtype == jnp.float32
 
 
 @pytest.mark.parametrize("M,H,block", [(8, 256, 128), (16, 512, 128), (8, 128, 128),

@@ -1,6 +1,8 @@
 """EpPlan slot-map engine: sort-based positions_by_dest vs the one-hot
-oracle (bitwise), the one-pass-per-phase invariant, and plan-driven
-dispatch/combine round-trips under padding and capacity drops.
+oracle (bitwise), the one-pass-per-phase invariant (send AND recv side —
+no slot arithmetic in phase bodies, no two-pass gather+dequant unpack),
+and plan-driven dispatch/combine round-trips under padding and capacity
+drops. Handle refresh / plan reuse lives in tests/test_refresh.py.
 """
 import inspect
 
@@ -75,6 +77,27 @@ def test_no_slot_arithmetic_in_phase_bodies(fn):
     src = inspect.getsource(fn)
     for banned in ("positions_by_dest", "cumsum", "argsort", "build_gather_map"):
         assert banned not in src, (fn.__name__, banned)
+
+
+RECV_PHASE_FNS = [
+    ll._ncclep_dispatch_recv, ll._deepep_dispatch_recv,
+    ht.ht_dispatch_flat, ht.ht_dispatch_hier,
+]
+
+
+def test_no_two_pass_recv_unpack():
+    """Recv side of the one-pass invariant: no phase module performs a
+    gather followed by a separate fp8 dequantization — every recv unpack
+    goes through core.recv.unpack_recv, the single call site of the fused
+    recv_unpack kernel, and every dequant through core.recv."""
+    from repro.core import recv as recv_mod
+    for mod in (ll, ht, baseline):
+        assert "dequantize_fp8" not in inspect.getsource(mod), mod.__name__
+    for fn in RECV_PHASE_FNS:
+        assert "gather_rows" not in inspect.getsource(fn), fn.__name__
+    # the helper itself must be fused: kernel wrapper only, no two-pass gather
+    src = inspect.getsource(recv_mod)
+    assert "recv_unpack" in src and "gather_rows" not in src
 
 
 def test_plan_built_once_at_handle_creation():

@@ -1,0 +1,356 @@
+"""ep_handle_refresh (plan reuse across decode steps) + the double-buffered
+decode pipeline.
+
+Covers the ROADMAP plan-reuse contract: a weights-only refresh reuses the
+plan object verbatim (asserted by identity at trace time); a refresh with
+identical routing values in a *different* array goes through the
+routing-hash fast path and must behave exactly like the original handle; a
+refresh with changed routing must behave exactly like a fresh
+ep_create_handle; refreshed weights must flow into combine (including the
+hierarchical h_w_slot rebind). The decode pipeline (runtime/decode.py) must
+be bit-compatible with the naive unpipelined loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
+                        ep_handle_refresh, ep_dispatch, ep_combine)
+from repro.core import plan as plan_mod
+from repro.runtime.decode import (naive_decode_step, pipelined_decode_step,
+                                  decode_loop)
+
+N, E, K, T, H = 8, 16, 4, 16, 32
+
+
+def make_mesh(shape=(N,), names=("data",)):
+    return jax.make_mesh(shape, names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def rand_inputs(rng):
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk = jnp.asarray(
+        np.stack([np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+                  for _ in range(N)]), jnp.int32)
+    w = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    return x, topk, w
+
+
+def oracle(x, topk, w):
+    return x * (w * (1.0 + topk)).sum(-1)[..., None]
+
+
+def scale_by_expert(group, y3d):
+    L = group.local_experts
+    e_glob = plan_mod.my_rank(group) * L + jnp.arange(L)
+    return y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+
+
+def ep_roundtrip(group, handle, x):
+    y3d, counts = ep_dispatch(group, handle, x)
+    return ep_combine(group, handle, scale_by_expert(group, y3d))
+
+
+# --------------------------------------------------------------------------
+# plan reuse: object identity on weights-only refresh
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,layout", [("ll", "nccl_ep"), ("ll", "deepep"),
+                                         ("ht", "nccl_ep"),
+                                         ("baseline", "nccl_ep")])
+def test_weights_refresh_reuses_plan_object(mode, layout):
+    """topk_idx=None: every slot map is reused verbatim — for all
+    weight-free plans that is the same plan object; the hash rides along."""
+    rng = np.random.RandomState(0)
+    x, topk, w = rand_inputs(rng)
+    w2 = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode=mode, ll_layout=layout,
+                        payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+
+    def step(x, topk, w, w2):
+        x, topk, w, w2 = x[0], topk[0], w[0], w2[0]
+        h = ep_create_handle(group, topk, w)
+        h2 = ep_handle_refresh(group, h, w2)
+        assert h2.plan is h.plan, "weights-only refresh rebuilt the plan"
+        assert h2.routing_hash is h.routing_hash
+        assert h2.topk_weights is w2
+        return ep_roundtrip(group, h2, x)[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 4,
+                              out_specs=P("data")))
+    out = np.asarray(f(x, topk, w, w2))
+    np.testing.assert_allclose(out, np.asarray(oracle(x, topk, w2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# routing-hash fast path: same values, different array
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,layout", [("ll", "nccl_ep"), ("ll", "deepep"),
+                                         ("ht", "nccl_ep")])
+def test_refresh_same_routing_matches_original(mode, layout):
+    rng = np.random.RandomState(1)
+    x, topk, w = rand_inputs(rng)
+    topk_copy = jnp.array(np.asarray(topk))          # same values, new buffer
+    w2 = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode=mode, ll_layout=layout,
+                        payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+
+    def step(x, topk, w, topkc, w2):
+        x, topk, w, topkc, w2 = x[0], topk[0], w[0], topkc[0], w2[0]
+        h = ep_create_handle(group, topk, w)
+        h2 = ep_handle_refresh(group, h, w2, topkc)   # hash path, cond reuse
+        return ep_roundtrip(group, h2, x)[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 5,
+                              out_specs=P("data")))
+    out = np.asarray(f(x, topk, w, topk_copy, w2))
+    np.testing.assert_allclose(out, np.asarray(oracle(x, topk, w2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("mode,layout", [("ll", "nccl_ep"), ("ll", "deepep"),
+                                         ("ht", "nccl_ep"),
+                                         ("baseline", "nccl_ep")])
+def test_refresh_changed_routing_rebuilds(mode, layout):
+    """A refresh with different routing must equal a fresh handle built on
+    that routing — the hash mismatch takes the rebuild branch."""
+    rng = np.random.RandomState(2)
+    x, topk, w = rand_inputs(rng)
+    _, topk2, w2 = rand_inputs(rng)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode=mode, ll_layout=layout,
+                        payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+
+    def step(x, topk, w, topk2, w2):
+        x, topk, w, topk2, w2 = x[0], topk[0], w[0], topk2[0], w2[0]
+        h = ep_create_handle(group, topk, w)
+        h_ref = ep_handle_refresh(group, h, w2, topk2)
+        h_new = ep_create_handle(group, topk2, w2)
+        return (ep_roundtrip(group, h_ref, x)[None],
+                ep_roundtrip(group, h_new, x)[None])
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 5,
+                              out_specs=(P("data"), P("data"))))
+    got_ref, got_new = map(np.asarray, f(x, topk, w, topk2, w2))
+    want = np.asarray(oracle(x, topk2, w2))
+    np.testing.assert_allclose(got_ref, want, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(got_ref, got_new)   # identical computation
+
+
+def test_refresh_detects_single_rank_routing_change():
+    """The hash covers the *global* routing: when only ONE rank's routing
+    changes, every rank's slot maps change (recv maps encode peers'
+    choices), so every rank must take the rebuild branch. A local-only hash
+    would silently reuse stale maps on the unchanged ranks."""
+    rng = np.random.RandomState(6)
+    x, topk, w = rand_inputs(rng)
+    topk2_np = np.asarray(topk).copy()
+    topk2_np[1] = np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+    topk2 = jnp.asarray(topk2_np, jnp.int32)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+
+    def step(x, topk, w, topk2):
+        x, topk, w, topk2 = x[0], topk[0], w[0], topk2[0]
+        h = ep_create_handle(group, topk, w)
+        h2 = ep_handle_refresh(group, h, w, topk2)
+        h_new = ep_create_handle(group, topk2, w)
+        return (ep_roundtrip(group, h2, x)[None],
+                ep_roundtrip(group, h_new, x)[None])
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 4,
+                              out_specs=(P("data"), P("data"))))
+    got_ref, got_new = map(np.asarray, f(x, topk, w, topk2))
+    np.testing.assert_array_equal(got_ref, got_new)
+    np.testing.assert_allclose(got_ref, np.asarray(oracle(x, topk2, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_refresh_different_token_count_rebuilds():
+    """A refresh whose topk_idx has a different (static) token count cannot
+    reuse the cached maps — shapes differ — and must rebuild unconditionally
+    instead of tripping over a lax.cond branch-shape mismatch."""
+    rng = np.random.RandomState(9)
+    x, topk, w = rand_inputs(rng)
+    T2 = T // 2
+    topk2 = topk[:, :T2]
+    w2 = w[:, :T2]
+    x2 = x[:, :T2]
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+
+    def step(x2, topk, w, topk2, w2):
+        x2, topk, w, topk2, w2 = x2[0], topk[0], w[0], topk2[0], w2[0]
+        h = ep_create_handle(group, topk, w)
+        h2 = ep_handle_refresh(group, h, w2, topk2)   # T -> T/2
+        return ep_roundtrip(group, h2, x2)[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 5,
+                              out_specs=P("data")))
+    out = np.asarray(f(x2, topk, w, topk2, w2))
+    np.testing.assert_allclose(out, np.asarray(oracle(x2, topk2, w2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_refresh_num_tokens_requires_topk_idx():
+    rng = np.random.RandomState(7)
+    _, topk, w = rand_inputs(rng)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+
+    def step(topk, w):
+        h = ep_create_handle(group, topk[0], w[0])
+        with pytest.raises(ValueError):
+            ep_handle_refresh(group, h, w[0], num_tokens=jnp.int32(4))
+        return h.tokens_per_expert[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 2,
+                              out_specs=P("data")))
+    f(topk, w)
+
+
+def test_refresh_hierarchical_weight_rebind():
+    """HT hierarchical: h_w_slot is the one weight-carrying plan field; a
+    refresh must rebind it through the stored h_entry_slot chain."""
+    rng = np.random.RandomState(3)
+    x, topk, w = rand_inputs(rng)
+    w2 = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ht", ep_axis=("pod", "data"),
+                        ht_hierarchical=True, payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N, inner_size=4)
+    mesh = make_mesh((2, 4), ("pod", "data"))
+
+    def step(x, topk, w, w2):
+        x, topk, w, w2 = x[0], topk[0], w[0], w2[0]
+        h = ep_create_handle(group, topk, w)
+        h2 = ep_handle_refresh(group, h, w2)
+        assert h2.plan is not h.plan          # h_w_slot rebound
+        assert h2.plan.disp_recv_gmap is h.plan.disp_recv_gmap  # maps reused
+        return ep_roundtrip(group, h2, x)[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(P(("pod", "data")),) * 4,
+                              out_specs=P(("pod", "data"))))
+    out = np.asarray(f(x, topk, w, w2)).reshape(N, T, H)
+    np.testing.assert_allclose(out, np.asarray(oracle(x, topk, w2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_refresh_changed_routing_rebuilds_hier():
+    """HT hierarchical through the cond's rebuild branch: the cached
+    (h_w_slot-stripped) and rebuilt plan pytrees must stay structurally
+    identical, and the refreshed handle must equal a fresh one."""
+    rng = np.random.RandomState(8)
+    x, topk, w = rand_inputs(rng)
+    _, topk2, w2 = rand_inputs(rng)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ht", ep_axis=("pod", "data"),
+                        ht_hierarchical=True, payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N, inner_size=4)
+    mesh = make_mesh((2, 4), ("pod", "data"))
+
+    def step(x, topk, w, topk2, w2):
+        x, topk, w, topk2, w2 = x[0], topk[0], w[0], topk2[0], w2[0]
+        h = ep_create_handle(group, topk, w)
+        h_ref = ep_handle_refresh(group, h, w2, topk2)
+        h_new = ep_create_handle(group, topk2, w2)
+        return (ep_roundtrip(group, h_ref, x)[None],
+                ep_roundtrip(group, h_new, x)[None])
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(P(("pod", "data")),) * 5,
+                              out_specs=(P(("pod", "data")),) * 2))
+    got_ref, got_new = map(np.asarray, f(x, topk, w, topk2, w2))
+    np.testing.assert_array_equal(got_ref, got_new)
+    np.testing.assert_allclose(got_ref.reshape(N, T, H),
+                               np.asarray(oracle(x, topk2, w2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_routing_hash_sensitivity():
+    """Hash must differ on any entry/order change and match on equal input."""
+    rng = np.random.RandomState(4)
+    a = jnp.asarray(rng.randint(0, E, (T, K)), jnp.int32)
+    same = plan_mod.routing_hash(jnp.array(np.asarray(a)))
+    h = plan_mod.routing_hash(a)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(same))
+    b = a.at[3, 1].set((a[3, 1] + 1) % E)
+    assert not np.array_equal(np.asarray(h),
+                              np.asarray(plan_mod.routing_hash(b)))
+    # order sensitivity: swapping two different entries must change the hash
+    ij = a[0, 0], a[0, 1]
+    c = a.at[0, 0].set(ij[1]).at[0, 1].set(ij[0])
+    if int(ij[0]) != int(ij[1]):
+        assert not np.array_equal(np.asarray(h),
+                                  np.asarray(plan_mod.routing_hash(c)))
+
+
+# --------------------------------------------------------------------------
+# double-buffered decode pipeline == naive loop
+# --------------------------------------------------------------------------
+
+def test_decode_pipeline_matches_naive():
+    rng = np.random.RandomState(5)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+    router_w = jnp.asarray(rng.randn(H, E), jnp.float32)
+
+    def router_fn(x):
+        logits = x @ router_w
+        w, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+        return idx.astype(jnp.int32), w / w.sum(-1, keepdims=True)
+
+    def expert_fn(y3d, counts):
+        return scale_by_expert(group, y3d)
+
+    S = 3
+    xs = jnp.asarray(rng.randn(S, 2, N, T, H), jnp.float32)
+
+    def pipe(xs):
+        seq = [(xs[s, 0, 0], xs[s, 1, 0]) for s in range(S)]
+        outs = decode_loop(group, router_fn, expert_fn, seq)
+        return jnp.stack([jnp.stack([a, b]) for a, b in outs])[None]
+
+    def naive(xs):
+        return jnp.stack([
+            jnp.stack([naive_decode_step(group, router_fn, expert_fn,
+                                         xs[s, m, 0]) for m in range(2)])
+            for s in range(S)])[None]
+
+    spec = (P(None, None, "data"),)
+    fp = jax.jit(jax.shard_map(pipe, mesh=mesh, in_specs=spec,
+                               out_specs=P("data")))
+    fn = jax.jit(jax.shard_map(naive, mesh=mesh, in_specs=spec,
+                               out_specs=P("data")))
+    np.testing.assert_allclose(np.asarray(fp(xs)), np.asarray(fn(xs)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pipelined_step_requires_ll():
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=4096, hidden=H,
+                        top_k=K, mode="ht", payload_dtype=jnp.float32)
+    group = ep_create_group(cfg, ep_size=N)
+    with pytest.raises(AssertionError):
+        pipelined_decode_step(group, None, None, (None, None), None, None)
