@@ -1,8 +1,19 @@
 """Paper Table III / §III-D: LL vs HT vs baseline across batch sizes — the
 crossover that motivates the unified mode-selected API. Host wall time for
 one dispatch->expert-FFN->combine cycle on 8 fake devices, plus the wire-byte
-accounting that determines the TPU-side crossover."""
-from benchmarks.common import ensure_devices, timeit, write_result, table, ICI_BW
+accounting that determines the TPU-side crossover.
+
+Also measures the **prefill pipeline steady state** (BENCH schema v3): one
+staged MoE layer through runtime/prefill.py over the HT presets — flat vs
+hierarchical, and chunked (ht_num_chunks ∈ {2, 4}) vs monolithic (nc=1)
+hierarchical — with the shared interleaved-min timer, so host load bursts
+cannot flip the chunked-vs-monolithic comparison. Host wall time serializes
+collectives, so the pipeline's overlap itself is invisible here; what the
+rows track is the *schedule overhead* of chunking (the chunked stream must
+hold parity with the monolithic path on host time — its win is TPU-side
+async scheduling freedom, like the decode pipeline's)."""
+from benchmarks.common import (ensure_devices, timeit, interleaved_best,
+                               write_result, table, ICI_BW)
 
 ensure_devices(8)
 
@@ -44,6 +55,74 @@ def make_step(mode: str, B: int):
         out_specs=P("data"))), group
 
 
+# ---------------------------------------------------------------------------
+# prefill pipeline steady state (schema v3 rows)
+# ---------------------------------------------------------------------------
+
+PF_B, PF_MB = 512, 2                 # tokens/rank per layer, micro-batches
+PF_No, PF_Ni = 2, 4
+
+
+def make_prefill_step(variant: str):
+    """One staged prefill MoE layer (runtime/prefill.py) per host call.
+    variant: "flat" | "hier-nc1" | "hier-nc2" | "hier-nc4"."""
+    from repro.runtime.prefill import prefill_moe
+
+    Tm = PF_B // PF_MB
+    hier = variant != "flat"
+    nc = int(variant.rsplit("nc", 1)[1]) if hier else 1
+    kw = dict(num_experts=E, max_tokens_per_rank=Tm, hidden=H, top_k=Kk,
+              mode="ht", payload_dtype=jnp.bfloat16,
+              capacity_factor=1.5, expert_capacity_factor=1.5)
+    if hier:
+        cfg = EpGroupConfig(ep_axis=("pod", "data"), ht_hierarchical=True,
+                            ht_num_chunks=nc, **kw)
+        group = ep_create_group(cfg, ep_size=N, inner_size=PF_Ni)
+        mesh = jax.make_mesh((PF_No, PF_Ni), ("pod", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        spec = P(("pod", "data"))
+    else:
+        cfg = EpGroupConfig(**kw)
+        group = ep_create_group(cfg, ep_size=N)
+        mesh = jax.make_mesh((N,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        spec = P("data")
+
+    def step(x, router_w, w1, w2):
+        def router_fn(xt):
+            logits = xt.astype(jnp.float32) @ router_w
+            w, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), Kk)
+            return idx.astype(jnp.int32), w / w.sum(-1, keepdims=True)
+
+        def expert_fn(y3d, counts):
+            g = K.grouped_gemm(y3d, w1[0], counts)
+            return K.grouped_gemm(
+                jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype),
+                w2[0], counts)
+
+        return prefill_moe(group, router_fn, expert_fn, x[0], PF_MB)[None]
+
+    return jax.jit(jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(spec, P(None, None), spec, spec), out_specs=spec))
+
+
+def prefill_rows(rng):
+    router_w = jnp.asarray(rng.randn(H, E) * 0.1, jnp.float32)
+    w1 = jnp.asarray(rng.randn(N, E // N, H, F) * 0.05, jnp.bfloat16)
+    w2 = jnp.asarray(rng.randn(N, E // N, F, H) * 0.05, jnp.bfloat16)
+    x = jnp.asarray(rng.randn(N, PF_B, H), jnp.bfloat16)
+    variants = ["flat", "hier-nc1", "hier-nc2", "hier-nc4"]
+    fns = [make_prefill_step(v) for v in variants]
+    times = interleaved_best(fns, [(x, router_w, w1, w2)] * len(fns), iters=4)
+    base = times[variants.index("hier-nc1")]     # monolithic hier = reference
+    rows = [dict(variant=v, tokens_per_rank=PF_B, microbatches=PF_MB,
+                 per_layer_ms=round(t * 1e3, 1),
+                 vs_monolithic_hier=round(base / t, 2))
+            for v, t in zip(variants, times)]
+    return rows
+
+
 def main():
     rng = np.random.RandomState(0)
     w1 = jnp.asarray(rng.randn(N, E // N, H, F) * 0.05, jnp.bfloat16)
@@ -62,8 +141,17 @@ def main():
         rows.append(row)
     table(rows, ["tokens_per_rank", "ll_ms", "ht_ms", "baseline_ms"],
           "Table III analogue: mode crossover by batch (host wall, 8 ranks)")
-    write_result("modes_crossover", dict(config=dict(E=E, K=Kk, H=H, N=N),
-                                         rows=rows))
+    p_rows = prefill_rows(rng)
+    table(p_rows, ["variant", "tokens_per_rank", "per_layer_ms",
+                   "vs_monolithic_hier"],
+          f"prefill pipeline steady state (staged driver, {PF_MB} "
+          "micro-batches, min-of-interleaved)")
+    write_result("modes_crossover", dict(
+        config=dict(E=E, K=Kk, H=H, N=N),
+        rows=rows,
+        prefill=dict(config=dict(B=PF_B, microbatches=PF_MB, No=PF_No,
+                                 Ni=PF_Ni, E=E, K=Kk, H=H, F=F),
+                     rows=p_rows)))
     return rows
 
 

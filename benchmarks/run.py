@@ -15,9 +15,11 @@ Each sub-benchmark needs its own fake-device count, so they run as separate
 processes; results land in results/benchmarks/*.json. After the ll and
 slotmap benchmarks run, their results are folded into ``BENCH_ll_kernels.json``
 at the repo root — the machine-readable perf trajectory (schema
-bench_ll_kernels/v2: handle-create / dispatch / combine phase times,
-recv-unpack kernel timings, slot-map engine comparison, and the
-decode-pipeline steady-state rows) tracked across PRs.
+bench_ll_kernels/v3: handle-create / dispatch / combine phase times,
+recv-unpack kernel timings, slot-map engine comparison, the decode-pipeline
+steady-state rows, and the modes section — LL/HT/baseline crossover plus the
+prefill-pipeline steady-state rows: chunked vs monolithic hierarchical HT
+and hier vs flat through the staged driver) tracked across PRs.
 """
 import argparse
 import json
@@ -40,22 +42,24 @@ RESULTS = ROOT / "results" / "benchmarks"
 
 
 def emit_bench_ll_kernels() -> bool:
-    """Fold ll (per-phase + recv-unpack), slotmap, and decode-pipeline
-    results into BENCH_ll_kernels.json at the repo root, if the ll and
-    slotmap source files exist (decode is folded when present). Each
-    source's mtime is recorded so mixed-provenance results (e.g. `--only ll`
-    next to a week-old slotmap run) are visible in the emitted file.
-    Returns True when written."""
+    """Fold ll (per-phase + recv-unpack), slotmap, decode-pipeline, and
+    modes (crossover + prefill pipeline) results into BENCH_ll_kernels.json
+    at the repo root, if the ll and slotmap source files exist (decode and
+    modes are folded when present). Each source's mtime is recorded so
+    mixed-provenance results (e.g. `--only ll` next to a week-old slotmap
+    run) are visible in the emitted file. Returns True when written."""
     import datetime
 
     src_ll = RESULTS / "ll_kernels.json"
     src_sm = RESULTS / "slotmap.json"
     src_dp = RESULTS / "decode_pipeline.json"
+    src_md = RESULTS / "modes_crossover.json"
     if not (src_ll.exists() and src_sm.exists()):
         return False
     ll = json.loads(src_ll.read_text())
     sm = json.loads(src_sm.read_text())
     dp = json.loads(src_dp.read_text()) if src_dp.exists() else None
+    md = json.loads(src_md.read_text()) if src_md.exists() else None
 
     def stamp(p):
         return datetime.datetime.fromtimestamp(p.stat().st_mtime).isoformat(
@@ -64,8 +68,10 @@ def emit_bench_ll_kernels() -> bool:
     sources = {"ll_kernels": stamp(src_ll), "slotmap": stamp(src_sm)}
     if dp is not None:
         sources["decode_pipeline"] = stamp(src_dp)
+    if md is not None:
+        sources["modes"] = stamp(src_md)
     payload = {
-        "schema": "bench_ll_kernels/v2",
+        "schema": "bench_ll_kernels/v3",
         "sources": sources,
         "config": ll.get("config", {}),
         "phases": ll.get("rows", []),       # handle/dispatch/combine per layout
@@ -75,6 +81,10 @@ def emit_bench_ll_kernels() -> bool:
     if dp is not None:
         # steady-state decode: naive vs pipelined + handle create vs refresh
         payload["decode_pipeline"] = dp
+    if md is not None:
+        # mode crossover + prefill pipeline steady state (chunked-vs-
+        # monolithic hierarchical HT, hier vs flat, staged driver)
+        payload["modes"] = md
     (ROOT / "BENCH_ll_kernels.json").write_text(json.dumps(payload, indent=1))
     print(f"wrote {ROOT / 'BENCH_ll_kernels.json'}")
     return True

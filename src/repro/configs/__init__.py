@@ -36,7 +36,7 @@ SHAPES = {
     "long_500k": (524288, 1, "decode"),
 }
 
-# long_500k runs only for sub-quadratic archs (see DESIGN.md §5)
+# long_500k runs only for sub-quadratic archs (see docs/DESIGN.md §5)
 LONG_OK = {"mamba2-780m", "zamba2-7b", "gemma3-27b"}
 
 

@@ -21,7 +21,7 @@ def full_config(shape=None):
         # Flat (single-stage) a2a beats the hierarchical two-stage on the
         # single-pod mesh: both EP axes are same-fabric ICI, so the 2x bytes
         # of the extra hop are never paid back (measured: memory 499->163s,
-        # collective 183->88s — EXPERIMENTS.md §Perf D3). Hierarchy remains
+        # collective 183->88s — docs/EXPERIMENTS.md §Perf D3). Hierarchy remains
         # the right choice only when EP spans the genuinely slower pod axis.
         moe = MoESpec(
             num_experts=256, top_k=8, d_ff_expert=2048, shared_experts=1,

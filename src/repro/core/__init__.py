@@ -2,10 +2,13 @@
 dispatch/combine with LL (decode) and HT (training/prefill) algorithm modes,
 two-tier group/handle resources, and a Megatron-style AllToAll baseline."""
 from repro.core.api import (  # noqa: F401
-    EpGroup, EpGroupConfig, EpHandle, ep_create_group, ep_create_handle,
-    ep_handle_refresh, ep_dispatch, ep_combine, ep_complete,
+    EpGroup, EpGroupConfig, EpHandle, EpPending, ep_create_group,
+    ep_create_handle, ep_handle_refresh, ep_dispatch, ep_combine, ep_complete,
     ep_handle_get_num_recv_tokens, ep_handle_destroy, ep_dispatch_tensors,
-    ep_combine_tensors,
+    ep_combine_tensors, registered_modes,
+)
+from repro.core.backend import (  # noqa: F401
+    BaseBackend, EpBackend, get_backend, register_backend,
 )
 from repro.core.plan import EpPlan, build_plan, routing_hash  # noqa: F401
 from repro.core.routing import RouterConfig, RouterOutput, route  # noqa: F401

@@ -17,6 +17,15 @@ handle is shared between forward and backward (the Megatron "cached dispatch"
 integration, §VI-B): JAX AD transposes dispatch into combine and vice versa
 through the same traced slot maps, so handle reuse is automatic.
 
+Every entry point routes through the ``EpBackend`` registry
+(core/backend.py) keyed by ``group.mode`` — the API layer contains no
+per-mode branching and no pending-type ``isinstance`` chains. The staged
+surface is part of the backend contract: ``send_only=True`` returns a
+mode-tagged ``EpPending`` and ``ep_complete`` finishes it, for **every**
+registered mode (LL decode overlap, HT prefill pipelining, baseline
+apples-to-apples) — a backend may refuse with ``NotImplementedError`` but
+may never accept the flag and silently run eager.
+
 `ep_create_handle` also derives the complete slot-map chain for every phase
 (the `EpPlan` engine, core/plan.py) — dispatch and combine are then pure
 single-pass data movement over precomputed maps; no slot arithmetic runs
@@ -31,21 +40,22 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.group import (EpGroup, EpGroupConfig, EpHandle, ep_create_group,
                               ep_handle_get_num_recv_tokens, ep_handle_destroy)
-from repro.core import ll as _ll
-from repro.core import ht as _ht
-from repro.core import baseline as _bl
+from repro.core.backend import EpPending, get_backend, registered_modes
+# importing the mode modules registers their backends with the registry
+from repro.core import ll as _ll        # noqa: F401
+from repro.core import ht as _ht        # noqa: F401
+from repro.core import baseline as _bl  # noqa: F401
 from repro.core import plan as _plan
 from repro.core.tensor import EpTensor, EpTensorTag, validate
 
 __all__ = [
-    "EpGroup", "EpGroupConfig", "EpHandle", "ep_create_group",
+    "EpGroup", "EpGroupConfig", "EpHandle", "EpPending", "ep_create_group",
     "ep_create_handle", "ep_handle_refresh", "ep_dispatch", "ep_combine",
     "ep_complete", "ep_handle_get_num_recv_tokens", "ep_handle_destroy",
-    "ep_dispatch_tensors", "ep_combine_tensors",
+    "ep_dispatch_tensors", "ep_combine_tensors", "registered_modes",
 ]
 
 
@@ -55,13 +65,9 @@ def ep_create_handle(group: EpGroup, topk_idx: jax.Array,
 
     HT/baseline run their metadata exchange here (paper §III-C2); LL's
     exchange is folded in too (strictly earlier than the paper's in-dispatch
-    headers, see DESIGN.md §2)."""
-    mode = group.mode
-    if mode == "ll":
-        return _ll.ll_create_handle(group, topk_idx, topk_weights, num_tokens)
-    if mode == "ht":
-        return _ht.ht_create_handle(group, topk_idx, topk_weights, num_tokens)
-    return _bl.baseline_create_handle(group, topk_idx, topk_weights, num_tokens)
+    headers, see docs/DESIGN.md §2)."""
+    return get_backend(group.mode).create_handle(group, topk_idx,
+                                                 topk_weights, num_tokens)
 
 
 def ep_handle_refresh(group: EpGroup, handle: EpHandle,
@@ -86,34 +92,26 @@ def ep_dispatch(group: EpGroup, handle: EpHandle, tokens: jax.Array, *,
     """``ncclEpDispatch``: route tokens to their experts.
 
     Returns (expert_major [L, A, H], tokens_per_expert [L]) — or, with
-    send_only=True in LL mode, a PendingDispatch for staged overlap."""
-    mode = group.mode
-    if mode == "ll":
-        return _ll.ll_dispatch(group, handle, tokens, send_only=send_only)
-    if mode == "ht":
-        return _ht.ht_dispatch(group, handle, tokens, send_only=send_only)
-    return _bl.baseline_dispatch(group, handle, tokens, send_only=send_only)
+    send_only=True, a mode-tagged EpPending for staged overlap (honored by
+    every registered backend)."""
+    return get_backend(group.mode).dispatch(group, handle, tokens,
+                                            send_only=send_only)
 
 
 def ep_combine(group: EpGroup, handle: EpHandle, expert_out: jax.Array, *,
                send_only: bool = False):
     """``ncclEpCombine``: gather expert outputs, weighted-reduce to original
     token order. Input layout must match the group's dispatch output."""
-    mode = group.mode
-    if mode == "ll":
-        return _ll.ll_combine(group, handle, expert_out, send_only=send_only)
-    if mode == "ht":
-        return _ht.ht_combine(group, handle, expert_out, send_only=send_only)
-    return _bl.baseline_combine(group, handle, expert_out, send_only=send_only)
+    return get_backend(group.mode).combine(group, handle, expert_out,
+                                           send_only=send_only)
 
 
-def ep_complete(group: EpGroup, handle: EpHandle, pending):
-    """``ncclEpComplete``: finalize a staged (send_only) operation."""
-    if isinstance(pending, _ll.PendingDispatch):
-        return _ll.ll_complete_dispatch(group, handle, pending)
-    if isinstance(pending, _ll.PendingCombine):
-        return _ll.ll_complete_combine(group, handle, pending)
-    raise TypeError(f"not a pending EP operation: {type(pending)}")
+def ep_complete(group: EpGroup, handle: EpHandle, pending: EpPending):
+    """``ncclEpComplete``: finalize a staged (send_only) operation.
+
+    Routes by the pending's mode/op tags through the backend registry; a
+    pending created under a different mode than the group's fails loudly."""
+    return get_backend(group.mode).complete(group, handle, pending)
 
 
 # ---------------------------------------------------------------------------

@@ -10,18 +10,22 @@ NCCL-EP paths that show up directly in the roofline terms:
   * per-(expert, source) capacity blocks — padding is allocated and *moved*
     per expert pair rather than per rank pair, inflating collective bytes by
     ~L/E·cf relative to need;
-  * no staged execution, no quantization — payloads travel at model dtype.
+  * no quantization — payloads travel at model dtype.
 
 Interface-compatible with LL/HT: returns the [L, A, H] expert-major tensor +
-counts so the same expert FFN consumes it. Like LL/HT, the permutation maps
-are precomputed once per handle by the EpPlan engine; dispatch/combine are
-single gather passes.
+counts so the same expert FFN consumes it, and — through the ``EpBackend``
+protocol (core/backend.py) — honors the same staged ``send_only=True`` +
+``ep_complete`` surface (the a2a is the send half; the unpermute/reduce is
+the complete half), so drivers built on the staged contract run unchanged on
+the baseline for apples-to-apples comparisons. Like LL/HT, the permutation
+maps are precomputed once per handle by the EpPlan engine; dispatch/combine
+are single gather passes.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.backend import BaseBackend, EpPending, register_backend
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
 from repro.core import plan as P
@@ -53,25 +57,71 @@ def baseline_create_handle(group, topk_idx, topk_weights, num_tokens=None) -> Ep
     return ht_create_handle(group, topk_idx, topk_weights, num_tokens)
 
 
-def baseline_dispatch(group: EpGroup, handle: EpHandle, x: jax.Array, *, send_only=False):
-    N, L = group.ep_size, group.local_experts
-    Ce = _per_expert_cap(group)
+def baseline_dispatch_send(group: EpGroup, handle: EpHandle, x: jax.Array) -> EpPending:
     plan = P.ensure_plan(group, handle)
     send, _ = K.dispatch_pack(x, plan.disp_send_gmap,
                               out_dtype=group.cfg.payload_dtype)  # [N, L*Ce, H]
-    recv = _a2a(send, group)                         # [N, L*Ce, H]
-    H = recv.shape[-1]
-    out = recv.reshape(N, L, Ce, H).transpose(1, 0, 2, 3).reshape(L, N * Ce, H)
+    return EpPending(mode="baseline", op="dispatch", recv=_a2a(send, group))
+
+
+def baseline_dispatch_complete(group: EpGroup, handle: EpHandle, pending: EpPending):
+    N, L = group.ep_size, group.local_experts
+    Ce = _per_expert_cap(group)
+    plan = P.ensure_plan(group, handle)
+    H = pending.recv.shape[-1]
+    out = pending.recv.reshape(N, L, Ce, H).transpose(1, 0, 2, 3).reshape(L, N * Ce, H)
     return out, plan.disp_counts
 
 
-def baseline_combine(group: EpGroup, handle: EpHandle, y3d: jax.Array, *, send_only=False):
+def baseline_combine_send(group: EpGroup, handle: EpHandle, y3d: jax.Array) -> EpPending:
     N, L = group.ep_size, group.local_experts
     Ce = _per_expert_cap(group)
     H = y3d.shape[-1]
-    plan = P.ensure_plan(group, handle)
     send = (y3d.reshape(L, N, Ce, H).transpose(1, 0, 2, 3)
             .reshape(N, L * Ce, H).astype(group.cfg.payload_dtype))
-    recv = _a2a(send, group)                         # [N, L*Ce, H] back at src
-    return K.combine_gather_reduce(S.flat_rows(recv), plan.comb_recv_rows,
-                                   handle.topk_weights)
+    return EpPending(mode="baseline", op="combine",
+                     recv=_a2a(send, group))     # [N, L*Ce, H] back at src
+
+
+def baseline_combine_complete(group: EpGroup, handle: EpHandle, pending: EpPending):
+    plan = P.ensure_plan(group, handle)
+    return K.combine_gather_reduce(S.flat_rows(pending.recv),
+                                   plan.comb_recv_rows, handle.topk_weights)
+
+
+def baseline_dispatch(group: EpGroup, handle: EpHandle, x: jax.Array, *, send_only=False):
+    pending = baseline_dispatch_send(group, handle, x)
+    if send_only:
+        return pending
+    return baseline_dispatch_complete(group, handle, pending)
+
+
+def baseline_combine(group: EpGroup, handle: EpHandle, y3d: jax.Array, *, send_only=False):
+    pending = baseline_combine_send(group, handle, y3d)
+    if send_only:
+        return pending
+    return baseline_combine_complete(group, handle, pending)
+
+
+class BaselineBackend(BaseBackend):
+    """Megatron-style a2a dispatcher behind the EpBackend protocol."""
+
+    mode = "baseline"
+
+    def create_handle(self, group, topk_idx, topk_weights, num_tokens=None):
+        return baseline_create_handle(group, topk_idx, topk_weights, num_tokens)
+
+    def dispatch_send(self, group, handle, tokens):
+        return baseline_dispatch_send(group, handle, tokens)
+
+    def dispatch_complete(self, group, handle, pending):
+        return baseline_dispatch_complete(group, handle, pending)
+
+    def combine_send(self, group, handle, expert_out):
+        return baseline_combine_send(group, handle, expert_out)
+
+    def combine_complete(self, group, handle, pending):
+        return baseline_combine_complete(group, handle, pending)
+
+
+register_backend(BaselineBackend())

@@ -56,6 +56,11 @@ class EpGroupConfig:
     ep_axis: AxisNames = ("data",)
     ht_hierarchical: bool = False             # 2-stage a2a when EP = (outer, inner)
     ht_pod_dedup: bool = False                # stage-3 dedup (perf option)
+    # Chunked hierarchical pipeline: the token dim is split into this many
+    # static chunks and the two a2a stages stream — chunk i's intra-pod hop
+    # overlaps chunk i-1's inter-pod hop (HybridEP-style pipelining). 1 =
+    # monolithic (bitwise-identical output for any value at zero-drop caps).
+    ht_num_chunks: int = 1
     slot_align: int = 8                       # capacity rounding (TPU lane-friendly)
 
     LL_BATCH_THRESHOLD = 128  # paper: LL targets 1–128 tokens/rank
@@ -89,6 +94,17 @@ class EpGroup:
     @property
     def mode(self) -> str:
         return self.cfg.resolved_mode()
+
+    def ht_chunks(self, num_tokens: int) -> int:
+        """Static chunk count for a ``num_tokens``-token hierarchical handle
+        (the handle may carry fewer tokens than ``max_tokens_per_rank``, but
+        the chunk grid must still tile it exactly)."""
+        nc = self.cfg.ht_num_chunks
+        if num_tokens % nc != 0:
+            raise ValueError(
+                f"ht_num_chunks={nc} must divide the handle's token count "
+                f"{num_tokens}")
+        return nc
 
     # ---- buffer byte accounting (for Eq. 3 benchmark + roofline) ----
     def payload_bytes_per_token(self) -> int:
@@ -156,9 +172,18 @@ def ep_create_group(
     else:
         ht_expert_cap = _round_up(int(math.ceil(ecf * N * B * K / E)), 128)
     # Hierarchical stages: stage1 dedup over distinct destination-inner index,
-    # stage2 dedup over distinct destination chip.
+    # stage2 dedup over distinct destination chip. Capacities are PER CHUNK:
+    # the chunked pipeline (cfg.ht_num_chunks) streams B/nc-token slices
+    # through each stage, so each stage buffer sizes to the slice.
+    nc = cfg.ht_num_chunks
+    if nc < 1:
+        raise ValueError(f"ht_num_chunks={nc} must be >= 1")
+    if B % nc != 0:
+        raise ValueError(
+            f"ht_num_chunks={nc} must divide max_tokens_per_rank={B}")
+    Bc = B // nc
     ki = min(K, inner_size)
-    ht_stage1_cap = cap(B * ki / inner_size, B)
+    ht_stage1_cap = cap(Bc * ki / inner_size, Bc)
     # a rail chip holds <= inner_size * C1 entries, fanned over outer axis
     ko = min(K, outer_size) if outer_size > 1 else 1
     ht_stage2_cap = cap(inner_size * ht_stage1_cap * ko / max(outer_size, 1),

@@ -19,23 +19,41 @@ Targets training and inference prefill (4096+ tokens/rank). Two paths:
   at the rail chip before the final intra-pod hop, shrinking fast-domain
   bytes by the per-token multiplicity.
 
+  With ``ht_num_chunks > 1`` the hierarchical path is **pipelined**: the
+  token dim splits into static chunks and the two stages stream — chunk
+  *i*'s stage-1 intra-pod a2a is issued while chunk *i-1*'s stage-2
+  inter-pod a2a is still in flight (combine runs the mirror skew), so XLA's
+  async collective scheduler can overlap the fast and slow fabrics the way
+  HybridEP overlaps NVLink with RDMA. All chunk slot-map slices ship in the
+  ``EpPlan``; at zero-drop capacities the chunked stream is bitwise-
+  identical to the nc=1 monolithic path (tests/test_ht_chunked.py).
+
+Both paths honor the full staged surface: ``send_only=True`` returns a
+mode-tagged ``EpPending`` whose payload is every received-but-unconsumed
+buffer (for the chunked pipeline, the concatenation of per-chunk stage
+outputs), and ``ep_complete`` finishes with the single destination-side
+pass — which is what lets runtime drivers overlap HT collectives with the
+grouped-GEMM expert pass (runtime/prefill.py).
+
 Metadata (the paper's handle-creation exchange, §III-C2) is the all-gathered
 ``topk_idx``; every rank derives the full slot-map chain locally — exactly
 once, in the ``EpPlan`` engine (core/plan.py) at handle creation — so payload
 messages carry zero header bytes (see slots.py) and every dispatch/combine
 phase below is a single gather/scatter pass over precomputed int32 maps (the
-one-pass-per-phase invariant). Send paths run the fused ``dispatch_pack``
-kernel; every dispatch-recv unpack (flat recv, both hierarchical stages)
-runs its mirror ``recv_unpack`` through the shared ``core.recv.unpack_recv``
-helper — gather + in-kernel fp8 dequantization, never a gather followed by a
-separate dequant pass; flat combine-recv runs the fused
-``combine_gather_reduce`` kernel.
+one-pass-per-phase invariant; chunked phases are one pass *per chunk slice*,
+each over its own precomputed map). Send paths run the fused
+``dispatch_pack`` kernel; every dispatch-recv unpack (flat recv, both
+hierarchical stages) runs its mirror ``recv_unpack`` through the shared
+``core.recv.unpack_recv`` helper — gather + in-kernel fp8 dequantization,
+never a gather followed by a separate dequant pass; flat combine-recv runs
+the fused ``combine_gather_reduce`` kernel.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import BaseBackend, EpPending, register_backend
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
 from repro.core import plan as P
@@ -68,112 +86,208 @@ def _hierarchical(group: EpGroup) -> bool:
     return group.cfg.ht_hierarchical and len(group.cfg.ep_axis) > 1 and group.outer_size > 1
 
 
-# --------------------------------------------------------------------------
-# flat path (single EP axis)
-# --------------------------------------------------------------------------
-
 def _flat_axis(group):
     a = group.cfg.ep_axis
     return a if len(a) > 1 else a[0]
 
 
-def ht_dispatch_flat(group: EpGroup, handle: EpHandle, x: jax.Array):
+# --------------------------------------------------------------------------
+# flat path (single EP axis)
+# --------------------------------------------------------------------------
+
+def _flat_dispatch_send(group: EpGroup, handle: EpHandle, x: jax.Array) -> EpPending:
     plan = P.ensure_plan(group, handle)
     send, scales = _pack(group, x, plan.disp_send_gmap)      # [N, C, ...]
     recv = _a2a(send, _flat_axis(group))
     recv_s = _a2a(scales, _flat_axis(group)) if scales is not None else None
-    # receiver: one fused unpack pass into the deterministic [L, A, H] layout
-    out = unpack_recv(recv, plan.disp_recv_gmap, recv_s)
-    return out, plan.disp_counts
+    return EpPending(mode="ht", op="dispatch", recv=recv, recv_scales=recv_s)
 
 
-def ht_combine_flat(group: EpGroup, handle: EpHandle, y3d: jax.Array):
+def _flat_combine_send(group: EpGroup, handle: EpHandle, y3d: jax.Array) -> EpPending:
     """Mirror a2a: expert side repacks [L, A, H] into the same [N, C, H]
-    blocks (same slots as dispatch), then the source applies the weighted
-    reduction — fused gather+reduce at the receiver, matching LL semantics."""
+    blocks (same slots as dispatch); the source applies the weighted
+    reduction at complete time — fused gather+reduce, matching LL."""
     plan = P.ensure_plan(group, handle)
     send, _ = K.dispatch_pack(S.flat_rows(y3d), plan.comb_send_gmap,
                               out_dtype=group.cfg.payload_dtype)
-    recv = _a2a(send, _flat_axis(group))                     # [N, C, H]
-    return K.combine_gather_reduce(S.flat_rows(recv), plan.comb_recv_rows,
-                                   handle.topk_weights)
+    return EpPending(mode="ht", op="combine",
+                     recv=_a2a(send, _flat_axis(group)))     # [N, C, H]
+
+
+def _flat_combine_complete(group: EpGroup, handle: EpHandle, pending: EpPending):
+    plan = P.ensure_plan(group, handle)
+    return K.combine_gather_reduce(S.flat_rows(pending.recv),
+                                   plan.comb_recv_rows, handle.topk_weights)
 
 
 # --------------------------------------------------------------------------
-# hierarchical path (two-stage, pod-aware)
+# hierarchical path (two-stage, pod-aware, chunk-pipelined)
 # --------------------------------------------------------------------------
 
-def ht_dispatch_hier(group: EpGroup, handle: EpHandle, x: jax.Array):
+def _hier_dispatch_send(group: EpGroup, handle: EpHandle, x: jax.Array) -> EpPending:
+    """Chunk-skewed two-stage stream. Iteration *i* of the lax-collective
+    schedule issues chunk *i*'s stage-1 intra-pod a2a AND chunk *i-1*'s
+    stage-2 inter-pod a2a — neither depends on the other, so XLA's async
+    scheduler may run the fast-fabric and slow-fabric hops concurrently
+    (HybridEP's NVLink/RDMA overlap). Per chunk, each stage is one fused
+    pass over its precomputed map slice."""
     ax_o, ax_i = group.cfg.ep_axis[0], group.cfg.ep_axis[-1]
     plan = P.ensure_plan(group, handle)
+    nc = plan.h_gmap1.shape[0]
 
-    # ---- stage 1: fused pack + intra-pod a2a -> rail chips hold [Ni, C1, H]
-    send1, scales1 = _pack(group, x, plan.h_gmap1)
-    recv1 = _a2a(send1, ax_i)
-    recv1_s = _a2a(scales1, ax_i) if scales1 is not None else None
+    recv1, recv1_s = [None] * nc, [None] * nc
+    recv2, recv2_s = [None] * nc, [None] * nc
+    for i in range(nc + 1):
+        if i < nc:
+            # ---- stage 1, chunk i: fused pack + intra-pod a2a -> rail
+            # chips hold [Ni, C1, H] of this chunk's tokens
+            send1, scales1 = _pack(group, x, plan.h_gmap1[i])
+            recv1[i] = _a2a(send1, ax_i)
+            if scales1 is not None:
+                recv1_s[i] = _a2a(scales1, ax_i)
+        if i > 0:
+            # ---- stage 2, chunk i-1 (overlaps chunk i's stage 1): rail
+            # fans held rows over destination pods — a copy-mode unpack
+            # (payload stays quantized across the slow hop; scales ride)
+            j = i - 1
+            send2 = unpack_recv(recv1[j], plan.h_gmap2[j])
+            recv2[j] = _a2a(send2, ax_o)                     # [No, C2, H]
+            if recv1_s[j] is not None:
+                recv2_s[j] = _a2a(unpack_recv(recv1_s[j], plan.h_gmap2[j]),
+                                  ax_o)
+    recv = jnp.concatenate([S.flat_rows(r) for r in recv2], axis=0)
+    recv_s = (jnp.concatenate([S.flat_rows(r) for r in recv2_s], axis=0)
+              if recv2_s[0] is not None else None)
+    return EpPending(mode="ht", op="dispatch", recv=recv, recv_scales=recv_s)
 
-    # ---- stage 2: rail fans held rows over destination pods — a copy-mode
-    # unpack (payload stays quantized across the slow hop; scales ride along)
-    send2 = unpack_recv(recv1, plan.h_gmap2)
-    recv2 = _a2a(send2, ax_o)                                # [No, C2, H]
-    recv2_s = None
-    if recv1_s is not None:
-        recv2_s = _a2a(unpack_recv(recv1_s, plan.h_gmap2), ax_o)
 
-    # ---- unpack at destination chip: one fused pass (gather + dequant)
-    out = unpack_recv(recv2, plan.disp_recv_gmap, recv2_s)
+def ht_dispatch_complete(group: EpGroup, handle: EpHandle, pending: EpPending):
+    """Shared dispatch finish (flat and hierarchical): one fused pass
+    (gather + dequant) through the plan's expert-region map over the
+    received blocks — for the chunked pipeline, their concatenation."""
+    plan = P.ensure_plan(group, handle)
+    out = unpack_recv(pending.recv, plan.disp_recv_gmap, pending.recv_scales)
     return out, plan.disp_counts
 
 
-def ht_combine_hier(group: EpGroup, handle: EpHandle, y3d: jax.Array):
-    """Reverse path with hierarchical reduction: weight at the expert chip,
-    partial-sum per token at the stage-2 slot, reduce across pods at the rail,
-    final sum across rails at the source chip. All maps precomputed; all
+def _hier_combine_send(group: EpGroup, handle: EpHandle, y3d: jax.Array) -> EpPending:
+    """Reverse path with hierarchical reduction, mirror-skewed: chunk *i*'s
+    inter-pod a2a is issued while chunk *i-1*'s rail reduction + intra-pod
+    a2a drains. Weight at the expert chip, partial-sum per token at the
+    stage-2 slot, reduce across pods at the rail; the final cross-rail sum
+    at the source chip is the complete step. All maps precomputed; all
     H-wide work stays in the slot domain (<= L*A rows): materializing
     per-global-entry rows (No*Ni*T*K of them) costed ~870 GB/layer on the
     deepseek train cell — slot-domain rewrite is ~200x less traffic
-    (EXPERIMENTS.md §Perf D2)."""
+    (docs/EXPERIMENTS.md §Perf D2)."""
     ax_o, ax_i = group.cfg.ep_axis[0], group.cfg.ep_axis[-1]
     Ni, No = group.inner_size, group.outer_size
     C1, C2 = group.ht_stage1_cap, group.ht_stage2_cap
     plan = P.ensure_plan(group, handle)
     H = y3d.shape[-1]
     dt = group.cfg.payload_dtype
+    nc = plan.h_gmap1.shape[0]
 
-    # ---- expert side: weighted scatter-add into [No, C2, H]
+    # ---- expert side: weighted rows once, then ONE scatter-add into the
+    # chunk-concatenated [nc*No*C2, H] stage-2 buffer (each y3d slot lands
+    # in its source token's chunk slice) — the H-wide slot-domain work stays
+    # <= L*A rows regardless of nc; the stream below just slices per chunk
     weighted = S.flat_rows(y3d).astype(jnp.float32) * plan.h_w_slot[:, None]
-    buf2 = jnp.zeros((No * C2 + 1, H), jnp.float32).at[
+    buf2 = jnp.zeros((nc * No * C2 + 1, H), jnp.float32).at[
         plan.h_slot_tgt].add(weighted, mode="drop")
-    back2 = _a2a(buf2[:-1].reshape(No, C2, H).astype(dt), ax_o)   # -> rails
+    back2, back1 = [None] * nc, [None] * nc
+    for i in range(nc + 1):
+        if i < nc:
+            # ---- chunk i: its slice of the weighted buffer -> pods
+            back2[i] = _a2a(buf2[i * No * C2:(i + 1) * No * C2]
+                            .reshape(No, C2, H).astype(dt), ax_o)
+        if i > 0:
+            # ---- chunk i-1 (overlaps chunk i's inter-pod hop): rail
+            # scatter-add accumulates partials from every pod into the
+            # held-slot buffer (second reduction level), then -> sources
+            j = i - 1
+            vals = S.gather_rows(S.flat_rows(back2[j]).astype(jnp.float32),
+                                 plan.h_rail_src_rows[j].reshape(-1))
+            buf_rail = jnp.zeros((Ni * C1 + 1, H), jnp.float32).at[
+                plan.h_rail_dst_rows[j].reshape(-1)].add(vals)
+            back1[j] = _a2a(buf_rail[:-1].reshape(Ni, C1, H).astype(dt), ax_i)
+    return EpPending(mode="ht", op="combine",
+                     recv=jnp.concatenate([S.flat_rows(b) for b in back1],
+                                          axis=0))
 
-    # ---- rail: one scatter-add accumulates partials from every pod into the
-    # held-slot buffer (second reduction level); sentinel rows no-op via pads.
-    vals = S.gather_rows(S.flat_rows(back2).astype(jnp.float32),
-                         plan.h_rail_src_rows.reshape(-1))
-    buf_rail = jnp.zeros((Ni * C1 + 1, H), jnp.float32).at[
-        plan.h_rail_dst_rows.reshape(-1)].add(vals)
-    back1 = _a2a(buf_rail[:-1].reshape(Ni, C1, H).astype(dt), ax_i)  # -> sources
 
-    # ---- source chip: sum contributions across rails
-    parts = S.gather_rows(S.flat_rows(back1), plan.h_src_rows)   # [T, Ni, H]
+def _hier_combine_complete(group: EpGroup, handle: EpHandle, pending: EpPending):
+    """Source chip: sum contributions across rails — one gather over the
+    chunk-concatenated stage-1 buffers in token order."""
+    plan = P.ensure_plan(group, handle)
+    dt = group.cfg.payload_dtype
+    parts = S.gather_rows(pending.recv, plan.h_src_rows)     # [T, Ni, H]
     return jnp.sum(parts.astype(jnp.float32), axis=1).astype(
         jnp.bfloat16 if dt == jnp.bfloat16 else jnp.float32)
 
 
 # --------------------------------------------------------------------------
-# unified HT entry points
+# unified HT entry points (staged halves + derived eager surface)
 # --------------------------------------------------------------------------
 
-def ht_dispatch(group: EpGroup, handle: EpHandle, x: jax.Array, *, send_only=False):
+def ht_dispatch_send(group: EpGroup, handle: EpHandle, x: jax.Array) -> EpPending:
     if _hierarchical(group):
-        return ht_dispatch_hier(group, handle, x)
-    return ht_dispatch_flat(group, handle, x)
+        return _hier_dispatch_send(group, handle, x)
+    return _flat_dispatch_send(group, handle, x)
+
+
+def ht_combine_send(group: EpGroup, handle: EpHandle, y3d: jax.Array) -> EpPending:
+    if _hierarchical(group):
+        return _hier_combine_send(group, handle, y3d)
+    return _flat_combine_send(group, handle, y3d)
+
+
+def ht_combine_complete(group: EpGroup, handle: EpHandle, pending: EpPending):
+    if _hierarchical(group):
+        return _hier_combine_complete(group, handle, pending)
+    return _flat_combine_complete(group, handle, pending)
+
+
+def ht_dispatch(group: EpGroup, handle: EpHandle, x: jax.Array, *, send_only=False):
+    pending = ht_dispatch_send(group, handle, x)
+    if send_only:
+        return pending
+    return ht_dispatch_complete(group, handle, pending)
 
 
 def ht_combine(group: EpGroup, handle: EpHandle, y3d: jax.Array, *, send_only=False):
-    if _hierarchical(group):
-        return ht_combine_hier(group, handle, y3d)
-    return ht_combine_flat(group, handle, y3d)
+    pending = ht_combine_send(group, handle, y3d)
+    if send_only:
+        return pending
+    return ht_combine_complete(group, handle, pending)
+
+
+# --------------------------------------------------------------------------
+# backend registration
+# --------------------------------------------------------------------------
+
+class HtBackend(BaseBackend):
+    """HT mode behind the EpBackend protocol (flat + chunked hierarchical)."""
+
+    mode = "ht"
+
+    def create_handle(self, group, topk_idx, topk_weights, num_tokens=None):
+        return ht_create_handle(group, topk_idx, topk_weights, num_tokens)
+
+    def dispatch_send(self, group, handle, tokens):
+        return ht_dispatch_send(group, handle, tokens)
+
+    def dispatch_complete(self, group, handle, pending):
+        return ht_dispatch_complete(group, handle, pending)
+
+    def combine_send(self, group, handle, expert_out):
+        return ht_combine_send(group, handle, expert_out)
+
+    def combine_complete(self, group, handle, pending):
+        return ht_combine_complete(group, handle, pending)
+
+
+register_backend(HtBackend())
 
 
 # --------------------------------------------------------------------------

@@ -35,9 +35,10 @@ Across decode steps, handles are steady-state-cheap: ``ep_handle_refresh``
 its routing-hash fast path skips plan construction entirely when the routing
 replays (speculative decode, cached dispatch in backward).
 
-Both layouts support staged execution (``send_only=True`` + ``ll_complete``),
-the JAX rendering of the paper's double-buffered overlap: the returned pending
-buffers let XLA schedule the expert GEMM of one micro-batch against the
+Both layouts support staged execution (``send_only=True`` + ``ep_complete``),
+the JAX rendering of the paper's double-buffered overlap: the returned
+mode-tagged ``EpPending`` (core/backend.py — the one pending pytree shared by
+every mode) lets XLA schedule the expert GEMM of one micro-batch against the
 all-to-all of the next.
 
 Quantized dispatch (fp8 payload + fp32 scales, §IV-B) rides the same slot maps
@@ -45,11 +46,10 @@ with a parallel scales buffer.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import BaseBackend, EpPending, register_backend
 from repro.core.group import EpGroup, EpHandle
 from repro.core import slots as S
 from repro.core import plan as P
@@ -88,40 +88,26 @@ def ll_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) ->
 
 
 # --------------------------------------------------------------------------
-# staged-execution containers
-# --------------------------------------------------------------------------
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class PendingDispatch:
-    recv: jax.Array                    # [N, C, H'] raw received payload
-    recv_scales: jax.Array | None      # [N, C, H/Q] when quantized
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class PendingCombine:
-    recv: jax.Array                    # [N, C_c, H]
-
-
-# --------------------------------------------------------------------------
 # dispatch
 # --------------------------------------------------------------------------
+
+def ll_dispatch_send(group: EpGroup, handle: EpHandle, x: jax.Array) -> EpPending:
+    if group.cfg.ll_layout == "deepep":
+        return _deepep_dispatch_send(group, handle, x)
+    return _ncclep_dispatch_send(group, handle, x)
+
 
 def ll_dispatch(group: EpGroup, handle: EpHandle, x: jax.Array, *, send_only=False):
     """x: [T, H] local tokens -> (out3d [L, A, H], tokens_per_expert [L]).
 
-    With send_only=True returns a PendingDispatch (paper's staged mode)."""
-    if group.cfg.ll_layout == "deepep":
-        pending = _deepep_dispatch_send(group, handle, x)
-    else:
-        pending = _ncclep_dispatch_send(group, handle, x)
+    With send_only=True returns a mode-tagged EpPending (staged mode)."""
+    pending = ll_dispatch_send(group, handle, x)
     if send_only:
         return pending
     return ll_complete_dispatch(group, handle, pending)
 
 
-def ll_complete_dispatch(group: EpGroup, handle: EpHandle, pending: PendingDispatch):
+def ll_complete_dispatch(group: EpGroup, handle: EpHandle, pending: EpPending):
     if group.cfg.ll_layout == "deepep":
         return _deepep_dispatch_recv(group, handle, pending)
     return _ncclep_dispatch_recv(group, handle, pending)
@@ -142,7 +128,7 @@ def _ncclep_dispatch_send(group, handle, x):
     send, scales = _pack_send(group, x, plan.disp_send_gmap)   # [N, Cd, ...]
     recv = _a2a(send, group)
     recv_s = _a2a(scales, group) if scales is not None else None
-    return PendingDispatch(recv=recv, recv_scales=recv_s)
+    return EpPending(mode="ll", op="dispatch", recv=recv, recv_scales=recv_s)
 
 
 def _ncclep_dispatch_recv(group, handle, pending):
@@ -162,7 +148,7 @@ def _deepep_dispatch_send(group, handle, x):
     send, scales = _pack_send(group, x, plan.disp_send_gmap)   # [N, L*B, ...]
     recv = _a2a(send, group)
     recv_s = _a2a(scales, group) if scales is not None else None
-    return PendingDispatch(recv=recv, recv_scales=recv_s)
+    return EpPending(mode="ll", op="dispatch", recv=recv, recv_scales=recv_s)
 
 
 def _deepep_dispatch_recv(group, handle, pending):
@@ -183,18 +169,21 @@ def _deepep_dispatch_recv(group, handle, pending):
 # combine
 # --------------------------------------------------------------------------
 
+def ll_combine_send(group: EpGroup, handle: EpHandle, y3d: jax.Array) -> EpPending:
+    if group.cfg.ll_layout == "deepep":
+        return _deepep_combine_send(group, handle, y3d)
+    return _ncclep_combine_send(group, handle, y3d)
+
+
 def ll_combine(group: EpGroup, handle: EpHandle, y3d: jax.Array, *, send_only=False):
     """y3d: [L, A, H] expert outputs -> [T, H] weighted-combined tokens."""
-    if group.cfg.ll_layout == "deepep":
-        pending = _deepep_combine_send(group, handle, y3d)
-    else:
-        pending = _ncclep_combine_send(group, handle, y3d)
+    pending = ll_combine_send(group, handle, y3d)
     if send_only:
         return pending
     return ll_complete_combine(group, handle, pending)
 
 
-def ll_complete_combine(group: EpGroup, handle: EpHandle, pending: PendingCombine):
+def ll_complete_combine(group: EpGroup, handle: EpHandle, pending: EpPending):
     if group.cfg.ll_layout == "deepep":
         return _deepep_combine_recv(group, handle, pending)
     return _ncclep_combine_recv(group, handle, pending)
@@ -206,7 +195,7 @@ def _ncclep_combine_send(group, handle, y3d):
     plan = P.ensure_plan(group, handle)
     send, _ = K.dispatch_pack(S.flat_rows(y3d), plan.comb_send_gmap,
                               out_dtype=group.cfg.payload_dtype)
-    return PendingCombine(recv=_a2a(send, group))
+    return EpPending(mode="ll", op="combine", recv=_a2a(send, group))
 
 
 def _ncclep_combine_recv(group, handle, pending):
@@ -223,10 +212,38 @@ def _deepep_combine_send(group, handle, y3d):
     H = y3d.shape[-1]
     send = (y3d.reshape(L, N, B, H).transpose(1, 0, 2, 3)
             .reshape(N, L * B, H).astype(group.cfg.payload_dtype))
-    return PendingCombine(recv=_a2a(send, group))
+    return EpPending(mode="ll", op="combine", recv=_a2a(send, group))
 
 
 def _deepep_combine_recv(group, handle, pending):
     plan = P.ensure_plan(group, handle)
     return K.combine_gather_reduce(S.flat_rows(pending.recv),
                                    plan.comb_recv_rows, handle.topk_weights)
+
+
+# --------------------------------------------------------------------------
+# backend registration
+# --------------------------------------------------------------------------
+
+class LLBackend(BaseBackend):
+    """LL mode behind the EpBackend protocol (nccl_ep + deepep layouts)."""
+
+    mode = "ll"
+
+    def create_handle(self, group, topk_idx, topk_weights, num_tokens=None):
+        return ll_create_handle(group, topk_idx, topk_weights, num_tokens)
+
+    def dispatch_send(self, group, handle, tokens):
+        return ll_dispatch_send(group, handle, tokens)
+
+    def dispatch_complete(self, group, handle, pending):
+        return ll_complete_dispatch(group, handle, pending)
+
+    def combine_send(self, group, handle, expert_out):
+        return ll_combine_send(group, handle, expert_out)
+
+    def combine_complete(self, group, handle, pending):
+        return ll_complete_combine(group, handle, pending)
+
+
+register_backend(LLBackend())

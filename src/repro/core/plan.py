@@ -65,17 +65,24 @@ class EpPlan:
     # -- shared across LL / HT-flat / baseline --
     disp_send_gmap: jax.Array | None = None   # [N, C] slot -> local token row
     disp_recv_gmap: jax.Array | None = None   # [L, A] expert slot -> recv row
+    #   (hierarchical: row values address the nc-chunk concatenation of
+    #   stage-2 recv buffers, sentinel nc*No*C2)
     disp_counts: jax.Array | None = None      # [L] capacity-aware recv counts
     comb_send_gmap: jax.Array | None = None   # [N, Cc] slot -> y3d flat row
     comb_recv_rows: jax.Array | None = None   # [T, K] entry -> recv flat row
-    # -- HT hierarchical extras --
-    h_gmap1: jax.Array | None = None          # [Ni, C1] stage-1 slot -> token
-    h_gmap2: jax.Array | None = None          # [No, C2] stage-2 slot -> recv1 row
+    # -- HT hierarchical extras (leading nc axis = ht_num_chunks slices of
+    #    the token dim; nc=1 is the monolithic path, maps unchanged) --
+    h_gmap1: jax.Array | None = None          # [nc, Ni, C1] stage-1 slot -> token
+    h_gmap2: jax.Array | None = None          # [nc, No, C2] stage-2 slot -> recv1 row
     h_slot_tgt: jax.Array | None = None       # [L*A] y3d slot -> stage-2 row
+    #   (row values address the nc-chunk concatenation of stage-2 combine
+    #   buffers, sentinel nc*No*C2 — one scatter fills every chunk's slice)
     h_w_slot: jax.Array | None = None         # [L*A] f32 combine weight / slot
-    h_rail_dst_rows: jax.Array | None = None  # [No, Ni*T] rail accumulation dst
-    h_rail_src_rows: jax.Array | None = None  # [No, Ni*T] rail accumulation src
+    h_rail_dst_rows: jax.Array | None = None  # [nc, No, Ni*Tc] rail accum dst
+    h_rail_src_rows: jax.Array | None = None  # [nc, No, Ni*Tc] rail accum src
     h_src_rows: jax.Array | None = None       # [T, Ni] source-chip final gather
+    #   (row values address the nc-chunk concatenation of stage-1 combine
+    #   buffers, sentinel nc*Ni*C1)
     h_entry_slot: jax.Array | None = None     # [N*T*K] global entry -> y3d slot
     #   (sentinel L*A) — the weight-rebind chain: lets refresh_handle rebuild
     #   h_w_slot with one scatter, no slot arithmetic
@@ -427,93 +434,132 @@ def _hier_recv_chain(group, geo, me_o, me_i):
 
 
 def _ht_hier_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
-    """Two-stage scheme: every map of the dispatch chain (stage-1 dedup,
-    stage-2 fan-out, destination unpack) plus the mirror combine chain with
-    hierarchical reduction (slot-domain weighting, rail partial sums, source
-    final sum) — all derived once from the replicated routing. Weight-free:
-    combine weights are bound afterwards via ``rebind_weights`` through the
-    stored ``h_entry_slot`` chain, so a weight refresh never re-runs this."""
+    """Two-stage scheme, chunked: the token dim splits into ``ht_num_chunks``
+    static slices and every map of the dispatch chain (stage-1 dedup, stage-2
+    fan-out) plus the mirror combine chain (slot-domain weighting, rail
+    partial sums) is derived **per chunk**, so ht.py can stream the slices —
+    chunk *i*'s intra-pod a2a overlapping chunk *i-1*'s inter-pod a2a. The
+    destination-side maps (``disp_recv_gmap``, ``h_entry_slot``,
+    ``h_src_rows``) stay global: expert-region positions are computed over
+    the monolithic entry order, with row values offset into the chunk-
+    concatenated stage buffers — which is what makes the chunked pipeline
+    bitwise-identical to the nc=1 monolithic path at zero-drop capacities.
+    Weight-free: combine weights are bound afterwards via ``rebind_weights``
+    through the stored ``h_entry_slot`` chain, so a weight refresh never
+    re-runs this."""
     ax_o, ax_i = group.cfg.ep_axis[0], group.cfg.ep_axis[-1]
     L, Ni, No = group.local_experts, group.inner_size, group.outer_size
     C1, C2, A = group.ht_stage1_cap, group.ht_stage2_cap, group.ht_expert_cap
     me_o, me_i = jax.lax.axis_index(ax_o), jax.lax.axis_index(ax_i)
     me = me_o * Ni + me_i
     T, Kk = topk_idx.shape
-    geo = _hier_geometry(group, topk_g)
+    nc = group.ht_chunks(T)
+    Tc = T // nc
 
-    # ---- stage-1 send map (local chip's view)
-    s1 = geo["sends1"][me_o, me_i]                          # [T, Ni]
-    p1 = geo["pos1"][me_o, me_i]
-    t_of = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Ni)).reshape(-1)
-    i_of = jnp.broadcast_to(jnp.arange(Ni)[None, :], (T, Ni)).reshape(-1)
-    h_gmap1 = S.build_gather_map(i_of, p1.reshape(-1), t_of, s1.reshape(-1),
-                                 Ni, C1, sentinel=T)
+    g1_c, g2_c = [], []
+    el_c, entv_c, rows_c = [], [], []
+    rail_dst_c, rail_src_c, src_rows_c = [], [], []
+    for c in range(nc):
+        geo = _hier_geometry(group, topk_g[:, c * Tc:(c + 1) * Tc])
 
-    # ---- stage-2 fan map: rail (me_o, me_i) fans held tokens over dest pods
-    need = (geo["i_dst"][me_o] == me_i)                     # [Ni, T, K]
-    fan = jnp.zeros((Ni, T, No), bool).at[
-        jnp.arange(Ni)[:, None, None], jnp.arange(T)[None, :, None],
-        jnp.where(need, geo["o_dst"][me_o], No)].set(True, mode="drop")
-    ok1_me = geo["ok1"][me_o, :, :, me_i]                   # [Ni, T] held?
-    fan = fan & ok1_me[..., None]
-    o_bcast = np.broadcast_to(np.arange(No, dtype=np.int32)[None, None, :],
-                              (Ni, T, No)).reshape(-1)
-    pos2, _ = S.positions_by_dest(o_bcast, No, fan.reshape(-1))
-    row1 = jnp.arange(Ni)[:, None] * C1 + geo["pos1"][me_o, :, :, me_i]  # [Ni, T]
-    h_gmap2 = S.build_gather_map(
-        o_bcast, pos2,
-        jnp.broadcast_to(row1[..., None], (Ni, T, No)).reshape(-1),
-        fan.reshape(-1), No, C2, sentinel=Ni * C1)
+        # ---- stage-1 send map (local chip's view; src rows are GLOBAL
+        # token indices so dispatch_pack runs over the full [T, H] tokens)
+        s1 = geo["sends1"][me_o, me_i]                      # [Tc, Ni]
+        p1 = geo["pos1"][me_o, me_i]
+        t_of = jnp.broadcast_to(c * Tc + jnp.arange(Tc)[:, None],
+                                (Tc, Ni)).reshape(-1)
+        i_of = jnp.broadcast_to(jnp.arange(Ni)[None, :], (Tc, Ni)).reshape(-1)
+        g1_c.append(S.build_gather_map(i_of, p1.reshape(-1), t_of,
+                                       s1.reshape(-1), Ni, C1, sentinel=T))
 
-    # ---- destination unpack map
-    c2, ok2 = _hier_recv_chain(group, geo, me_o, me_i)
-    mine = (geo["g"] // L) == me                            # [No, Ni, T, K]
-    e_l = (geo["g"] - me * L).clip(0, L - 1)
-    ent_valid = (mine & ok2[..., None]).reshape(-1)
-    a_pos, counts = S.positions_by_dest(e_l.reshape(-1), L, ent_valid)
-    rows = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]  # [No, Ni, T, 1]
-    rows = jnp.broadcast_to(rows, (No, Ni, T, Kk)).reshape(-1)
-    disp_recv_gmap = S.build_gather_map(e_l.reshape(-1), a_pos, rows, ent_valid,
-                                        L, A, sentinel=No * C2)
+        # ---- stage-2 fan map: rail (me_o, me_i) fans chunk-held tokens
+        # over destination pods (rows address this chunk's recv1 buffer)
+        need = (geo["i_dst"][me_o] == me_i)                 # [Ni, Tc, K]
+        fan = jnp.zeros((Ni, Tc, No), bool).at[
+            jnp.arange(Ni)[:, None, None], jnp.arange(Tc)[None, :, None],
+            jnp.where(need, geo["o_dst"][me_o], No)].set(True, mode="drop")
+        ok1_me = geo["ok1"][me_o, :, :, me_i]               # [Ni, Tc] held?
+        fan = fan & ok1_me[..., None]
+        o_bcast = np.broadcast_to(np.arange(No, dtype=np.int32)[None, None, :],
+                                  (Ni, Tc, No)).reshape(-1)
+        pos2, _ = S.positions_by_dest(o_bcast, No, fan.reshape(-1))
+        row1 = jnp.arange(Ni)[:, None] * C1 + geo["pos1"][me_o, :, :, me_i]
+        g2_c.append(S.build_gather_map(
+            o_bcast, pos2,
+            jnp.broadcast_to(row1[..., None], (Ni, Tc, No)).reshape(-1),
+            fan.reshape(-1), No, C2, sentinel=Ni * C1))
 
-    # ---- combine, expert side: per-y3d-slot stage-2 target. All H-wide
-    # combine work stays in the slot domain (<= L*A rows; see ht.py).
-    slot_of_entry = jnp.where(ent_valid & (a_pos < A),
-                              e_l.reshape(-1) * A + a_pos, L * A)
-    idx2 = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]
-    idx2 = jnp.broadcast_to(idx2, (No, Ni, T, Kk)).reshape(-1)
-    idx2 = jnp.where(ent_valid, idx2, No * C2)
-    h_slot_tgt = jnp.full((L * A + 1,), No * C2, jnp.int32).at[
-        slot_of_entry].set(idx2.astype(jnp.int32), mode="drop")[:L * A]
+        # ---- destination chain (chunk-local stage-2 rows + concat offset)
+        c2, ok2 = _hier_recv_chain(group, geo, me_o, me_i)
+        mine = (geo["g"] // L) == me                        # [No, Ni, Tc, K]
+        e_l = (geo["g"] - me * L).clip(0, L - 1)
+        entv = mine & ok2[..., None]
+        r2 = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]
+        r2 = jnp.broadcast_to(r2, (No, Ni, Tc, Kk))
+        el_c.append(e_l)
+        entv_c.append(entv)
+        rows_c.append(c * (No * C2) + r2)       # into the chunk concatenation
 
-    # ---- combine, rail side: accumulate partials from every pod into the
-    # held-slot buffer. Same c2 chain per destination pod, vectorized over o_p
-    # (a single scatter-add replaces the seed's unrolled per-pod loop).
-    held = geo["ok1"][me_o, :, :, me_i]                     # [Ni, T] my rail
-    p1i = geo["pos1"][me_o, :, :, me_i]                     # [Ni, T]
-    flat1_rows = jnp.arange(Ni)[:, None] * C1 + p1i
-    needs = ((geo["i_dst"][me_o] == me_i)[None] &
-             (geo["o_dst"][me_o][None] ==
-              jnp.arange(No)[:, None, None, None])).any(-1)  # [No, Ni, T]
-    fanned = held[None] & needs
-    c2p = jnp.cumsum(fanned.reshape(No, Ni * T).astype(jnp.int32), axis=1) - 1
-    okp = fanned.reshape(No, Ni * T) & (c2p < C2)
-    h_rail_dst_rows = jnp.where(
-        okp & (p1i.reshape(-1)[None] < C1),
-        jnp.broadcast_to(flat1_rows.reshape(-1)[None], (No, Ni * T)), Ni * C1)
-    h_rail_src_rows = jnp.where(
-        okp, jnp.arange(No)[:, None] * C2 + c2p, No * C2)
+        # ---- combine, rail side: accumulate partials from every pod into
+        # the chunk's held-slot buffer (same c2 chain per destination pod,
+        # vectorized over o_p)
+        held = geo["ok1"][me_o, :, :, me_i]                 # [Ni, Tc] my rail
+        p1i = geo["pos1"][me_o, :, :, me_i]
+        flat1_rows = jnp.arange(Ni)[:, None] * C1 + p1i
+        needs = ((geo["i_dst"][me_o] == me_i)[None] &
+                 (geo["o_dst"][me_o][None] ==
+                  jnp.arange(No)[:, None, None, None])).any(-1)  # [No, Ni, Tc]
+        fanned = held[None] & needs
+        c2p = jnp.cumsum(fanned.reshape(No, Ni * Tc).astype(jnp.int32),
+                         axis=1) - 1
+        okp = fanned.reshape(No, Ni * Tc) & (c2p < C2)
+        rail_dst_c.append(jnp.where(
+            okp & (p1i.reshape(-1)[None] < C1),
+            jnp.broadcast_to(flat1_rows.reshape(-1)[None], (No, Ni * Tc)),
+            Ni * C1))
+        rail_src_c.append(jnp.where(
+            okp, jnp.arange(No)[:, None] * C2 + c2p, No * C2))
 
-    # ---- combine, source side: sum contributions across rails
-    h_src_rows = jnp.where(s1 & (p1 < C1),
-                           jnp.arange(Ni)[None, :] * C1 + p1, Ni * C1)  # [T, Ni]
+        # ---- combine, source side: rows into the chunk-concatenated
+        # stage-1 combine buffers, in token order
+        src_rows_c.append(jnp.where(
+            s1 & (p1 < C1),
+            c * (Ni * C1) + jnp.arange(Ni)[None, :] * C1 + p1,
+            nc * Ni * C1))
+
+    def glob(parts):
+        """[nc] x [No, Ni, Tc, K] -> flat [No*Ni*T*K] in MONOLITHIC entry
+        order (o, i, t, k) — chunk slices interleave back into the token dim,
+        so expert-region positions match the nc=1 plan exactly."""
+        st = jnp.stack(parts)                               # [nc, No, Ni, Tc, K]
+        return st.transpose(1, 2, 0, 3, 4).reshape(-1)
+
+    ent_valid = glob(entv_c)
+    e_l_all = glob(el_c)
+    rows_all = glob(rows_c)
+    a_pos, counts = S.positions_by_dest(e_l_all, L, ent_valid)
+    disp_recv_gmap = S.build_gather_map(e_l_all, a_pos, rows_all, ent_valid,
+                                        L, A, sentinel=nc * No * C2)
+
+    # ---- combine, expert side: per-y3d-slot stage-2 target — ONE [L*A]
+    # map whose rows address the chunk-concatenated [nc*No*C2] stage-2
+    # buffer (a y3d slot belongs to exactly one chunk — its source token's
+    # — so a single scatter fills every chunk's slice at once and the
+    # H-wide combine work stays <= L*A rows regardless of nc; ht.py slices
+    # the buffer per chunk for the a2a stream).
+    slot_of_entry = jnp.where(ent_valid & (a_pos < A), e_l_all * A + a_pos,
+                              L * A)
+    idx2g = jnp.where(ent_valid, rows_all, nc * No * C2)
+    h_slot_tgt = jnp.full((L * A + 1,), nc * No * C2, jnp.int32).at[
+        slot_of_entry].set(idx2g.astype(jnp.int32), mode="drop")[:L * A]
+
     return EpPlan(
         disp_recv_gmap=disp_recv_gmap, disp_counts=counts,
-        h_gmap1=h_gmap1, h_gmap2=h_gmap2,
+        h_gmap1=jnp.stack(g1_c), h_gmap2=jnp.stack(g2_c),
         h_slot_tgt=h_slot_tgt,
-        h_rail_dst_rows=h_rail_dst_rows.astype(jnp.int32),
-        h_rail_src_rows=h_rail_src_rows.astype(jnp.int32),
-        h_src_rows=h_src_rows.astype(jnp.int32),
+        h_rail_dst_rows=jnp.stack(rail_dst_c).astype(jnp.int32),
+        h_rail_src_rows=jnp.stack(rail_src_c).astype(jnp.int32),
+        h_src_rows=jnp.concatenate(src_rows_c, axis=0).astype(jnp.int32),
         h_entry_slot=slot_of_entry.astype(jnp.int32),
     )
 

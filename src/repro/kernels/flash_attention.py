@@ -6,7 +6,7 @@ implementation of record for the attention sublayer; the pure-XLA chunked
 formulation in models/attention.py computes the same function (and is what
 the CPU-hosted dry-run lowers), but XLA's fusion-blind cost model charges it
 full score-matrix traffic — the roofline's kernel-corrected memory term uses
-THIS kernel's Q/K/V/O byte count for the attention region (EXPERIMENTS.md
+THIS kernel's Q/K/V/O byte count for the attention region (docs/EXPERIMENTS.md
 §Roofline notes).
 
 Tiling: grid (B, Hq, Sq/bq, Sk/bk), KV innermost; m/l/acc accumulators in

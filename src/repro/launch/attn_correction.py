@@ -3,7 +3,7 @@
 Measures the attention region's fusion-blind byte charge by differencing two
 single-layer lowerings (full layer vs layer with the attention sublayer
 replaced by identity), then replaces it with the flash kernel's definitional
-Q+K+V+O traffic. Reported alongside the measured term in EXPERIMENTS.md.
+Q+K+V+O traffic. Reported alongside the measured term in docs/EXPERIMENTS.md.
 
   PYTHONPATH=src python -m repro.launch.attn_correction --arch minicpm3-4b \
       --shape prefill_32k

@@ -144,7 +144,7 @@ def main():
         if shape == "long_500k" and arch not in LONG_OK:
             rec = dict(arch=arch, shape=shape, skipped=True,
                        reason="pure full-attention arch: long_500k skipped "
-                              "per assignment (see DESIGN.md §5)")
+                              "per assignment (see docs/DESIGN.md §5)")
             out.write_text(json.dumps(rec, indent=1))
             print(f"[SKIP-noted] {arch} {shape}")
             continue

@@ -5,7 +5,7 @@ we parse the compiled module text and sum the result sizes of every
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute op
 (result size ~= operand size for these ops, within (N-1)/N). While-loop
 (scan) bodies appear once in the text — the caller multiplies per-stack terms
-by trip counts, mirroring the cost_analysis correction (DESIGN.md §6).
+by trip counts, mirroring the cost_analysis correction (docs/DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -7,7 +7,7 @@ Three terms per (arch x shape x mesh), in seconds:
   collective = collective_bytes / (chips * 50e9)   [single ICI link, per spec]
 
 HLO terms are scan-trip corrected: total = program + sum_s (trips_s-1)*body_s
-(cost_analysis counts a while-loop body once; see DESIGN.md §6). cost_analysis
+(cost_analysis counts a while-loop body once; see docs/DESIGN.md §6). cost_analysis
 FLOPs/bytes are PER-DEVICE on this backend (verified numerically), collective
 bytes are parsed per-module (whole-program scope) — so the collective term
 divides by 1, not by chips: the parse already yields per-device traffic

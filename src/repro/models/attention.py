@@ -67,7 +67,7 @@ def _scores_mask(q_pos, k_pos, window):
 # chunked online-softmax dataflow (flash attention expressed in XLA): the
 # [Sq, Sk] score matrix never materializes to HBM — per-chunk tiles live in
 # registers/VMEM after fusion. Dropped the prefill memory roofline term ~9x
-# on the minicpm3 prefill_32k cell (EXPERIMENTS.md §Perf M1).
+# on the minicpm3 prefill_32k cell (docs/EXPERIMENTS.md §Perf M1).
 CHUNKED_ATTN_THRESHOLD = 2048
 _KV_CHUNK = 1024
 
@@ -122,7 +122,7 @@ def _sdpa(q, k, v, mask, softcap, scale):
     Scores accumulate in f32 via preferred_element_type (the MXU-native form)
     WITHOUT materializing f32 copies of K/V — casting the cache would double
     decode HBM traffic (measured: 39.6->21GB bytes-accessed on the
-    internlm2 decode_32k cell, see EXPERIMENTS.md §Perf)."""
+    internlm2 decode_32k cell, see docs/EXPERIMENTS.md §Perf)."""
     B, Sq, Hq, hd = q.shape
     Hkv = k.shape[2]
     G = Hq // Hkv

@@ -50,6 +50,9 @@ class MoESpec:
     capacity_factor: float | None = 1.25
     expert_capacity_factor: float | None = 1.25
     ht_hierarchical: bool = False
+    # hierarchical-HT chunk count: >1 streams the two a2a stages (prefill
+    # pipelining, core/ht.py); must divide the per-EP-rank token count
+    ht_num_chunks: int = 1
     quantize_dispatch: bool = False
 
 

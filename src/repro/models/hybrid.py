@@ -3,7 +3,7 @@
 mamba blocks. Each application has its own KV cache. (The real Zamba2 adds
 per-application LoRA deltas on the shared block and concatenates the original
 embedding into its input; we apply the shared block on the residual stream —
-noted in DESIGN.md §Arch-applicability.)
+noted in docs/DESIGN.md §Arch-applicability.)
 """
 from __future__ import annotations
 

@@ -142,7 +142,7 @@ def mla_attention(p, x, cfg: ArchConfig, mesh, *, positions=None,
             # chunked online softmax WITH per-chunk latent decompression:
             # the full per-head K/V ([B,S,H,d]) never materializes — only the
             # compressed ckv ([B,S,r_kv]) is resident, the MLA memory win at
-            # prefill (EXPERIMENTS.md §Perf M1).
+            # prefill (docs/EXPERIMENTS.md §Perf M1).
             o = _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, x.dtype)
         else:
             k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])

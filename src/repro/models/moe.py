@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
-                        ep_dispatch, ep_combine)
+                        ep_dispatch, ep_combine, ep_complete)
 from repro.core.routing import RouterConfig, route
 from repro.kernels import ops as K
 from repro.models.config import ArchConfig
@@ -61,7 +61,7 @@ def _token_specs(mesh, ep_axis):
     "data" onto nothing and S onto ("data","model"): GSPMD cannot reshard
     that transition incrementally and fell back to full replication of
     [B,S,D] per MoE layer — measured 33.5 TiB/dev temps on the deepseek-v3
-    prefill cell. See EXPERIMENTS.md §Perf iteration D1.)"""
+    prefill cell. See docs/EXPERIMENTS.md §Perf iteration D1.)"""
     present = set(mesh.shape.keys())
     ep = tuple(a for a in ep_axis if a in present)
     b_axes = tuple(a for a in ("pod", "data") if a in present)
@@ -77,6 +77,21 @@ def _router_cfg(m) -> RouterConfig:
         routed_scaling_factor=m.routed_scaling, norm_topk_prob=m.norm_topk,
         aux_loss_weight=m.aux_loss_weight, z_loss_weight=1e-4,
     )
+
+
+def _resolve_chunks(nc: int, tokens_per_rank: int) -> int:
+    """Chunk count for this cell's per-rank token count. A configured chunk
+    count that does not tile the tokens cannot run (group creation would
+    raise) — fall back to monolithic, but LOUDLY: a preset that asks for the
+    chunked pipeline should never lose it without a trace."""
+    if tokens_per_rank % nc == 0:
+        return nc
+    import warnings
+    warnings.warn(
+        f"ht_num_chunks={nc} does not divide tokens_per_rank="
+        f"{tokens_per_rank} for this cell; running the monolithic (nc=1) "
+        "hierarchical path instead", stacklevel=2)
+    return 1
 
 
 def _expert_ffn(group, y3d, counts, w1, w3, w2, act, tp_axis):
@@ -118,6 +133,7 @@ def moe_block(p, x, cfg: ArchConfig, mesh):
         expert_capacity_factor=m.expert_capacity_factor,
         payload_dtype=cfg.dtype, quantize_dispatch=m.quantize_dispatch,
         ep_axis=ep, ht_hierarchical=m.ht_hierarchical,
+        ht_num_chunks=_resolve_chunks(m.ht_num_chunks, T),
     )
     group = ep_create_group(gcfg, ep_size=N, inner_size=ep_sizes[-1])
 
@@ -132,9 +148,18 @@ def moe_block(p, x, cfg: ArchConfig, mesh):
         logits = xt.astype(jnp.float32) @ router_w
         r = route(logits, _router_cfg(m), sel_bias)
         handle = ep_create_handle(group, r.topk_idx, r.topk_weights)
-        y3d, counts = ep_dispatch(group, handle, xt)
+        # The staged surface is every backend's primitive (eager is defined
+        # as send ∘ complete, core/backend.py), so the model layer uses it
+        # unconditionally — same trace as the eager calls, no per-mode
+        # branching, and the EpPending seam sits where a micro-batching
+        # scheduler (runtime/prefill.py's schedule) would interleave expert
+        # compute. For HT presets the send half is the whole (chunk-
+        # pipelined, when hierarchical) collective stream.
+        pend = ep_dispatch(group, handle, xt, send_only=True)
+        y3d, counts = ep_complete(group, handle, pend)
         y3d = _expert_ffn(group, y3d, counts, w1, w3, w2, cfg.act, tp_axis)
-        out = ep_combine(group, handle, y3d).astype(xs.dtype)
+        pc = ep_combine(group, handle, y3d, send_only=True)
+        out = ep_complete(group, handle, pc).astype(xs.dtype)
         # aux losses averaged over the token-carrying axes (the value is
         # invariant along a pure-TP model axis — pmean there is ill-typed)
         aux = r.aux_loss + r.z_loss

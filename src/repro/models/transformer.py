@@ -5,7 +5,7 @@ and decode-step functions. Covers families: "lm" (GQA or MLA, dense or MoE),
 modules but reuse the stack machinery here.
 
 Scan-over-layers keeps the HLO O(1) in depth (the production-framework norm);
-the dry-run's roofline corrects per-layer cost by trip count (DESIGN.md §6).
+the dry-run's roofline corrects per-layer cost by trip count (docs/DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -1,7 +1,7 @@
 """AdamW with global-norm clipping, cosine schedule, and fully sharded
 optimizer state (each moment inherits its parameter's sharding — ZeRO-3 by
 construction under GSPMD). `state_dtype` trades moment precision for HBM:
-f32 default; bf16 for the 671B-class configs (see DESIGN.md §7).
+f32 default; bf16 for the 671B-class configs (see docs/DESIGN.md §7).
 """
 from __future__ import annotations
 

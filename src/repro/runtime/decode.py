@@ -11,6 +11,12 @@ dependency between the two micro-batches' collectives and compute, so XLA's
 async collective scheduler can overlap B's all-to-all with A's unpack +
 expert GEMM, and A's combine all-to-all with B's expert GEMM.
 
+The driver is **mode-agnostic**: the staged surface is part of the
+``EpBackend`` contract (core/backend.py), so the same schedule runs over LL,
+HT (flat or chunked hierarchical), and the baseline — LL remains the decode
+preset, and runtime/prefill.py applies the same idea to the 4096+-token
+prefill regime.
+
 Steady state is also *plan-free*: handles are refreshed via
 ``ep_handle_refresh`` (routing-hash fast path) instead of rebuilt, so an
 unchanged routing (speculative-decode replay) pays one checksum compare
@@ -76,8 +82,9 @@ def pipelined_decode_step(group: EpGroup, router_fn: RouterFn,
     Handles are refreshed, not rebuilt: the routing-hash fast path reuses
     the cached slot maps whenever the (global) routing replays. Returns
     ``((out_a, out_b), (handle_a, handle_b))`` — feed the handles back in
-    for the next step."""
-    assert group.mode == "ll", "staged double buffering is the LL decode path"
+    for the next step. Mode-agnostic: the staged surface is part of the
+    EpBackend contract, so the same schedule drives LL decode, HT
+    micro-batched prefill, and the baseline."""
     ta, wa = router_fn(xa)
     tb, wb = router_fn(xb)
     ha = ep_handle_refresh(group, handles[0], wa, ta)
@@ -94,8 +101,7 @@ def decode_loop(group: EpGroup, router_fn: RouterFn, expert_fn: ExpertFn,
     only full plan construction in the window); every later step refreshes
     them. Returns the list of (out_a, out_b) pairs. Python-level loop —
     unrolls under jit, matching how a serving engine would trace a fixed
-    decode window."""
-    assert group.mode == "ll", "staged double buffering is the LL decode path"
+    decode window. Mode-agnostic (see ``pipelined_decode_step``)."""
     outs = []
     handles = None
     for xa, xb in xs:

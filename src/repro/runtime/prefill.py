@@ -1,0 +1,95 @@
+"""Chunked HT prefill pipeline — §V's throughput overlap made a driver.
+
+The hierarchical HT path earns its throughput by *streaming*: the
+chunk-pipelined dispatch (core/ht.py, ``ht_num_chunks``) overlaps the
+intra-pod hop with the inter-pod hop inside one EP call, and this driver
+adds the layer above — overlapping the HT dispatch collectives of one
+micro-batch with the grouped-GEMM expert pass of the previous one, for the
+4096+-tokens-per-rank prefill regime the paper targets with HT mode
+(decode's double buffer lives in runtime/decode.py; this is its prefill
+mirror over P-way micro-batching instead of a 2-buffer window).
+
+Built entirely on the mode-agnostic staged surface (``send_only=True`` +
+``ep_complete`` — the EpBackend contract): the schedule issues micro-batch
+*i+1*'s dispatch-send before completing micro-batch *i*, so XLA's async
+collective scheduler can run *i+1*'s all-to-alls against *i*'s expert GEMM,
+and drains every combine at the end. Because the surface is mode-agnostic
+the same driver runs on LL or the baseline for apples-to-apples benchmarks
+(benchmarks/bench_modes.py measures it), but the operating point it is
+shaped for is HT prefill.
+
+All functions are EP-level and must run inside the sharded region, like the
+EP API itself. Size the group's ``max_tokens_per_rank`` to the micro-batch
+(= T / num_microbatches) — each micro-batch carries its own handle, which is
+what keeps the per-stage buffer footprint at 1/P of the monolithic call.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import (ep_create_handle, ep_dispatch, ep_combine,
+                            ep_complete)
+from repro.core.group import EpGroup
+
+# router_fn: tokens [T, H] -> (topk_idx [T, K], topk_weights [T, K])
+RouterFn = Callable[[jax.Array], tuple[jax.Array, jax.Array]]
+# expert_fn: (y3d [L, A, H], counts [L]) -> [L, A, H]
+ExpertFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def sequential_prefill(group: EpGroup, router_fn: RouterFn,
+                       expert_fn: ExpertFn, x: jax.Array,
+                       num_microbatches: int = 2) -> jax.Array:
+    """The unpipelined reference: each micro-batch runs handle ->
+    dispatch -> expert -> combine fully serialized. Bitwise-identical to
+    ``prefill_moe`` (same handles, same staged computation, different
+    schedule) — the benchmark baseline and the parity oracle."""
+    T = x.shape[0]
+    mb = num_microbatches
+    assert T % mb == 0, (T, mb)
+    Tm = T // mb
+    outs = []
+    for i in range(mb):
+        xi = x[i * Tm:(i + 1) * Tm]
+        ti, wi = router_fn(xi)
+        h = ep_create_handle(group, ti, wi)
+        y3d, counts = ep_dispatch(group, h, xi)
+        outs.append(ep_combine(group, h, expert_fn(y3d, counts)))
+    return jnp.concatenate(outs, axis=0)
+
+
+def prefill_moe(group: EpGroup, router_fn: RouterFn, expert_fn: ExpertFn,
+                x: jax.Array, num_microbatches: int = 2) -> jax.Array:
+    """One prefill MoE layer over ``x`` [T, H], pipelined ``mb`` ways.
+
+    Skewed schedule: micro-batch *i+1*'s dispatch-send is issued before
+    micro-batch *i* is completed (its a2a overlaps *i*'s unpack + expert
+    GEMM), every combine is issued staged, and all combines drain at the
+    end — so no collective ever sits on the critical path between two
+    expert GEMMs. Returns the [T, H] combined tokens in input order."""
+    T = x.shape[0]
+    mb = num_microbatches
+    assert T % mb == 0, (T, mb)
+    Tm = T // mb
+    xs = [x[i * Tm:(i + 1) * Tm] for i in range(mb)]
+
+    handles = []
+    for xi in xs:
+        ti, wi = router_fn(xi)
+        handles.append(ep_create_handle(group, ti, wi))
+
+    pend = [None] * mb
+    pend[0] = ep_dispatch(group, handles[0], xs[0], send_only=True)
+    comb = [None] * mb
+    for i in range(mb):
+        if i + 1 < mb:      # next micro-batch's a2a in flight over this GEMM
+            pend[i + 1] = ep_dispatch(group, handles[i + 1], xs[i + 1],
+                                      send_only=True)
+        y3d, counts = ep_complete(group, handles[i], pend[i])
+        comb[i] = ep_combine(group, handles[i], expert_fn(y3d, counts),
+                             send_only=True)
+    return jnp.concatenate(
+        [ep_complete(group, handles[i], comb[i]) for i in range(mb)], axis=0)

@@ -1,0 +1,174 @@
+"""EpBackend protocol: registry routing, the mode-tagged EpPending, and the
+no-silent-ignore staged contract.
+
+The contract this file pins (ISSUE 3 / ROADMAP standing contract): every
+registered backend either *executes* ``send_only=True`` staged — returning a
+mode-tagged ``EpPending`` that ``ep_complete`` finishes to exactly the eager
+result — or raises ``NotImplementedError``. No mode may accept the flag and
+silently run eager (the seed's HT/baseline behavior). The API layer must
+contain no per-mode if/elif chains and no pending-type isinstance dispatch:
+``ep_complete`` routes through the registry for all modes.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import api as api_mod
+from repro.core import (EpGroupConfig, EpPending, ep_create_group,
+                        ep_create_handle, ep_dispatch, ep_combine,
+                        ep_complete, get_backend, registered_modes)
+
+N, E, K, T, H = 8, 16, 4, 16, 32
+
+CONFIGS = {
+    "ll": dict(mode="ll"),
+    "ll/deepep": dict(mode="ll", ll_layout="deepep"),
+    "ht": dict(mode="ht"),
+    "ht/hier": dict(mode="ht", ep_axis=("pod", "data"), ht_hierarchical=True),
+    "baseline": dict(mode="baseline"),
+}
+
+
+def make_group(kw):
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, payload_dtype=jnp.float32, **kw)
+    hier = len(cfg.ep_axis) > 1
+    return ep_create_group(cfg, ep_size=N, inner_size=4 if hier else None)
+
+
+def make_mesh(group):
+    if len(group.cfg.ep_axis) > 1:
+        return jax.make_mesh((2, 4), ("pod", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def rand_inputs(rng):
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk = jnp.asarray(
+        np.stack([np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+                  for _ in range(N)]), jnp.int32)
+    w = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    return x, topk, w
+
+
+def scale_by_expert(group, y3d):
+    from repro.core import plan as PM
+    L = group.local_experts
+    e_glob = PM.my_rank(group) * L + jnp.arange(L)
+    return y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+
+
+# --------------------------------------------------------------------------
+# registry shape
+# --------------------------------------------------------------------------
+
+def test_all_modes_registered():
+    assert registered_modes() == ("baseline", "ht", "ll")
+
+
+def test_api_layer_has_no_mode_chains():
+    """core/api.py must route exclusively through the backend registry: no
+    per-mode if/elif chains, no pending-type isinstance dispatch."""
+    fns = (api_mod.ep_create_handle, api_mod.ep_dispatch, api_mod.ep_combine,
+           api_mod.ep_complete)
+    for fn in fns:
+        assert "isinstance" not in fn.__code__.co_names, fn.__name__
+        body = inspect.getsource(fn).replace(fn.__doc__ or "", "")
+        for banned in ("if mode", "mode ==", "_ll.", "_ht.", "_bl."):
+            assert banned not in body, (fn.__name__, banned)
+
+
+# --------------------------------------------------------------------------
+# no-silent-ignore: staged executes (and matches eager) or refuses loudly
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(CONFIGS), ids=sorted(CONFIGS))
+def test_send_only_is_never_silently_ignored(name):
+    """Every registered backend must honor send_only=True: dispatch/combine
+    return an EpPending (asserted at trace time — an eager tuple would mean
+    the flag was dropped) and ep_complete finishes to exactly the eager
+    result. A backend without a staged path must raise NotImplementedError
+    instead of accepting the flag."""
+    group = make_group(CONFIGS[name])
+    mesh = make_mesh(group)
+    rng = np.random.RandomState(0)
+    x, topk, w = rand_inputs(rng)
+    hier = len(group.cfg.ep_axis) > 1
+
+    def one(xs, topk, w, staged):
+        h = ep_create_handle(group, topk, w)
+        if staged:
+            p = ep_dispatch(group, h, xs, send_only=True)
+            assert isinstance(p, EpPending), (
+                f"{name}: send_only=True dispatch ran eager (returned "
+                f"{type(p)}) — the no-silent-ignore contract forbids this")
+            assert p.mode == group.mode and p.op == "dispatch"
+            y3d, counts = ep_complete(group, h, p)
+        else:
+            y3d, counts = ep_dispatch(group, h, xs)
+        y3d = scale_by_expert(group, y3d)
+        if staged:
+            pc = ep_combine(group, h, y3d, send_only=True)
+            assert isinstance(pc, EpPending), (
+                f"{name}: send_only=True combine ran eager")
+            assert pc.mode == group.mode and pc.op == "combine"
+            return ep_complete(group, h, pc)
+        return ep_combine(group, h, y3d)
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        eager = one(x, topk, w, staged=False)
+        staged = one(x, topk, w, staged=True)
+        return eager[None], staged[None]
+
+    spec = P(("pod", "data")) if hier else P("data")
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(spec,) * 3,
+                              out_specs=(spec, spec)))
+    try:
+        eager, staged = f(x, topk, w)
+    except NotImplementedError:
+        return        # a loud refusal is the one permitted alternative
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(staged))
+
+
+# --------------------------------------------------------------------------
+# EpPending tag routing
+# --------------------------------------------------------------------------
+
+def test_complete_rejects_foreign_mode_pending():
+    p = EpPending(mode="ll", op="dispatch", recv=jnp.zeros((4, 8)))
+    with pytest.raises(ValueError, match="not transferable across modes"):
+        get_backend("ht").complete(None, None, p)
+
+
+def test_complete_rejects_non_pending():
+    with pytest.raises(TypeError, match="not a pending EP operation"):
+        get_backend("ll").complete(None, None, (jnp.zeros((2, 2)), None))
+
+
+def test_complete_rejects_unknown_op():
+    p = EpPending(mode="ll", op="frobnicate", recv=jnp.zeros((4, 8)))
+    with pytest.raises(ValueError, match="unknown pending op"):
+        get_backend("ll").complete(None, None, p)
+
+
+def test_unknown_mode_fails_loudly():
+    with pytest.raises(KeyError, match="no EP backend registered"):
+        get_backend("warp")
+
+
+def test_pending_is_pytree_with_static_tags():
+    """mode/op must be aux data (survive tracing as Python strings) and the
+    payload must be the only leaf content."""
+    p = EpPending(mode="ht", op="combine", recv=jnp.ones((2, 3)),
+                  recv_scales=None)
+    leaves, treedef = jax.tree.flatten(p)
+    assert len(leaves) == 1 and leaves[0].shape == (2, 3)
+    p2 = jax.tree.unflatten(treedef, leaves)
+    assert p2.mode == "ht" and p2.op == "combine"

@@ -139,6 +139,93 @@ def test_ht_hier_matches_flat():
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("num_chunks", [1, 2])
+def test_ht_hier_fp8_stage2_scales_bitwise(num_chunks):
+    """quantize_dispatch=True on the hierarchical path: the payload stays
+    fp8 across BOTH hops and the fp32 scales ride along the stage-2 fan
+    (core/ht.py copy-mode unpack), so the destination's fused dequant must
+    land bit-for-bit the same expert tensor as the flat single-hop path —
+    which itself is bit-for-bit the unquantized-oracle roundtrip
+    (recv_unpack's dequant of dispatch_pack's quant of x)."""
+    No, Ni, E, K, T, H = 2, 4, 16, 4, 16, 32
+    N = No * Ni
+    rng = np.random.RandomState(11)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk, w = rand_routing(rng, N, T, K, E)
+
+    def dispatch_only(cfg, mesh_shape, names, inner=None):
+        mesh = jax.make_mesh(mesh_shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+        group = ep_create_group(cfg, ep_size=N, inner_size=inner)
+
+        def step(x, topk, w):
+            h = ht.ht_create_handle(group, topk[0], w[0])
+            y3d, counts = ht.ht_dispatch(group, h, x[0])
+            return y3d[None], counts[None]
+
+        spec = P(tuple(names))
+        f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(spec,) * 3,
+                                  out_specs=(spec, spec)))
+        return f(x, topk, w)
+
+    kw = dict(num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K,
+              mode="ht", payload_dtype=jnp.float32, quantize_dispatch=True,
+              quant_block=H)
+    y_f, c_f = dispatch_only(EpGroupConfig(**kw), (N,), ("data",))
+    y_h, c_h = dispatch_only(
+        EpGroupConfig(ep_axis=("pod", "data"), ht_hierarchical=True,
+                      ht_num_chunks=num_chunks, **kw),
+        (No, Ni), ("pod", "data"), inner=Ni)
+    np.testing.assert_array_equal(np.asarray(c_f), np.asarray(c_h))
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_h))
+
+    # flat reference reconstruction: every expert-region row is exactly the
+    # fp8 quant->dequant roundtrip of its source token (scales bitwise)
+    from repro.kernels import ops as Kops
+    q, s = Kops.quantize_fp8(x.reshape(N * T, H), H)
+    xq = np.asarray(Kops.dequantize_fp8(q, s)).reshape(N, T, H)
+    y_np, c_np = np.asarray(y_f, np.float32), np.asarray(c_f)
+    L = E // N
+    for r in range(N):
+        for l in range(L):
+            rows = y_np[r, l, :int(c_np[r, l])]
+            # each non-pad row must appear among the quantized tokens routed
+            # to expert (r, l)
+            src = np.asarray(topk)
+            senders = [(rr, t) for rr in range(N) for t in range(T)
+                       if (src[rr, t] == r * L + l).any()]
+            want = np.stack([xq[rr, t] for rr, t in senders]).astype(np.float32)
+            assert rows.shape == want.shape
+            np.testing.assert_array_equal(np.sort(rows, axis=0),
+                                          np.sort(want, axis=0))
+
+
+def test_ht_hier_fp8_roundtrip_close():
+    """Full hierarchical dispatch+combine with fp8 payload: lossy only by
+    the quantization itself — compare against the oracle applied to the
+    dequantized roundtrip of x (bf16 expert rows bound the rest)."""
+    No, Ni, E, K, T, H = 2, 4, 16, 4, 16, 32
+    N = No * Ni
+    rng = np.random.RandomState(12)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk, w = rand_routing(rng, N, T, K, E)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ht", ep_axis=("pod", "data"),
+                        ht_hierarchical=True, ht_num_chunks=2,
+                        payload_dtype=jnp.float32, quantize_dispatch=True,
+                        quant_block=H)
+    out, _ = run_hier(cfg, x.reshape(No, Ni, T, H),
+                      jnp.asarray(np.asarray(topk).reshape(No, Ni, T, K)),
+                      w.reshape(No, Ni, T, K), No, Ni)
+    from repro.kernels import ops as Kops
+    q, s = Kops.quantize_fp8(x.reshape(N * T, H), H)
+    xq = jnp.asarray(np.asarray(Kops.dequantize_fp8(q, s), np.float32)
+                     ).reshape(N, T, H)
+    ref = oracle(xq, topk, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32).reshape(N, T, H),
+                               np.asarray(ref), rtol=2e-2, atol=2e-2)
+
+
 def test_ht_grad_flows():
     N, E, K, T, H = 8, 8, 2, 16, 16
     rng = np.random.RandomState(4)

@@ -1,0 +1,243 @@
+"""Chunked hierarchical HT pipeline: bitwise parity vs the monolithic path.
+
+The chunked stream (core/ht.py + the per-chunk slot-map slices in EpPlan)
+must compute exactly the same function as the nc=1 monolithic hierarchical
+path: dispatch lands the same rows in the same expert-region slots (the
+destination positions are computed over the monolithic entry order), and
+combine performs the same per-slot reductions in the same order — so at
+zero-drop capacities the outputs are bitwise identical across
+ht_num_chunks ∈ {1, 2, 4}, quantized and not. Also pins the steady-state
+contract (chunk slices ride the plan through ep_handle_refresh without
+rebuild) and the prefill driver's schedule-independence
+(runtime/prefill.py pipelined == sequential).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
+                        ep_handle_refresh, ep_dispatch, ep_combine)
+from repro.core import ht
+from repro.runtime.prefill import prefill_moe, sequential_prefill
+
+No, Ni, E, K, T, H = 2, 4, 16, 4, 16, 32
+N = No * Ni
+
+
+def make_mesh():
+    return jax.make_mesh((No, Ni), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def hier_cfg(nc, quantize=False):
+    return EpGroupConfig(
+        num_experts=E, max_tokens_per_rank=T, hidden=H, top_k=K, mode="ht",
+        ep_axis=("pod", "data"), ht_hierarchical=True, ht_num_chunks=nc,
+        payload_dtype=jnp.float32, quantize_dispatch=quantize, quant_block=H)
+
+
+def rand_inputs(rng):
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    topk = jnp.asarray(
+        np.stack([np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+                  for _ in range(N)]), jnp.int32)
+    w = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+    return x, topk, w
+
+
+def oracle(x, topk, w):
+    return x * (w * (1.0 + topk)).sum(-1)[..., None]
+
+
+def run_hier(nc, x, topk, w, quantize=False):
+    """Full dispatch -> expert-scale -> combine roundtrip; returns the
+    dispatch tensor, counts, and combined output for parity comparison."""
+    group = ep_create_group(hier_cfg(nc, quantize), ep_size=N, inner_size=Ni)
+    mesh = make_mesh()
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        h = ep_create_handle(group, topk, w)
+        y3d, counts = ep_dispatch(group, h, x)
+        me = (jax.lax.axis_index("pod") * Ni + jax.lax.axis_index("data"))
+        e_glob = me * group.local_experts + jnp.arange(group.local_experts)
+        y3d_s = y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+        out = ep_combine(group, h, y3d_s)
+        return y3d[None], counts[None], out[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(P(("pod", "data")),) * 3,
+                              out_specs=(P(("pod", "data")),) * 3))
+    return f(x, topk, w)
+
+
+@pytest.mark.parametrize("quantize", [False, True], ids=["f32", "fp8"])
+@pytest.mark.parametrize("nc", [2, 4])
+def test_chunked_bitwise_matches_monolithic(nc, quantize):
+    """ht_num_chunks ∈ {2, 4} must reproduce the nc=1 path bit for bit:
+    same dispatch tensor (same rows, same expert-region slots), same counts,
+    same combined output (same reduction sets in the same order)."""
+    rng = np.random.RandomState(0)
+    x, topk, w = rand_inputs(rng)
+    y_mono, c_mono, o_mono = run_hier(1, x, topk, w, quantize)
+    y_chnk, c_chnk, o_chnk = run_hier(nc, x, topk, w, quantize)
+    np.testing.assert_array_equal(np.asarray(y_mono), np.asarray(y_chnk))
+    np.testing.assert_array_equal(np.asarray(c_mono), np.asarray(c_chnk))
+    np.testing.assert_array_equal(np.asarray(o_mono), np.asarray(o_chnk))
+
+
+def test_chunked_roundtrip_matches_oracle():
+    """The chunked stream is still the correct function (not merely
+    self-consistent): roundtrip equals the dense oracle."""
+    rng = np.random.RandomState(1)
+    x, topk, w = rand_inputs(rng)
+    _, counts, out = run_hier(2, x, topk, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle(x, topk, w)),
+                               rtol=2e-4, atol=2e-4)
+    assert int(np.asarray(counts).sum()) == N * T * K
+
+
+def test_chunk_maps_have_chunk_axis():
+    """The plan ships per-chunk slices: leading nc axis on every stage map,
+    global maps stay chunk-concatenated."""
+    group = ep_create_group(hier_cfg(2), ep_size=N, inner_size=Ni)
+    mesh = make_mesh()
+    rng = np.random.RandomState(2)
+    _, topk, w = rand_inputs(rng)
+
+    def step(topk, w):
+        h = ep_create_handle(group, topk[0], w[0])
+        p = h.plan
+        assert p.h_gmap1.shape[:2] == (2, Ni)
+        assert p.h_gmap2.shape[:2] == (2, No)
+        # h_slot_tgt is ONE [L*A] map into the chunk-concatenated stage-2
+        # buffer (single scatter fills every chunk's slice)
+        assert p.h_slot_tgt.shape == (group.local_experts * group.ht_expert_cap,)
+        assert p.h_rail_dst_rows.shape == p.h_rail_src_rows.shape
+        assert p.h_rail_dst_rows.shape[0] == 2
+        assert p.h_src_rows.shape == (T, Ni)
+        return h.tokens_per_expert[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(P(("pod", "data")),) * 2,
+                              out_specs=P(("pod", "data"))))
+    f(topk, w)
+
+
+def test_chunk_slices_survive_refresh():
+    """ep_handle_refresh steady-state contract extends to the chunk maps: a
+    weights-only refresh rebinds h_w_slot through h_entry_slot and reuses
+    every chunk slice by identity — no rebuild."""
+    group = ep_create_group(hier_cfg(2), ep_size=N, inner_size=Ni)
+    mesh = make_mesh()
+    rng = np.random.RandomState(3)
+    x, topk, w = rand_inputs(rng)
+    w2 = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+
+    def step(x, topk, w, w2):
+        x, topk, w, w2 = x[0], topk[0], w[0], w2[0]
+        h = ep_create_handle(group, topk, w)
+        h2 = ep_handle_refresh(group, h, w2)
+        assert h2.plan.h_gmap1 is h.plan.h_gmap1
+        assert h2.plan.h_gmap2 is h.plan.h_gmap2
+        assert h2.plan.h_slot_tgt is h.plan.h_slot_tgt
+        assert h2.plan.disp_recv_gmap is h.plan.disp_recv_gmap
+        y3d, counts = ep_dispatch(group, h2, x)
+        me = (jax.lax.axis_index("pod") * Ni + jax.lax.axis_index("data"))
+        e_glob = me * group.local_experts + jnp.arange(group.local_experts)
+        y3d = y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+        return ep_combine(group, h2, y3d)[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(P(("pod", "data")),) * 4,
+                              out_specs=P(("pod", "data"))))
+    out = np.asarray(f(x, topk, w, w2))
+    np.testing.assert_allclose(out, np.asarray(oracle(x, topk, w2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunks_must_divide_tokens():
+    with pytest.raises(ValueError, match="must divide max_tokens_per_rank"):
+        hier_group = ep_create_group(  # noqa: F841
+            hier_cfg(3), ep_size=N, inner_size=Ni)
+
+
+def test_staged_hier_chunked_equals_eager():
+    """send_only + ep_complete on the chunked hierarchical path is the same
+    computation split at the EpPending boundary."""
+    group = ep_create_group(hier_cfg(2), ep_size=N, inner_size=Ni)
+    mesh = make_mesh()
+    rng = np.random.RandomState(4)
+    x, topk, w = rand_inputs(rng)
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        h = ht.ht_create_handle(group, topk, w)
+        p = ht.ht_dispatch(group, h, x, send_only=True)
+        y3d, counts = ht.ht_dispatch_complete(group, h, p)
+        y3d_e, counts_e = ht.ht_dispatch(group, h, x)
+        pc = ht.ht_combine(group, h, y3d, send_only=True)
+        out = ht.ht_combine_complete(group, h, pc)
+        out_e = ht.ht_combine(group, h, y3d_e)
+        return y3d[None], y3d_e[None], out[None], out_e[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(P(("pod", "data")),) * 3,
+                              out_specs=(P(("pod", "data")),) * 4))
+    y, ye, o, oe = map(np.asarray, f(x, topk, w))
+    np.testing.assert_array_equal(y, ye)
+    np.testing.assert_array_equal(o, oe)
+
+
+# --------------------------------------------------------------------------
+# prefill driver: pipelined == sequential, all modes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hier", [False, True], ids=["flat", "hier"])
+def test_prefill_pipeline_matches_sequential(hier):
+    """runtime/prefill.py: the skewed micro-batch schedule must be a pure
+    reordering — bitwise-equal to the sequential per-micro-batch loop."""
+    MB = 2
+    Tm = T // MB
+    if hier:
+        cfg = EpGroupConfig(
+            num_experts=E, max_tokens_per_rank=Tm, hidden=H, top_k=K,
+            mode="ht", ep_axis=("pod", "data"), ht_hierarchical=True,
+            ht_num_chunks=2, payload_dtype=jnp.float32)
+        group = ep_create_group(cfg, ep_size=N, inner_size=Ni)
+        mesh = make_mesh()
+        spec = P(("pod", "data"))
+    else:
+        cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=Tm, hidden=H,
+                            top_k=K, mode="ht", payload_dtype=jnp.float32)
+        group = ep_create_group(cfg, ep_size=N)
+        mesh = jax.make_mesh((N,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        spec = P("data")
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.float32)
+    router_w = jnp.asarray(rng.randn(H, E), jnp.float32)
+
+    def router_fn(xt):
+        logits = xt @ router_w
+        w, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+        return idx.astype(jnp.int32), w / w.sum(-1, keepdims=True)
+
+    def expert_fn(y3d, counts):
+        from repro.core import plan as PM
+        L = group.local_experts
+        e_glob = PM.my_rank(group) * L + jnp.arange(L)
+        return y3d * (1.0 + e_glob)[:, None, None].astype(y3d.dtype)
+
+    def step(x):
+        x = x[0]
+        pipe = prefill_moe(group, router_fn, expert_fn, x, MB)
+        seq = sequential_prefill(group, router_fn, expert_fn, x, MB)
+        return pipe[None], seq[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(spec,),
+                              out_specs=(spec, spec)))
+    pipe, seq = map(np.asarray, f(x))
+    np.testing.assert_array_equal(pipe, seq)

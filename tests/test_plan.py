@@ -64,9 +64,11 @@ PHASE_FNS = [
     ll._ncclep_combine_send, ll._ncclep_combine_recv,
     ll._deepep_dispatch_send, ll._deepep_dispatch_recv,
     ll._deepep_combine_send, ll._deepep_combine_recv,
-    ht.ht_dispatch_flat, ht.ht_combine_flat,
-    ht.ht_dispatch_hier, ht.ht_combine_hier,
-    baseline.baseline_dispatch, baseline.baseline_combine,
+    ht._flat_dispatch_send, ht._flat_combine_send, ht._flat_combine_complete,
+    ht._hier_dispatch_send, ht._hier_combine_send, ht._hier_combine_complete,
+    ht.ht_dispatch_complete,
+    baseline.baseline_dispatch_send, baseline.baseline_dispatch_complete,
+    baseline.baseline_combine_send, baseline.baseline_combine_complete,
 ]
 
 
@@ -81,7 +83,7 @@ def test_no_slot_arithmetic_in_phase_bodies(fn):
 
 RECV_PHASE_FNS = [
     ll._ncclep_dispatch_recv, ll._deepep_dispatch_recv,
-    ht.ht_dispatch_flat, ht.ht_dispatch_hier,
+    ht._flat_dispatch_send, ht._hier_dispatch_send, ht.ht_dispatch_complete,
 ]
 
 
