@@ -1,0 +1,119 @@
+"""EPLB imbalance sweep: skewed-routing load vs expert placement.
+
+Synthetic hot-expert workloads (Zipf-like skew over a contiguous hot
+neighborhood — the worst case for the default striping, which parks every
+hot expert on the same rank) are pushed through the real EP path under three
+placements:
+
+  contiguous — the default ``e // L`` striping (placement=None)
+  rebalanced — heat-driven greedy permutation, no extra slots (R=0)
+  redundant  — heat-driven permutation + R redundant replica slots
+
+For each we report the measured per-rank received-token counts (max, mean,
+max/mean ratio — from the handles' real ``recv_counts``, not the analytic
+expectation) and the host wall time of one dispatch->scale->combine cycle.
+The acceptance bar: rebalanced/redundant max-per-rank recv strictly below
+contiguous on the skewed rows. Results feed the ``placement`` section of
+BENCH_ll_kernels.json (schema v4) via benchmarks/run.py.
+"""
+from benchmarks.common import ensure_devices, interleaved_best, write_result, table
+
+ensure_devices(8)
+
+import dataclasses              # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax.sharding import PartitionSpec as P   # noqa: E402
+
+from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,  # noqa: E402
+                        ep_dispatch, ep_combine)
+from repro.core import placement as PL        # noqa: E402
+from repro.core import plan as plan_mod       # noqa: E402
+
+N, E, K, H = 8, 64, 4, 256
+T = 256                          # tokens per rank
+R = 16                           # redundant slots for the "redundant" variant
+
+
+def skewed_routing(rng, skew: float):
+    """[N, T, K] top-k draws from a Zipf-ish distribution concentrated on
+    the low expert ids (= rank 0's contiguous block): p(e) ∝ (1+e)^-skew.
+    skew=0 is uniform."""
+    p = (1.0 + np.arange(E)) ** -skew
+    p /= p.sum()
+    topk = np.stack([
+        np.stack([rng.choice(E, K, replace=False, p=p) for _ in range(T)])
+        for _ in range(N)])
+    return jnp.asarray(topk, jnp.int32)
+
+
+def make_cycle(placement):
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ht", payload_dtype=jnp.bfloat16,
+                        placement=placement)
+    group = ep_create_group(cfg, ep_size=N)
+    L = group.local_experts
+    se = (jnp.arange(E, dtype=jnp.int32).reshape(N, L) if placement is None
+          else jnp.asarray(PL.tables(placement).slot_expert))
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        h = ep_create_handle(group, topk, w)
+        y3d, counts = ep_dispatch(group, h, x)
+        me = plan_mod.my_rank(group)
+        y3d = y3d * (1.0 + se[me])[:, None, None].astype(y3d.dtype)
+        return ep_combine(group, h, y3d)[None], counts[None]
+
+    return jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                                 out_specs=(P("data"), P("data")))), group
+
+
+def main():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(N, T, H), jnp.bfloat16)
+    rows = []
+    for skew in (0.0, 0.8, 1.5):
+        topk = skewed_routing(rng, skew)
+        w = jax.nn.softmax(jnp.asarray(rng.randn(N, T, K), jnp.float32), -1)
+        # heat measured under the contiguous layout drives the rebalancer —
+        # the production loop (observe, then re-place)
+        fn_c, _ = make_cycle(None)
+        _, counts_c = fn_c(x, topk, w)
+        heat = PL.fold_slot_counts(None, np.asarray(counts_c))
+        variants = {
+            "contiguous": None,
+            "rebalanced": PL.rebalance(heat, N, version=1),
+            "redundant": PL.rebalance(heat, N, num_redundant=R, version=1),
+        }
+        fns, groups = zip(*(make_cycle(pl) for pl in variants.values()))
+        times = interleaved_best(list(fns), [(x, topk, w)] * len(fns), iters=4)
+        for (name, pl), fn, t in zip(variants.items(), fns, times):
+            _, counts = fn(x, topk, w)
+            per_rank = np.asarray(counts).sum(axis=1)
+            rows.append(dict(
+                skew=skew, placement=name,
+                redundant=0 if pl is None else pl.num_redundant,
+                max_rank_tokens=int(per_rank.max()),
+                mean_rank_tokens=round(float(per_rank.mean()), 1),
+                max_mean_ratio=round(float(per_rank.max() / per_rank.mean()), 3),
+                roundtrip_ms=round(t * 1e3, 2)))
+    table(rows, ["skew", "placement", "redundant", "max_rank_tokens",
+                 "mean_rank_tokens", "max_mean_ratio", "roundtrip_ms"],
+          "EPLB imbalance sweep: per-rank recv tokens by placement "
+          f"({N} ranks, E={E}, K={K}, T={T}/rank)")
+    # the acceptance bar, enforced here so CI's smoke leg trips on regression
+    for skew in (0.8, 1.5):
+        by = {r["placement"]: r for r in rows if r["skew"] == skew}
+        assert by["rebalanced"]["max_rank_tokens"] <= by["contiguous"]["max_rank_tokens"], by
+        assert by["redundant"]["max_rank_tokens"] < by["contiguous"]["max_rank_tokens"], by
+    write_result("imbalance", dict(
+        config=dict(N=N, E=E, K=K, H=H, T=T, redundant=R), rows=rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 """Paper Table VII: end-to-end serving metrics, EP backend vs the AllToAll
 baseline (our analogue of NCCL EP vs DeepEP inside vLLM). A reduced MoE model
 decodes batched requests through the full serve loop; we report output tok/s,
-TTFT, ITL mean/p99, TPOT — the exact metric set of Table VII."""
+TTFT, ITL mean/p99, TPOT — the exact metric set of Table VII — plus the EPLB
+load counters every run now tracks (per-rank max/mean heat ratio), so load
+imbalance is reported alongside latency."""
 from benchmarks.common import ensure_devices, write_result, table
 
 ensure_devices(8)
@@ -20,7 +22,7 @@ def bench_backend(mode: str, ll_layout: str = "nccl_ep",
                   pipeline_depth: int = 1):
     cfg = get_smoke("dbrx-132b")
     moe = dataclasses.replace(cfg.moe, ep_mode=mode, ll_layout=ll_layout,
-                              ep_axis=("data",))
+                              ep_axis=("data",), track_expert_heat=True)
     cfg = dataclasses.replace(cfg, moe=moe)
     mesh = jax.make_mesh((8,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
@@ -45,9 +47,11 @@ def main():
                          ttft_ms=round(m.ttft_s * 1e3, 1),
                          itl_mean_ms=round(m.itl_mean_s * 1e3, 2),
                          itl_p99_ms=round(m.itl_p99_s * 1e3, 2),
-                         tpot_ms=round(m.itl_mean_s * 1e3, 2)))
+                         tpot_ms=round(m.itl_mean_s * 1e3, 2),
+                         rank_load_imb=(None if m.rank_heat_max_mean is None
+                                        else round(m.rank_heat_max_mean, 3))))
     table(rows, ["backend", "output_tok_s", "ttft_ms", "itl_mean_ms",
-                 "itl_p99_ms", "tpot_ms"],
+                 "itl_p99_ms", "tpot_ms", "rank_load_imb"],
           "Table VII analogue: serving metrics by EP backend (16 reqs, 8 ranks)")
     write_result("serving", dict(rows=rows))
     return rows

@@ -9,17 +9,21 @@
   decode    — decode-pipeline steady state: naive vs double-buffered +
               handle refresh vs create (routing-hash fast path)
   modes     — Table III LL/HT/baseline crossover by batch size
+  placement — EPLB imbalance sweep: skewed routing, contiguous vs
+              rebalanced vs redundant expert placement (per-rank recv load)
   serving   — Table VII end-to-end serving metrics by EP backend
 
 Each sub-benchmark needs its own fake-device count, so they run as separate
 processes; results land in results/benchmarks/*.json. After the ll and
 slotmap benchmarks run, their results are folded into ``BENCH_ll_kernels.json``
 at the repo root — the machine-readable perf trajectory (schema
-bench_ll_kernels/v3: handle-create / dispatch / combine phase times,
+bench_ll_kernels/v4: handle-create / dispatch / combine phase times,
 recv-unpack kernel timings, slot-map engine comparison, the decode-pipeline
-steady-state rows, and the modes section — LL/HT/baseline crossover plus the
+steady-state rows, the modes section — LL/HT/baseline crossover plus the
 prefill-pipeline steady-state rows: chunked vs monolithic hierarchical HT
-and hier vs flat through the staged driver) tracked across PRs.
+and hier vs flat through the staged driver — and the placement section:
+the EPLB skewed-routing sweep, contiguous vs rebalanced vs redundant)
+tracked across PRs.
 """
 import argparse
 import json
@@ -27,13 +31,14 @@ import pathlib
 import subprocess
 import sys
 
-BENCHES = ["memory", "ll", "slotmap", "decode", "modes", "serving"]
+BENCHES = ["memory", "ll", "slotmap", "decode", "modes", "placement", "serving"]
 MODULES = {
     "memory": "benchmarks.bench_memory",
     "ll": "benchmarks.bench_ll_kernels",
     "slotmap": "benchmarks.bench_slotmap",
     "decode": "benchmarks.bench_decode_pipeline",
     "modes": "benchmarks.bench_modes",
+    "placement": "benchmarks.bench_imbalance",
     "serving": "benchmarks.bench_serving",
 }
 
@@ -54,12 +59,14 @@ def emit_bench_ll_kernels() -> bool:
     src_sm = RESULTS / "slotmap.json"
     src_dp = RESULTS / "decode_pipeline.json"
     src_md = RESULTS / "modes_crossover.json"
+    src_pl = RESULTS / "imbalance.json"
     if not (src_ll.exists() and src_sm.exists()):
         return False
     ll = json.loads(src_ll.read_text())
     sm = json.loads(src_sm.read_text())
     dp = json.loads(src_dp.read_text()) if src_dp.exists() else None
     md = json.loads(src_md.read_text()) if src_md.exists() else None
+    pl = json.loads(src_pl.read_text()) if src_pl.exists() else None
 
     def stamp(p):
         return datetime.datetime.fromtimestamp(p.stat().st_mtime).isoformat(
@@ -70,8 +77,10 @@ def emit_bench_ll_kernels() -> bool:
         sources["decode_pipeline"] = stamp(src_dp)
     if md is not None:
         sources["modes"] = stamp(src_md)
+    if pl is not None:
+        sources["placement"] = stamp(src_pl)
     payload = {
-        "schema": "bench_ll_kernels/v3",
+        "schema": "bench_ll_kernels/v4",
         "sources": sources,
         "config": ll.get("config", {}),
         "phases": ll.get("rows", []),       # handle/dispatch/combine per layout
@@ -85,6 +94,10 @@ def emit_bench_ll_kernels() -> bool:
         # mode crossover + prefill pipeline steady state (chunked-vs-
         # monolithic hierarchical HT, hier vs flat, staged driver)
         payload["modes"] = md
+    if pl is not None:
+        # EPLB imbalance sweep: per-rank recv load, contiguous vs
+        # rebalanced vs redundant placement under skewed routing
+        payload["placement"] = pl
     (ROOT / "BENCH_ll_kernels.json").write_text(json.dumps(payload, indent=1))
     print(f"wrote {ROOT / 'BENCH_ll_kernels.json'}")
     return True

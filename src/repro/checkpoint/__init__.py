@@ -1,3 +1,3 @@
 from repro.checkpoint.store import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step,
+    save_checkpoint, restore_checkpoint, latest_step, rebind_expert_leaves,
 )

@@ -9,6 +9,16 @@ loaded host-side and device_put with the new sharding.
 (On a real multi-host pod each host writes its addressable shards and the
 index records the global shape; this container is single-host so the "shard"
 is the whole array — the reshard logic is identical either way.)
+
+EPLB interplay (`core/placement.py`): expert-stacked weights are stored in
+LOGICAL [E, ...] order — placements rebind them to physical slot order
+in-graph — so checkpoints are placement-independent by default and a restart
+may adopt any placement. For engines that persist the *physical* layout
+(replicated hot experts on their serving ranks), ``rebind_expert_leaves``
+converts expert leaves between placements at restore time: collapse the
+source placement's replicas to logical weights (primary replica), then
+expand for the destination placement — the elastic-EPLB analogue of the
+mesh reshard this module already does.
 """
 from __future__ import annotations
 
@@ -21,6 +31,7 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.core import placement as PL
 from repro.parallel.sharding import ParamSpec, spec_to_named_sharding
 
 # numpy can't serialize ml_dtypes natively: store raw integer views + the
@@ -48,6 +59,35 @@ def _from_savable(arr: np.ndarray, name: str):
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
+
+
+def rebind_expert_leaves(tree, expert_keys, src_placement=None,
+                         dst_placement=None):
+    """Replica-aware expert-weight rebinding between placements.
+
+    Leaves whose dict key is in ``expert_keys`` (e.g. ``w_gate``/``w_up``/
+    ``w_down``) carry a leading expert axis laid out by ``src_placement``
+    (None = logical [E, ...] order) and are re-gathered for
+    ``dst_placement`` (None = back to logical). Replicas of one expert hold
+    identical weights by construction, so collapsing reads the primary
+    replica and expanding duplicates — a rebalance that moves or replicates
+    an expert never loses weight state. All other leaves pass through
+    untouched."""
+    keys = set(expert_keys)
+
+    def rebind(path, leaf):
+        name = next((p.key for p in reversed(path)
+                     if isinstance(p, jax.tree_util.DictKey)), None)
+        if name not in keys:
+            return leaf
+        w = leaf
+        if src_placement is not None:
+            w = PL.collapse_expert_params(w, src_placement)
+        if dst_placement is not None:
+            w = PL.expand_expert_params(w, dst_placement)
+        return w
+
+    return jax.tree_util.tree_map_with_path(rebind, tree)
 
 
 def save_checkpoint(ckpt_dir, step: int, tree, *, extra: dict | None = None):

@@ -10,6 +10,11 @@ from repro.core.api import (  # noqa: F401
 from repro.core.backend import (  # noqa: F401
     BaseBackend, EpBackend, get_backend, register_backend,
 )
+from repro.core.placement import (  # noqa: F401
+    EpPlacement, HeatTracker, identity_placement, redundant_placement,
+    rebalance, heat_from_topk, fold_slot_counts, rank_loads, imbalance,
+    expand_expert_params, collapse_expert_params,
+)
 from repro.core.plan import EpPlan, build_plan, routing_hash  # noqa: F401
 from repro.core.routing import RouterConfig, RouterOutput, route  # noqa: F401
 from repro.core.tensor import EpTensor, EpTensorTag, ep_tensor_create  # noqa: F401

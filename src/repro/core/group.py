@@ -61,6 +61,13 @@ class EpGroupConfig:
     # overlaps chunk i-1's inter-pod hop (HybridEP-style pipelining). 1 =
     # monolithic (bitwise-identical output for any value at zero-drop caps).
     ht_num_chunks: int = 1
+    # EPLB (core/placement.py): explicit expert placement table with optional
+    # redundant replicas. None = the contiguous striping (expert e at rank
+    # e // L — the exact pre-placement arithmetic, untouched). A placement
+    # with redundant slots implies num_redundant_experts; setting the count
+    # without a table is an error (the table defines where replicas live).
+    placement: "object | None" = None         # EpPlacement | None
+    num_redundant_experts: int = 0
     slot_align: int = 8                       # capacity rounding (TPU lane-friendly)
 
     LL_BATCH_THRESHOLD = 128  # paper: LL targets 1–128 tokens/rank
@@ -78,7 +85,9 @@ class EpGroup:
 
     cfg: EpGroupConfig
     ep_size: int                 # N — total EP ranks
-    local_experts: int           # L = E / N
+    # L — physical expert slots per rank: E / N contiguous, (E + R) / N under
+    # a redundant placement (every buffer/capacity shape keys off this)
+    local_experts: int
     # --- LL capacities ---
     ll_disp_cap: int             # C_d: slots per (src,dst) rank pair, dispatch
     ll_comb_cap: int             # C_c: slots per (src,dst) rank pair, combine
@@ -94,6 +103,26 @@ class EpGroup:
     @property
     def mode(self) -> str:
         return self.cfg.resolved_mode()
+
+    @property
+    def placement(self):
+        """The group's EpPlacement, or None for the contiguous default."""
+        return self.cfg.placement
+
+    @property
+    def placement_salt(self) -> int:
+        """Placement fingerprint mixed into the routing hash (0 for the
+        contiguous default, so pre-placement hash values are unchanged). A
+        placement swap changes the salt, which forces ``ep_handle_refresh``
+        to rebuild stale handles while routing replays under an unchanged
+        placement keep the fast path."""
+        pl = self.cfg.placement
+        return 0 if pl is None else pl.fingerprint()
+
+    @property
+    def physical_experts(self) -> int:
+        """Total physical expert slots (= num_experts + redundant replicas)."""
+        return self.ep_size * self.local_experts
 
     def ht_chunks(self, num_tokens: int) -> int:
         """Static chunk count for a ``num_tokens``-token hierarchical handle
@@ -141,9 +170,31 @@ def ep_create_group(
 
     E, K, B = cfg.num_experts, cfg.top_k, cfg.max_tokens_per_rank
     N = ep_size
-    if E % N != 0:
-        raise ValueError(f"num_experts={E} must divide by ep_size={N}")
-    L = E // N
+    # EPLB: a placement table defines the physical slot grid (logical experts
+    # + redundant replicas); the contiguous default keeps L = E / N.
+    R = cfg.num_redundant_experts
+    if cfg.placement is not None:
+        pl = cfg.placement
+        if pl.num_experts != E:
+            raise ValueError(f"placement covers {pl.num_experts} experts, "
+                             f"group has num_experts={E}")
+        if pl.num_ranks != N:
+            raise ValueError(f"placement spans {pl.num_ranks} ranks, "
+                             f"group has ep_size={N}")
+        if R not in (0, pl.num_redundant):
+            raise ValueError(
+                f"num_redundant_experts={R} contradicts the placement's "
+                f"{pl.num_redundant} redundant slots")
+        R = pl.num_redundant
+    elif R:
+        raise ValueError(
+            f"num_redundant_experts={R} requires an explicit placement "
+            "(the table defines where replicas live — build one with "
+            "repro.core.placement.rebalance or redundant_placement)")
+    if (E + R) % N != 0:
+        raise ValueError(f"num_experts={E} (+{R} redundant) must divide by "
+                         f"ep_size={N}")
+    L = (E + R) // N
     cf = cfg.capacity_factor
     al = cfg.slot_align
 

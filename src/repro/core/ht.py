@@ -78,7 +78,7 @@ def ht_create_handle(group: EpGroup, topk_idx, topk_weights, num_tokens=None) ->
     return EpHandle(
         topk_idx=topk_idx, topk_weights=topk_weights, topk_global=topk_g,
         tokens_per_expert=counts, num_recv_tokens=counts.sum(), num_tokens=nt,
-        plan=plan, routing_hash=P.routing_hash(topk_g),
+        plan=plan, routing_hash=P.routing_hash(topk_g, group.placement_salt),
     )
 
 

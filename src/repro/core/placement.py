@@ -1,0 +1,400 @@
+"""EPLB: expert placement & load balancing (the production layer the paper's
+striped-expert assumption leaves out).
+
+Every mode so far assumed experts are striped contiguously across EP ranks —
+``e // L`` was baked into every plan builder and into the capacity math. Under
+real serving traffic routing is skewed: one hot expert saturates its rank's
+dispatch slots while neighbors idle (the imbalance UBEP's production superpod
+re-architecture and HybridEP's skew-aware transmission both address, see
+PAPERS.md). This module makes placement an explicit, swappable table:
+
+* ``EpPlacement`` — logical expert -> [(rank, local_slot)] with optional
+  redundant replicas. Stored as nested tuples so it is hashable and can live
+  inside the (static) ``EpGroupConfig``; derived numpy tables are cached.
+  The contiguous layout is ``placement=None`` on the group config — that
+  default path keeps the exact ``e // L`` arithmetic, untouched.
+
+* replica selection — ``assign`` resolves (expert, source rank) to ONE
+  physical (rank, slot) as ``src_rank % num_replicas``: a pure function of
+  replicated routing metadata, so sender and receiver derive identical slot
+  coordinates with zero extra communication (the same determinism argument
+  as core/slots.py), and a hot expert's load round-robins across its
+  replicas by source rank. Resolution happens **at plan time only** — phase
+  bodies stay single-pass over precomputed maps (docs/DESIGN.md §8).
+
+* heat — per-logical-expert token counts folded from routing histograms or
+  from the per-slot ``recv_counts`` (``fold_slot_counts``), accumulated by
+  ``HeatTracker`` (optional exponential decay for drifting traffic).
+
+* ``rebalance`` — the greedy policy: give each of the R redundant slots to
+  the expert with the highest per-replica load, then LPT-pack all replicas
+  onto ranks minimizing the max per-rank load (replicas of one expert prefer
+  distinct ranks, where the round-robin selection actually splits load).
+
+Placement swaps are host-level events between steps: a new placement means a
+new (static) group, and ``ep_handle_refresh`` force-rebuilds stale handles
+because the routing hash is salted with the placement fingerprint — while a
+routing replay under an unchanged placement still takes the fast path. The
+runtime drivers (`runtime/decode.py::rebalancing_decode_loop`,
+`runtime/prefill.py::rebalancing_prefill`, `runtime/server.py` serving hook)
+wire heat -> policy -> live re-plan on top of this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EpPlacement:
+    """Physical expert layout: ``slot_expert[r][s]`` is the logical expert
+    hosted in rank *r*'s local slot *s*. Hashable (nested tuples) so it can
+    ride in the static ``EpGroupConfig``; every logical expert must appear in
+    at least one slot, and slots beyond the first are redundant replicas.
+    ``version`` distinguishes successive rebalances that happen to emit the
+    same table (it feeds the placement fingerprint that salts the routing
+    hash, so a swap always forces handle rebuild)."""
+
+    num_experts: int
+    slot_expert: tuple[tuple[int, ...], ...]    # [num_ranks][slots_per_rank]
+    version: int = 0
+
+    def __post_init__(self):
+        E, tbl = self.num_experts, self.slot_expert
+        if not tbl or not tbl[0]:
+            raise ValueError("placement table must be non-empty")
+        S = len(tbl[0])
+        if any(len(r) != S for r in tbl):
+            raise ValueError("placement rows must have equal slot counts")
+        seen = np.zeros(E, bool)
+        for row in tbl:
+            for e in row:
+                if not (0 <= e < E):
+                    raise ValueError(f"slot expert {e} out of range [0, {E})")
+                seen[e] = True
+        if not seen.all():
+            missing = np.nonzero(~seen)[0][:8].tolist()
+            raise ValueError(f"experts {missing} have no placement slot")
+
+    @property
+    def num_ranks(self) -> int:
+        return len(self.slot_expert)
+
+    @property
+    def slots_per_rank(self) -> int:
+        return len(self.slot_expert[0])
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_ranks * self.slots_per_rank
+
+    @property
+    def num_redundant(self) -> int:
+        return self.num_slots - self.num_experts
+
+    def is_identity(self) -> bool:
+        """True iff this is exactly the contiguous striping (no replicas)."""
+        if self.num_slots != self.num_experts:
+            return False
+        S = self.slots_per_rank
+        return all(e == r * S + s
+                   for r, row in enumerate(self.slot_expert)
+                   for s, e in enumerate(row))
+
+    def fingerprint(self) -> int:
+        """Nonzero uint32 identifying (table, version) — the salt that the
+        routing hash mixes in so a placement swap always forces handle
+        rebuild. Deterministic across processes (crc32, not Python hash)."""
+        flat = np.asarray([e for row in self.slot_expert for e in row],
+                          np.int64)
+        fp = zlib.crc32(flat.tobytes())
+        fp ^= (self.version * 0x9E3779B1) & 0xFFFFFFFF
+        return fp or 1
+
+
+def identity_placement(num_experts: int, num_ranks: int) -> EpPlacement:
+    """The explicit rendering of the default contiguous striping: expert e at
+    (e // L, e % L). Bitwise-identical behavior to ``placement=None`` is
+    pinned by tests/test_placement.py."""
+    if num_experts % num_ranks:
+        raise ValueError(f"num_experts={num_experts} must divide by "
+                         f"num_ranks={num_ranks}")
+    L = num_experts // num_ranks
+    return EpPlacement(num_experts, tuple(
+        tuple(range(r * L, (r + 1) * L)) for r in range(num_ranks)))
+
+
+# --------------------------------------------------------------------------
+# derived tables + plan-time assignment
+# --------------------------------------------------------------------------
+
+class PlacementTables(NamedTuple):
+    """Numpy renderings of the placement, cached per EpPlacement. Row E of
+    each replica table is the padding-sentinel expert: rank=num_ranks,
+    slot=slots_per_rank — out of range everywhere, exactly like ``E // L``
+    under the contiguous layout."""
+
+    replica_rank: np.ndarray    # [E+1, Rmax] int32
+    replica_slot: np.ndarray    # [E+1, Rmax] int32
+    replica_count: np.ndarray   # [E+1] int32 (>= 1)
+    slot_expert: np.ndarray     # [N, S] int32
+    primary_row: np.ndarray     # [E] int32 — flat (rank*S + slot) of replica 0
+
+
+@functools.lru_cache(maxsize=128)
+def tables(placement: EpPlacement) -> PlacementTables:
+    E, N, S = placement.num_experts, placement.num_ranks, placement.slots_per_rank
+    reps: list[list[tuple[int, int]]] = [[] for _ in range(E)]
+    for r, row in enumerate(placement.slot_expert):
+        for s, e in enumerate(row):
+            reps[e].append((r, s))           # rank-major replica order
+    rmax = max(len(x) for x in reps)
+    rank_t = np.full((E + 1, rmax), N, np.int32)
+    slot_t = np.full((E + 1, rmax), S, np.int32)
+    count_t = np.ones((E + 1,), np.int32)
+    for e, rs in enumerate(reps):
+        count_t[e] = len(rs)
+        for j, (r, s) in enumerate(rs):
+            rank_t[e, j], slot_t[e, j] = r, s
+        for j in range(len(rs), rmax):       # pad with the primary replica
+            rank_t[e, j], slot_t[e, j] = rs[0]
+    se = np.asarray(placement.slot_expert, np.int32)
+    primary = np.asarray([rs[0][0] * S + rs[0][1] for rs in reps], np.int32)
+    return PlacementTables(rank_t, slot_t, count_t, se, primary)
+
+
+def assign(placement: EpPlacement, experts, src_rank):
+    """Resolve global expert ids to physical (rank, slot) at plan time.
+
+    ``experts`` may include the padding sentinel ``num_experts`` (-> rank N,
+    slot S, out of range everywhere). ``src_rank`` (broadcastable to
+    ``experts``) picks the replica as ``src_rank % replica_count`` — a pure
+    function of replicated metadata, so every rank derives the same answer
+    and a hot expert's senders round-robin over its replicas."""
+    tb = tables(placement)
+    e = jnp.clip(jnp.asarray(experts), 0, placement.num_experts)
+    j = jnp.asarray(src_rank) % jnp.asarray(tb.replica_count)[e]
+    return (jnp.asarray(tb.replica_rank)[e, j],
+            jnp.asarray(tb.replica_slot)[e, j])
+
+
+# --------------------------------------------------------------------------
+# heat: per-logical-expert load statistics
+# --------------------------------------------------------------------------
+
+def heat_from_topk(topk_idx, num_experts: int):
+    """[E] routed-token histogram from a routing tensor (any leading shape);
+    out-of-range ids (the padding sentinel) are dropped."""
+    flat = jnp.asarray(topk_idx).reshape(-1)
+    ok = (flat >= 0) & (flat < num_experts)
+    return jnp.zeros((num_experts,), jnp.float32).at[
+        jnp.where(ok, flat, num_experts)].add(
+            ok.astype(jnp.float32), mode="drop")
+
+
+def fold_slot_counts(placement: EpPlacement | None, counts_by_rank):
+    """Fold per-physical-slot receive counts [N, S] (each rank's
+    ``recv_counts`` / ``tokens_per_expert``) into logical per-expert heat
+    [E]: replicas of one expert sum. ``placement=None`` = contiguous."""
+    c = np.asarray(counts_by_rank, np.float64)
+    if placement is None:
+        return c.reshape(-1)
+    heat = np.zeros(placement.num_experts, np.float64)
+    np.add.at(heat, tables(placement).slot_expert.reshape(-1), c.reshape(-1))
+    return heat
+
+
+class HeatTracker:
+    """Host-side heat accumulator: fold per-step heat vectors, optionally
+    with exponential decay so stale traffic ages out of the rebalancer's
+    view. ``totals`` is the current [E] float64 heat."""
+
+    def __init__(self, num_experts: int, decay: float = 0.0):
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay={decay} must be in [0, 1)")
+        self.totals = np.zeros(num_experts, np.float64)
+        self.decay = decay
+
+    def update(self, heat) -> np.ndarray:
+        h = np.asarray(heat, np.float64)
+        if h.shape != self.totals.shape:
+            raise ValueError(f"heat shape {h.shape} != {self.totals.shape}")
+        if self.decay:
+            self.totals *= 1.0 - self.decay
+        self.totals += h
+        return self.totals
+
+
+def rank_loads(heat, placement: EpPlacement | None, num_ranks: int | None = None):
+    """Expected per-rank load [N] under a placement: each expert's heat
+    splits evenly over its replicas (the round-robin selection's steady
+    state). ``placement=None`` (contiguous) needs ``num_ranks``."""
+    h = np.asarray(heat, np.float64)
+    if placement is None:
+        assert num_ranks is not None
+        return h.reshape(num_ranks, -1).sum(axis=1)
+    tb = tables(placement)
+    share = h / np.maximum(tb.replica_count[:-1], 1)
+    return share[tb.slot_expert].sum(axis=1)
+
+
+def imbalance(loads) -> float:
+    """max/mean load ratio (1.0 = perfectly balanced)."""
+    loads = np.asarray(loads, np.float64)
+    mean = loads.mean()
+    return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+# --------------------------------------------------------------------------
+# rebalancer: heat -> placement
+# --------------------------------------------------------------------------
+
+def rebalance(heat, num_ranks: int, *, num_redundant: int = 0,
+              version: int = 1) -> EpPlacement:
+    """Greedy placement minimizing the max per-rank load.
+
+    1. Replica counts: every expert gets one slot; each of the
+       ``num_redundant`` extra slots goes to the expert with the current
+       highest per-replica load (heat / replicas) — DeepSeek-EPLB-style
+       redundancy for the hottest experts.
+    2. Packing: replicas sorted by descending per-replica load are LPT-packed
+       onto ranks (least-loaded rank with a free slot wins; replicas of one
+       expert prefer distinct ranks, since the source-rank round-robin only
+       splits load across *ranks*). Fully deterministic: ties break by
+       expert id then rank id."""
+    h = np.asarray(heat, np.float64)
+    E = h.size
+    P = E + num_redundant
+    if num_redundant < 0:
+        raise ValueError(f"num_redundant={num_redundant} must be >= 0")
+    if P % num_ranks:
+        raise ValueError(
+            f"num_experts+num_redundant={P} must divide by num_ranks={num_ranks}")
+    S = P // num_ranks
+    rc = np.ones(E, np.int64)
+    for _ in range(num_redundant):
+        e = int(np.argmax(h / rc))           # argmax: first index on ties
+        rc[e] += 1
+    items = sorted(
+        ((h[e] / rc[e], e) for e in range(E) for _ in range(rc[e])),
+        key=lambda t: (-t[0], t[1]))
+    loads = np.zeros(num_ranks, np.float64)
+    rows: list[list[int]] = [[] for _ in range(num_ranks)]
+    hosted: list[set[int]] = [set() for _ in range(num_ranks)]
+    for load, e in items:
+        cand = [r for r in range(num_ranks)
+                if len(rows[r]) < S and e not in hosted[r]]
+        if not cand:                          # forced: co-host a replica
+            cand = [r for r in range(num_ranks) if len(rows[r]) < S]
+        r = min(cand, key=lambda r: (loads[r], r))
+        rows[r].append(e)
+        hosted[r].add(e)
+        loads[r] += load
+    return EpPlacement(E, tuple(tuple(r) for r in rows), version=version)
+
+
+def redundant_placement(num_experts: int, num_ranks: int, num_redundant: int,
+                        version: int = 0) -> EpPlacement:
+    """Uniform-heat convenience: replicate ``num_redundant`` experts (ties
+    resolve to the lowest ids) and pack — the zero-knowledge starting point
+    before any heat has been observed."""
+    return rebalance(np.ones(num_experts), num_ranks,
+                     num_redundant=num_redundant, version=version)
+
+
+class RebalanceScheduler:
+    """Host-side EPLB schedule shared by the runtime drivers
+    (`runtime/decode.py`, `runtime/prefill.py`, `runtime/server.py`):
+    ``observe`` folds heat, ``advance`` emits the placement for the next
+    window. When the rebalancer reproduces the current slot table verbatim
+    (steady traffic), the SAME placement object is returned — version and
+    fingerprint unchanged — so per-placement compiled-function caches keep
+    hitting and the refresh fast path survives the boundary."""
+
+    def __init__(self, num_experts: int, num_ranks: int, *,
+                 num_redundant: int = 0, decay: float = 0.0,
+                 rebalance_fn=None, initial: EpPlacement | None = None):
+        self.tracker = HeatTracker(num_experts, decay=decay)
+        self.num_ranks = num_ranks
+        self.num_redundant = num_redundant
+        self.rebalance_fn = rebalance_fn or rebalance
+        self.placement = initial
+        self._version = 0
+
+    def observe(self, heat):
+        self.tracker.update(np.asarray(heat, np.float64))
+
+    def advance(self) -> EpPlacement:
+        new = self.rebalance_fn(self.tracker.totals, self.num_ranks,
+                                num_redundant=self.num_redundant,
+                                version=self._version + 1)
+        if (self.placement is not None
+                and new.slot_expert == self.placement.slot_expert):
+            return self.placement            # unchanged table: reuse object
+        self._version += 1
+        self.placement = (new if new.version == self._version
+                          else dataclasses.replace(new, version=self._version))
+        return self.placement
+
+
+def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
+                    ep_size: int, num_redundant: int = 0,
+                    inner_size: int | None = None, decay: float = 0.0,
+                    rebalance_fn=None):
+    """Shared skeleton of the host-level EPLB drivers (`runtime/decode.py`,
+    `runtime/prefill.py`): run each item through a per-placement compiled
+    fn, fold its heat, and advance the placement at every ``advance_every``
+    item boundary (never after the last item). ``make_fn(group)`` builds the
+    caller's jit/shard_map-wrapped unit returning ``(out, heat)``; fns are
+    cached per placement object, so an unchanged rebalance table (the
+    scheduler's dedup) re-traces nothing. Returns ``(outs, placements)``,
+    one entry per item."""
+    import dataclasses as _dc
+
+    from repro.core.group import ep_create_group
+
+    if advance_every < 1:
+        raise ValueError(f"rebalance_every={advance_every} must be >= 1")
+    sched = RebalanceScheduler(
+        base_cfg.num_experts, ep_size, num_redundant=num_redundant,
+        decay=decay, rebalance_fn=rebalance_fn, initial=base_cfg.placement)
+    pl = base_cfg.placement
+    fns: dict = {}
+    outs, placements = [], []
+    for i, item in enumerate(items):
+        cfg = _dc.replace(base_cfg, placement=pl, num_redundant_experts=0)
+        group = ep_create_group(cfg, ep_size=ep_size, inner_size=inner_size)
+        if pl not in fns:
+            fns[pl] = make_fn(group)
+        out, heat = fns[pl](item)
+        outs.append(out)
+        placements.append(pl)
+        sched.observe(heat)
+        if (i + 1) % advance_every == 0 and i + 1 < len(items):
+            pl = sched.advance()
+    return outs, placements
+
+
+# --------------------------------------------------------------------------
+# replica-aware expert-parameter rebinding
+# --------------------------------------------------------------------------
+
+def expand_expert_params(w, placement: EpPlacement):
+    """Logical expert-stacked weights [E, ...] -> physical slot order
+    [N*S, ...]: each physical slot gets its logical expert's weights
+    (replicas duplicate). Works on jnp or np arrays."""
+    perm = tables(placement).slot_expert.reshape(-1)
+    return jnp.take(jnp.asarray(w), jnp.asarray(perm), axis=0)
+
+
+def collapse_expert_params(w_phys, placement: EpPlacement):
+    """Physical slot-ordered weights [N*S, ...] -> logical [E, ...] via each
+    expert's primary replica (replicas hold identical weights by
+    construction, so any replica would do — the primary is deterministic)."""
+    rows = tables(placement).primary_row
+    return jnp.take(jnp.asarray(w_phys), jnp.asarray(rows), axis=0)

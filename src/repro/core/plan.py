@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import placement as PL
 from repro.core import slots as S
 from repro.core.group import EpGroup, EpHandle
 
@@ -51,6 +52,32 @@ def my_rank(group: EpGroup) -> jax.Array:
     for name in axes[1:]:
         r = r * jax.lax.axis_size(name) + jax.lax.axis_index(name)
     return r
+
+
+def dest_of(group: EpGroup, experts: jax.Array, src_rank):
+    """Physical (dest_rank, dest_slot) for global expert ids — the ONE place
+    plan construction resolves logical experts to hardware (docs/DESIGN.md
+    §8). With the default contiguous layout this is exactly the historic
+    ``(e // L, e % L)`` arithmetic; with an ``EpPlacement`` it is the table
+    lookup with replica selection by ``src_rank % replica_count`` (a pure
+    function of replicated metadata, so both endpoints of every transfer
+    agree — same determinism as the slot counters). The padding sentinel
+    ``E`` maps to (N, L), out of range everywhere. Entries not owned by the
+    caller return their slot at *their* rank — callers must mask by
+    ``dest_rank == me`` before using slots locally, exactly like the
+    ``(e - me*L).clip`` chain this generalizes."""
+    if group.placement is None:
+        L = group.local_experts
+        r = experts // L
+        return r, experts - r * L
+    return PL.assign(group.placement, experts, src_rank)
+
+
+def _src_rank_grid(group: EpGroup, topk_g: jax.Array):
+    """Source-rank coordinates for a gathered routing tensor [N, T, K] —
+    the replica-selection key for receiver-side dest_of."""
+    N = group.ep_size
+    return jnp.arange(N, dtype=jnp.int32)[:, None, None]
 
 
 @jax.tree_util.register_dataclass
@@ -131,7 +158,7 @@ def _mix(x: jax.Array) -> jax.Array:
     return x ^ (x >> 16)
 
 
-def routing_hash(topk_idx: jax.Array) -> jax.Array:
+def routing_hash(topk_idx: jax.Array, salt: int = 0) -> jax.Array:
     """Order-sensitive [2]-lane uint32 checksum of a routing tensor.
 
     Two independently-mixed position-salted sums; computed once per handle
@@ -142,12 +169,22 @@ def routing_hash(topk_idx: jax.Array) -> jax.Array:
     routing changed (and, being replicated, the global hash makes the
     reuse/rebuild decision uniform across ranks). A collision would
     silently reuse stale maps — with two independent 32-bit lanes the odds
-    are ~2^-64 per refresh, far below any hardware soft-error rate."""
+    are ~2^-64 per refresh, far below any hardware soft-error rate.
+
+    ``salt`` is the group's placement fingerprint (``group.placement_salt``):
+    slot maps depend on the placement table exactly as they depend on the
+    routing, so a placement swap must read as "routing changed" and force
+    the rebuild branch. 0 (the contiguous default) leaves the hash
+    bit-identical to the unsalted form."""
     flat = topk_idx.reshape(-1).astype(jnp.uint32)
     i = jnp.arange(flat.shape[0], dtype=jnp.uint32)
     h1 = _mix(flat + i * np.uint32(0x9E3779B9)).sum()
     h2 = _mix(flat ^ ((i + np.uint32(1)) * np.uint32(0x85EBCA6B))).sum()
-    return jnp.stack([h1, h2])
+    h = jnp.stack([h1, h2])
+    if salt:
+        h = h ^ jnp.stack([_mix(jnp.uint32(salt)),
+                           _mix(jnp.uint32(salt) ^ np.uint32(0x9E3779B9))])
+    return h
 
 
 def mask_padding(group: EpGroup, topk_idx: jax.Array, num_tokens):
@@ -173,15 +210,27 @@ def gather_routing(group: EpGroup, topk_idx: jax.Array) -> jax.Array:
 
 
 def recv_counts(group: EpGroup, topk_g: jax.Array) -> jax.Array:
-    """[L] tokens received per local expert, from the gathered routing —
+    """[L] tokens received per local expert slot, from the gathered routing —
     the one derivation handle create and refresh must agree on (sentinel
-    expert E lands out of every rank's range and is never counted)."""
+    expert E lands out of every rank's range and is never counted).
+    Placement-aware: under a redundant placement each entry counts at the
+    replica its source rank selects."""
     L = group.local_experts
     me = my_rank(group)
-    mine = (topk_g // L) == me
-    e_l = (topk_g - me * L).clip(0, L - 1)
+    r_dst, s_dst = dest_of(group, topk_g, _src_rank_grid(group, topk_g))
+    mine = r_dst == me
+    e_l = s_dst.clip(0, L - 1)
     return jnp.zeros((L,), jnp.int32).at[e_l.reshape(-1)].add(
         mine.reshape(-1).astype(jnp.int32))
+
+
+def _plan_shape_compatible(group: EpGroup, plan: EpPlan) -> bool:
+    """True when the cached plan's maps have the shapes this group would
+    rebuild — required for the lax.cond fast path (both branches must carry
+    an identical pytree). A placement swap that adds/removes redundant slots
+    changes the per-rank slot count and every expert-region map with it."""
+    c = plan.disp_counts
+    return c is None or c.shape[0] == group.local_experts
 
 
 def rebind_weights(group: EpGroup, plan: EpPlan | None,
@@ -222,18 +271,35 @@ def refresh_handle(group: EpGroup, handle: EpHandle, topk_weights: jax.Array,
             # the padding sentinel is baked into topk_idx; a new valid-token
             # count without new routing is ill-defined — refuse loudly
             raise ValueError("num_tokens requires topk_idx on refresh")
+        # weights-only refresh trusts the caller that `group` is the
+        # handle's own group (the plan-object-reuse contract pinned by
+        # tests/test_refresh.py rules out a runtime hash check here); a
+        # placement swap must go through the topk_idx path, where the
+        # salted hash forces the rebuild. Slot-count changes are at least
+        # statically detectable — refuse them loudly.
+        if handle.plan is not None and not _plan_shape_compatible(group,
+                                                                  handle.plan):
+            raise ValueError(
+                "weights-only refresh got a handle built under a different "
+                "physical slot layout — after a placement swap, refresh "
+                "with topk_idx so the placement-salted routing hash can "
+                "force the rebuild (docs/DESIGN.md §8)")
         plan = rebind_weights(group, handle.plan, topk_weights)
         return dataclasses.replace(handle, topk_weights=topk_weights, plan=plan)
 
     topk_idx, nt = mask_padding(group, topk_idx, num_tokens)
     topk_g = gather_routing(group, topk_idx)
-    rhash = routing_hash(topk_g)     # global: all maps depend on all ranks
+    # global (all maps depend on all ranks) and placement-salted (a swapped
+    # placement must read as changed routing and take the rebuild branch)
+    rhash = routing_hash(topk_g, group.placement_salt)
     counts = recv_counts(group, topk_g)
 
     if (handle.plan is None or handle.routing_hash is None
-            or topk_idx.shape != handle.topk_idx.shape):
-        # hand-built handle, or a different token count: the cached maps
-        # have different (static) shapes than the rebuild — no cond possible,
+            or topk_idx.shape != handle.topk_idx.shape
+            or not _plan_shape_compatible(group, handle.plan)):
+        # hand-built handle, a different token count, or a placement swap
+        # that changed the physical slot count: the cached maps have
+        # different (static) shapes than the rebuild — no cond possible,
         # rebuild unconditionally, exactly like handle creation
         plan = build_plan(group, topk_idx, topk_g, nt)
     else:
@@ -266,7 +332,7 @@ def _ll_ncclep_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
 
     # ---- sender side (local tokens): slot of token t in the me->d block is
     # the running count of senders to d over t — the "atomic counter".
-    dst = topk_idx // L                                     # [T, K]
+    dst, _ = dest_of(group, topk_idx, me)                   # [T, K]
     token_valid = jnp.arange(T) < num_tokens
     sends = jnp.zeros((T, N), bool).at[
         jnp.arange(T)[:, None], dst].set(True, mode="drop")
@@ -278,9 +344,10 @@ def _ll_ncclep_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
                                         sends.reshape(-1), N, Cd, sentinel=T)
 
     # ---- receiver side (global entries): mirror the senders' counters.
-    dst_g = topk_g // L                                     # [N, T, K]
+    dst_g, slot_g = dest_of(group, topk_g,
+                            _src_rank_grid(group, topk_g))  # [N, T, K]
     mine = dst_g == me
-    e_l = (topk_g - me * L).clip(0, L - 1)
+    e_l = slot_g.clip(0, L - 1)
     sends_to_me = mine.any(-1)                              # [N, T]
     pos_to_me = jnp.cumsum(sends_to_me.astype(jnp.int32), axis=1) - 1
     slot_valid = sends_to_me & (pos_to_me < Cd)
@@ -322,8 +389,8 @@ def _ll_deepep_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
     B = group.cfg.max_tokens_per_rank
     T, Kk = topk_idx.shape
     assert T <= B
-    dst = topk_idx // L
-    e_l = topk_idx % L
+    src = my_rank(group) if group.placement is not None else 0
+    dst, e_l = dest_of(group, topk_idx, src)
     token_valid = jnp.arange(T) < num_tokens
     t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, Kk))
     slot = e_l * B + t_idx                                   # [T, K]
@@ -351,7 +418,7 @@ def _ht_flat_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
     T, Kk = topk_idx.shape
 
     # ---- sender side
-    dst = (topk_idx // L).reshape(-1)                       # [T*K]
+    dst = dest_of(group, topk_idx, me)[0].reshape(-1)       # [T*K]
     valid = jnp.broadcast_to((jnp.arange(T) < num_tokens)[:, None],
                              (T, Kk)).reshape(-1)
     c_pos, _ = S.positions_by_dest(dst, N, valid)
@@ -359,8 +426,10 @@ def _ht_flat_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
     disp_send_gmap = S.build_gather_map(dst, c_pos, t_of, valid, N, C, sentinel=T)
 
     # ---- receiver side: reconstruct every sender's counter restricted to me
-    mine = (topk_g // L) == me                              # [N, T, K]
-    e_l = (topk_g - me * L).clip(0, L - 1)
+    dst_g, slot_g = dest_of(group, topk_g,
+                            _src_rank_grid(group, topk_g))  # [N, T, K]
+    mine = dst_g == me
+    e_l = slot_g.clip(0, L - 1)
     flat_mine = mine.reshape(N, T * Kk)
     pos_r = jnp.cumsum(flat_mine.astype(jnp.int32), axis=1) - 1
     slot_ok = flat_mine & (pos_r < C)
@@ -397,7 +466,9 @@ def _hier_geometry(group: EpGroup, topk_g: jax.Array):
     C1 = group.ht_stage1_cap
     N, T, Kk = topk_g.shape
     g = topk_g.reshape(No, Ni, T, Kk)
-    r_dst = g // L
+    src = (jnp.arange(No, dtype=jnp.int32)[:, None] * Ni +
+           jnp.arange(Ni, dtype=jnp.int32)[None, :])[:, :, None, None]
+    r_dst, s_dst = dest_of(group, g, src)                   # placement-aware
     o_dst, i_dst = r_dst // Ni, r_dst % Ni                  # [No, Ni, T, K]
     # stage 1 (per source chip): dedup over destination inner coordinate.
     # Invalid entries (sentinel expert) have r_dst == N -> i_dst computed from
@@ -413,7 +484,8 @@ def _hier_geometry(group: EpGroup, topk_g: jax.Array):
     ok1 = sends1 & (pos1 < C1)
     o_dst = jnp.where(ent_ok, o_dst, No)
     i_dst = jnp.where(ent_ok, i_dst, Ni)
-    return dict(g=g, o_dst=o_dst, i_dst=i_dst, sends1=sends1, pos1=pos1, ok1=ok1)
+    return dict(g=g, r_dst=r_dst, s_dst=s_dst, o_dst=o_dst, i_dst=i_dst,
+                sends1=sends1, pos1=pos1, ok1=ok1)
 
 
 def _hier_recv_chain(group, geo, me_o, me_i):
@@ -491,8 +563,8 @@ def _ht_hier_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
 
         # ---- destination chain (chunk-local stage-2 rows + concat offset)
         c2, ok2 = _hier_recv_chain(group, geo, me_o, me_i)
-        mine = (geo["g"] // L) == me                        # [No, Ni, Tc, K]
-        e_l = (geo["g"] - me * L).clip(0, L - 1)
+        mine = geo["r_dst"] == me                           # [No, Ni, Tc, K]
+        e_l = geo["s_dst"].clip(0, L - 1)
         entv = mine & ok2[..., None]
         r2 = (jnp.arange(No)[:, None, None] * C2 + c2)[..., None]
         r2 = jnp.broadcast_to(r2, (No, Ni, Tc, Kk))
@@ -575,8 +647,8 @@ def _baseline_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
     N, L = group.ep_size, group.local_experts
     T, Kk = topk_idx.shape
     Ce = _per_expert_cap(group)
-    dst = topk_idx // L                                     # [T, K]
-    e_l = topk_idx % L
+    src = my_rank(group) if group.placement is not None else 0
+    dst, e_l = dest_of(group, topk_idx, src)                # [T, K]
     valid = topk_idx < group.cfg.num_experts
     block = jnp.where(valid, dst * L + e_l, N * L).reshape(-1)
     pos, _ = S.positions_by_dest(block, N * L, valid.reshape(-1))

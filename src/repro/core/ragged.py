@@ -32,6 +32,13 @@ def ll_dispatch_ragged(group: EpGroup, handle: EpHandle, x: jax.Array):
 
     Returns (recv [N*C_d, H] shared buffer, recv_row_of_entry metadata) —
     unpack to the 3D layout reuses the dense path's maps."""
+    if group.placement is not None:
+        # this trace-only path still derives destinations contiguously; an
+        # EpPlacement group must not silently route with stale arithmetic
+        raise NotImplementedError(
+            "ragged LL dispatch does not support explicit expert placements "
+            "yet — route placement resolution through plan.dest_of when "
+            "enabling it (docs/DESIGN.md §8)")
     N, L = group.ep_size, group.local_experts
     C = group.ll_disp_cap
     axis = group.cfg.ep_axis[0] if len(group.cfg.ep_axis) == 1 else group.cfg.ep_axis

@@ -54,6 +54,19 @@ class MoESpec:
     # pipelining, core/ht.py); must divide the per-EP-rank token count
     ht_num_chunks: int = 1
     quantize_dispatch: bool = False
+    # --- EPLB (core/placement.py) ---
+    # Explicit expert placement table (EpPlacement) with optional redundant
+    # replicas; None = contiguous striping. Expert weights stay stored in
+    # logical [E, ...] order — moe_block rebinds them to physical slot order
+    # in-graph when a placement is set.
+    placement: "object | None" = None
+    # Fold per-logical-expert routed-token counts into the decode state
+    # ("expert_heat") so serving reports load imbalance and the rebalance
+    # hook (runtime/server.py) can re-place experts between steps. The
+    # on-device counter is f32: the serving hook drains it to host float64
+    # at every rebalance boundary, so exact counting holds for any window
+    # below ~16M routed tokens per expert.
+    track_expert_heat: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

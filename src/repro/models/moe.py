@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
                         ep_dispatch, ep_combine, ep_complete)
+from repro.core.placement import expand_expert_params
 from repro.core.routing import RouterConfig, route
 from repro.kernels import ops as K
 from repro.models.config import ArchConfig
@@ -107,18 +108,31 @@ def _expert_ffn(group, y3d, counts, w1, w3, w2, act, tp_axis):
     return out
 
 
-def moe_block(p, x, cfg: ArchConfig, mesh):
-    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+def moe_block(p, x, cfg: ArchConfig, mesh, *, with_heat: bool = False):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    With ``with_heat=True`` additionally returns the per-logical-expert
+    routed-token histogram [E] (replicated), the signal the EPLB rebalancer
+    consumes (runtime/server.py folds it into the decode state)."""
     m = cfg.moe
+
+    def _fallback():
+        y, heat = _moe_dense_fallback(p, x, cfg, with_heat=True)
+        return (y, jnp.float32(0), heat) if with_heat else (y, jnp.float32(0))
+
     if mesh is None or mesh.empty:
-        return _moe_dense_fallback(p, x, cfg), jnp.float32(0)
+        return _fallback()
 
     b_axes, s_axes, ep = _token_specs(mesh, m.ep_axis)
     ep_sizes = [mesh.shape[a] for a in ep]
     N = math.prod(ep_sizes) if ep else 1
-    if N <= 1 or m.num_experts % N != 0:
-        y, aux = _moe_dense_fallback(p, x, cfg), jnp.float32(0)
-        return y, aux
+    if m.placement is not None and N > 1 and m.placement.num_ranks != N:
+        raise ValueError(
+            f"MoESpec.placement spans {m.placement.num_ranks} ranks but the "
+            f"mesh's EP extent is {N}")
+    phys = m.placement.num_slots if m.placement is not None else m.num_experts
+    if N <= 1 or phys % N != 0:
+        return _fallback()
     B, S, D = x.shape
     # tokens per EP rank (static)
     b_div = math.prod(mesh.shape[a] for a in b_axes) if b_axes else 1
@@ -134,6 +148,7 @@ def moe_block(p, x, cfg: ArchConfig, mesh):
         payload_dtype=cfg.dtype, quantize_dispatch=m.quantize_dispatch,
         ep_axis=ep, ht_hierarchical=m.ht_hierarchical,
         ht_num_chunks=_resolve_chunks(m.ht_num_chunks, T),
+        placement=m.placement,
     )
     group = ep_create_group(gcfg, ep_size=N, inner_size=ep_sizes[-1])
 
@@ -166,21 +181,44 @@ def moe_block(p, x, cfg: ArchConfig, mesh):
         vary = tuple(dict.fromkeys(b_axes + s_axes))
         if vary:
             aux = jax.lax.pmean(aux, vary)
-        return out.reshape(Bl, Sl, Dl), aux
+        if not with_heat:
+            return out.reshape(Bl, Sl, Dl), aux
+        # per-logical-expert routed-token heat (the EPLB rebalance signal);
+        # psum over the token-carrying axes makes it the global histogram,
+        # and it is invariant along a pure-TP model axis like aux
+        heat = jnp.zeros((m.num_experts,), jnp.float32).at[
+            r.topk_idx.reshape(-1)].add(1.0, mode="drop")
+        if vary:
+            heat = jax.lax.psum(heat, vary)
+        return out.reshape(Bl, Sl, Dl), aux, heat
 
     sel = bias if bias is not None else jnp.zeros((m.num_experts,), jnp.float32)
+    out_specs = (tok_spec, P(), P(None)) if with_heat else (tok_spec, P())
     fn = jax.shard_map(
         inner, mesh=mesh,
         in_specs=(tok_spec, P(None, None), ew_spec, ew_spec, ew_spec_t, P(None)),
-        out_specs=(tok_spec, P()),
+        out_specs=out_specs,
     )
-    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], sel)
+    w1, w3, w2 = p["w_gate"], p["w_up"], p["w_down"]
+    if m.placement is not None:
+        # replica-aware weight rebinding: params stay stored logical [E, ...];
+        # each physical slot gathers its expert's weights (replicas duplicate)
+        # before the shard_map splits them over the EP axes — resolved at the
+        # same altitude as the plan's slot maps, never inside phase bodies.
+        # Trade-off: the gather runs per forward step (cross-rank for moved
+        # experts), which keeps checkpoints placement-independent; a serving
+        # engine that swaps rarely should instead rebind params ONCE at
+        # adoption via checkpoint.rebind_expert_leaves (ROADMAP open item).
+        w1, w3, w2 = (expand_expert_params(w, m.placement)
+                      for w in (w1, w3, w2))
+    res = fn(x, p["router"], w1, w3, w2, sel)
+    y, aux = res[0], res[1]
     if m.shared_experts:
         y = y + ffn_apply(p["shared"], x, cfg.act)
-    return y, aux
+    return (y, aux, res[2]) if with_heat else (y, aux)
 
 
-def _moe_dense_fallback(p, x, cfg: ArchConfig):
+def _moe_dense_fallback(p, x, cfg: ArchConfig, *, with_heat: bool = False):
     """Reference MoE for meshless smoke tests: dense routing, no EP comms.
     Semantics identical to the EP path (same router, same expert math)."""
     m = cfg.moe
@@ -199,4 +237,8 @@ def _moe_dense_fallback(p, x, cfg: ArchConfig):
     y = y.reshape(B, S, D)
     if m.shared_experts:
         y = y + ffn_apply(p["shared"], x, cfg.act)
+    if with_heat:
+        heat = jnp.zeros((m.num_experts,), jnp.float32).at[
+            r.topk_idx.reshape(-1)].add(1.0, mode="drop")
+        return y, heat
     return y

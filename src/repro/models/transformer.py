@@ -46,8 +46,10 @@ def layer_spec(cfg: ArchConfig, *, moe_layer: bool):
 
 
 def layer_apply(p, x, cfg: ArchConfig, mesh, *, cache=None, window="cfg",
-                positions=None):
-    """-> (x, new_cache, aux)."""
+                positions=None, with_heat=False):
+    """-> (x, new_cache, aux). With ``with_heat=True`` aux is the pair
+    (aux_loss, expert_heat [E]) — the per-logical-expert routed-token
+    histogram the EPLB serving hook accumulates (runtime/server.py)."""
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.attn and cfg.attn.kind == "mla":
         a, new_cache = MLA.mla_attention(p["attn"], h, cfg, mesh,
@@ -58,9 +60,16 @@ def layer_apply(p, x, cfg: ArchConfig, mesh, *, cache=None, window="cfg",
     x = x + a
     h = rmsnorm(x, p["ln2"], cfg.norm_eps)
     if "moe" in p:
+        if with_heat:
+            f, aux, heat = MOE.moe_block(p["moe"], h, cfg, mesh,
+                                         with_heat=True)
+            return x + f, new_cache, (aux, heat)
         f, aux = MOE.moe_block(p["moe"], h, cfg, mesh)
     else:
         f, aux = ffn_apply(p["ffn"], h, cfg.act), jnp.float32(0)
+        if with_heat:
+            E = cfg.moe.num_experts if cfg.moe else 1
+            return x + f, new_cache, (aux, jnp.zeros((E,), jnp.float32))
     return x + f, new_cache, aux
 
 
@@ -72,16 +81,24 @@ def _stack(specs, n: int):
     return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
-def _scan_stack(body, x, stack_params, stack_cache, cfg, *, remat: bool):
-    """scan over (params, cache) stacks; body(x, p, c) -> (x, c', aux)."""
+def _scan_stack(body, x, stack_params, stack_cache, cfg, *, remat: bool,
+                aux0=None):
+    """scan over (params, cache) stacks; body(x, p, c) -> (x, c', aux).
+    ``aux0`` seeds the aux accumulator (default scalar 0); any pytree of the
+    same structure as the body's aux adds leafwise — the decode path uses an
+    (aux, expert_heat) pair to surface EPLB heat without changing the
+    decode-step signature."""
+    if aux0 is None:
+        aux0 = jnp.float32(0)
+
     def f(carry, pc):
         x, aux = carry
         p, c = pc
         x, c2, a = body(x, p, c)
-        return (x, aux + a), c2
+        return (x, jax.tree.map(jnp.add, aux, a)), c2
     if remat:
         f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
-    (x, aux), new_cache = jax.lax.scan(f, (x, jnp.float32(0)),
+    (x, aux), new_cache = jax.lax.scan(f, (x, aux0),
                                        (stack_params, stack_cache))
     return x, new_cache, aux
 
@@ -174,6 +191,11 @@ def lm_decode_state_spec(cfg: ArchConfig, batch: int, max_len: int, *, long=Fals
         st["dense"] = _stack(mk(cfg, batch, max_len, long=long), n_dense)
     if n_moe:
         st["moe"] = _stack(mk(cfg, batch, max_len, long=long), n_moe)
+        if cfg.moe.track_expert_heat:
+            # EPLB heat counters ride the decode state: per-logical-expert
+            # routed tokens summed over MoE layers and steps (replicated)
+            st["expert_heat"] = ParamSpec((cfg.moe.num_experts,), jnp.float32,
+                                          (None,), init="zeros")
     return st
 
 
@@ -190,8 +212,18 @@ def lm_decode_step(params, state, batch, cfg: ArchConfig, mesh):
         x, new_state["dense"], _ = _scan_stack(
             body, x, params["dense_stack"], state["dense"], cfg, remat=False)
     if "moe" in state:
-        x, new_state["moe"], _ = _scan_stack(
-            body, x, params["moe_stack"], state["moe"], cfg, remat=False)
+        if "expert_heat" in state:
+            def body_heat(x, p, c):
+                return layer_apply(p, x, cfg, mesh, cache=c, with_heat=True)
+            aux0 = (jnp.float32(0),
+                    jnp.zeros((cfg.moe.num_experts,), jnp.float32))
+            x, new_state["moe"], (_, heat) = _scan_stack(
+                body_heat, x, params["moe_stack"], state["moe"], cfg,
+                remat=False, aux0=aux0)
+            new_state["expert_heat"] = state["expert_heat"] + heat
+        else:
+            x, new_state["moe"], _ = _scan_stack(
+                body, x, params["moe_stack"], state["moe"], cfg, remat=False)
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     return logits_out(x, head), new_state

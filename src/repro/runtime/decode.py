@@ -38,7 +38,8 @@ import jax
 
 from repro.core.api import (ep_create_handle, ep_handle_refresh, ep_dispatch,
                             ep_combine, ep_complete)
-from repro.core.group import EpGroup, EpHandle
+from repro.core.group import EpGroup, EpGroupConfig, EpHandle
+from repro.core import placement as PL
 
 # router_fn: tokens [T, H] -> (topk_idx [T, K], topk_weights [T, K])
 RouterFn = Callable[[jax.Array], tuple[jax.Array, jax.Array]]
@@ -117,3 +118,44 @@ def decode_loop(group: EpGroup, router_fn: RouterFn, expert_fn: ExpertFn,
             group, router_fn, expert_fn, handles, xa, xb)
         outs.append((oa, ob))
     return outs
+
+
+# --------------------------------------------------------------------------
+# EPLB: heat-driven placement rebalancing between decode windows
+# --------------------------------------------------------------------------
+
+def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
+                            *, rebalance_every: int, ep_size: int,
+                            num_redundant: int = 0, inner_size: int | None = None,
+                            decay: float = 0.0,
+                            rebalance_fn=PL.rebalance):
+    """Host-level EPLB decode driver: placements swap BETWEEN steps, at
+    window boundaries, through the same mode-agnostic staged surface the
+    pipeline runs on.
+
+    ``make_window(group) -> fn(pairs) -> (outs, heat)``: the caller wraps the
+    EP-level window (typically ``decode_loop`` plus a routed-token histogram,
+    see tests/test_refresh.py) in its own jit/shard_map for the group's mesh
+    — mesh specifics stay caller-owned, exactly like ``decode_loop`` itself.
+    Every ``rebalance_every`` step-pairs the folded heat drives the greedy
+    rebalancer (``core/placement.py``) and the next window runs on a group
+    built for the new placement. A placement swap is a new *static* group
+    (new traced maps), so window functions are cached per placement and any
+    handle carried across the boundary is force-rebuilt by the placement-
+    salted routing hash. Decode outputs are placement-invariant; parity with
+    the naive per-step loop under the same placement schedule is pinned by
+    tests/test_refresh.py.
+
+    Returns ``(outs, placements)`` — the per-step outputs and the placement
+    used for each window (None = the contiguous default). A window whose
+    rebalance reproduces the current table reuses the placement object, so
+    the compiled window function is cache-hit, not re-traced."""
+    if rebalance_every < 1:
+        raise ValueError(f"rebalance_every={rebalance_every} must be >= 1")
+    windows = [xs[s:s + rebalance_every]
+               for s in range(0, len(xs), rebalance_every)]
+    win_outs, placements = PL.run_rebalancing(
+        base_cfg, make_window, windows, advance_every=1, ep_size=ep_size,
+        num_redundant=num_redundant, inner_size=inner_size, decay=decay,
+        rebalance_fn=rebalance_fn)
+    return [o for w in win_outs for o in w], placements

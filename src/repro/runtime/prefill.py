@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.core.api import (ep_create_handle, ep_dispatch, ep_combine,
                             ep_complete)
-from repro.core.group import EpGroup
+from repro.core.group import EpGroup, EpGroupConfig
+from repro.core import placement as PL
 
 # router_fn: tokens [T, H] -> (topk_idx [T, K], topk_weights [T, K])
 RouterFn = Callable[[jax.Array], tuple[jax.Array, jax.Array]]
@@ -93,3 +94,30 @@ def prefill_moe(group: EpGroup, router_fn: RouterFn, expert_fn: ExpertFn,
                              send_only=True)
     return jnp.concatenate(
         [ep_complete(group, handles[i], comb[i]) for i in range(mb)], axis=0)
+
+
+# --------------------------------------------------------------------------
+# EPLB: heat-driven placement rebalancing between prefill batches
+# --------------------------------------------------------------------------
+
+def rebalancing_prefill(base_cfg: EpGroupConfig, make_layer, batches,
+                        *, rebalance_every: int, ep_size: int,
+                        num_redundant: int = 0, inner_size: int | None = None,
+                        decay: float = 0.0, rebalance_fn=PL.rebalance):
+    """Prefill mirror of ``runtime/decode.py::rebalancing_decode_loop``:
+    placements swap between *batches* (a prefill batch is the natural
+    scheduling boundary — within one batch the micro-batched staged pipeline
+    runs on a single placement).
+
+    ``make_layer(group) -> fn(x) -> (out, heat)``: the caller wraps one
+    staged prefill layer (typically ``prefill_moe`` plus a routed-token
+    histogram) in its own jit/shard_map for the group's mesh. Every
+    ``rebalance_every`` batches the folded heat drives the shared
+    ``RebalanceScheduler`` (same dedup semantics as the decode driver: an
+    unchanged table reuses the placement object and its compiled layer).
+    Returns ``(outs, placements)`` (one placement per batch; None =
+    contiguous)."""
+    return PL.run_rebalancing(
+        base_cfg, make_layer, list(batches), advance_every=rebalance_every,
+        ep_size=ep_size, num_redundant=num_redundant, inner_size=inner_size,
+        decay=decay, rebalance_fn=rebalance_fn)

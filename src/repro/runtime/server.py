@@ -7,7 +7,15 @@ double-buffered decode (runtime/decode.py holds the EP-level one): up to
 ``depth`` decode steps stay in flight before the host blocks on the oldest,
 so step *i+1*'s dispatch work overlaps step *i*'s device execution instead
 of serializing on a per-step ``block_until_ready``. Greedy next-token
-sampling feeds device-to-device, so no readback sits on the critical path."""
+sampling feeds device-to-device, so no readback sits on the critical path.
+
+EPLB serving hook: with ``MoESpec.track_expert_heat`` the decode state
+carries per-logical-expert routed-token counters ("expert_heat"); ``serve``
+folds them into ``ServeMetrics`` (load imbalance alongside latency), and
+``rebalance_every > 0`` swaps the expert placement between decode steps —
+the heat drives the greedy rebalancer (core/placement.py), the serve step is
+re-jitted for the new (static) placement, and the token stream is unchanged
+because placement only moves *where* experts compute."""
 from __future__ import annotations
 
 import collections
@@ -18,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import placement as PL
 from repro.models import get_model
 from repro.models.config import ArchConfig
 from repro.parallel.sharding import init_from_specs
@@ -31,6 +40,10 @@ class ServeMetrics:
     itl_p99_s: float
     output_tok_s: float
     total_tokens: int
+    # --- EPLB load counters (None when the config doesn't track heat) ---
+    expert_heat: list | None = None        # per-logical-expert routed tokens
+    heat_max_mean: float | None = None     # max/mean per-expert load ratio
+    rank_heat_max_mean: float | None = None  # max/mean per-EP-rank load
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -38,9 +51,41 @@ class ServeMetrics:
 
 class DecodeServer:
     def __init__(self, cfg: ArchConfig, batch: int, max_len: int, mesh=None,
-                 params=None, seed=0, pipeline_depth: int = 1):
+                 params=None, seed=0, pipeline_depth: int = 1,
+                 rebalance_every: int = 0, num_redundant_experts: int = 0):
         self.cfg, self.mesh, self.batch = cfg, mesh, batch
         self.pipeline_depth = max(int(pipeline_depth), 1)
+        # EPLB: swap expert placements every `rebalance_every` decode steps,
+        # driven by the tracked heat (requires MoESpec.track_expert_heat)
+        self.rebalance_every = int(rebalance_every)
+        self.num_redundant_experts = int(num_redundant_experts)
+        if self.rebalance_every and not (cfg.moe and cfg.moe.track_expert_heat):
+            raise ValueError("rebalance_every requires an MoE config with "
+                             "track_expert_heat=True (the heat drives the "
+                             "rebalancer)")
+        self.placements: list = []          # placements adopted, in order
+        self._sched = None
+        self._heat_drained = None           # float64 totals of drained counters
+        self._rank_loads = None             # [N] float64 per-rank load, summed
+        #                                     under the placement ACTIVE when
+        #                                     each window's heat accrued
+        if self.rebalance_every:
+            n = self._ep_size()
+            if n > 1:
+                if (cfg.moe.num_experts + self.num_redundant_experts) % n:
+                    raise ValueError(
+                        f"num_experts={cfg.moe.num_experts} + "
+                        f"num_redundant_experts={self.num_redundant_experts} "
+                        f"must divide by the EP extent {n}")
+                if cfg.moe.placement is None and cfg.moe.num_experts % n:
+                    raise ValueError(
+                        f"num_experts={cfg.moe.num_experts} must divide by "
+                        f"the EP extent {n} for the contiguous initial "
+                        "placement — pass an explicit MoESpec.placement")
+                self._sched = PL.RebalanceScheduler(
+                    cfg.moe.num_experts, n,
+                    num_redundant=self.num_redundant_experts,
+                    initial=cfg.moe.placement)
         self.model = get_model(cfg)
         if params is None:
             params = init_from_specs(jax.random.PRNGKey(seed),
@@ -50,6 +95,64 @@ class DecodeServer:
         self.state = jax.tree.map(
             jnp.zeros_like, init_from_specs(jax.random.PRNGKey(1), st_spec, mesh))
         self.step = jax.jit(make_serve_step(cfg, mesh), donate_argnums=(1,))
+
+    # ---- EPLB hook: heat-driven placement swaps between steps ----
+
+    def _device_heat(self):
+        if isinstance(self.state, dict) and "expert_heat" in self.state:
+            return np.asarray(jax.device_get(self.state["expert_heat"]),
+                              np.float64)
+        return None
+
+    def _tracked_heat(self):
+        """[E] float64 per-expert routed-token totals: the live on-device
+        counter plus everything drained at rebalance boundaries (draining
+        keeps the f32 device counter at per-window magnitude, so a
+        long-lived server never hits f32 integer saturation)."""
+        dev = self._device_heat()
+        if dev is None:
+            return None
+        return dev if self._heat_drained is None else self._heat_drained + dev
+
+    def _ep_size(self) -> int:
+        m = self.cfg.moe
+        if not m or self.mesh is None:
+            return 0
+        import math
+        sizes = [self.mesh.shape[a] for a in m.ep_axis
+                 if a in self.mesh.shape]
+        return math.prod(sizes) if sizes else 0
+
+    def _maybe_rebalance(self, step_idx: int):
+        """Every ``rebalance_every`` steps: drain the device heat counter
+        into the host-side float64 totals, fold it into the shared
+        ``RebalanceScheduler``, and — only when the table actually changed —
+        adopt the new placement and re-jit the serve step. The placement
+        only moves *where* experts compute — weights stay stored logical and
+        are rebound in-graph (models/moe.py) — so the greedy token stream is
+        unchanged (pinned by tests)."""
+        if self._sched is None or (step_idx + 1) % self.rebalance_every:
+            return
+        dev = self._device_heat()
+        if dev is None:
+            return
+        self._sched.observe(dev)
+        self._heat_drained = (dev if self._heat_drained is None
+                              else self._heat_drained + dev)
+        # attribute this window's per-rank load to the placement it actually
+        # ran under, BEFORE any swap — rank_heat_max_mean then reports the
+        # imbalance experienced, not what the final placement would have had
+        rl = PL.rank_loads(dev, self.cfg.moe.placement, self._sched.num_ranks)
+        self._rank_loads = rl if self._rank_loads is None else self._rank_loads + rl
+        self.state["expert_heat"] = jnp.zeros_like(self.state["expert_heat"])
+        pl = self._sched.advance()
+        if pl is self.cfg.moe.placement:
+            return                  # unchanged table: keep the compiled step
+        self.cfg = dataclasses.replace(
+            self.cfg, moe=dataclasses.replace(self.cfg.moe, placement=pl))
+        self.placements.append(pl)
+        self.step = jax.jit(make_serve_step(self.cfg, self.mesh),
+                            donate_argnums=(1,))
 
     def prefill(self, prompts: jax.Array):
         """Token-by-token prefill through the decode path (keeps this harness
@@ -68,13 +171,14 @@ class DecodeServer:
         tok = first_tok
         itls = []
         outs = [np.asarray(tok)]
-        for _ in range(steps):
+        for i in range(steps):
             t0 = time.perf_counter()
             tok, self.state = self.step(self.params, self.state,
                                         {"tokens": tok})
             jax.block_until_ready(tok)
             itls.append(time.perf_counter() - t0)
             outs.append(np.asarray(tok))
+            self._maybe_rebalance(i)
         return np.concatenate(outs, axis=1), np.asarray(itls)
 
     def _decode_pipelined(self, first_tok: jax.Array, steps: int):
@@ -90,7 +194,7 @@ class DecodeServer:
         done: list[jax.Array] = []          # D2H conversion deferred: keeps
         marks = []                          # the timed loop free of readbacks,
         t0 = time.perf_counter()            # matching the unpipelined path
-        for _ in range(steps):
+        for i in range(steps):
             tok, self.state = self.step(self.params, self.state,
                                         {"tokens": tok})
             pending.append(tok)
@@ -99,6 +203,18 @@ class DecodeServer:
                 jax.block_until_ready(d)
                 marks.append(time.perf_counter())
                 done.append(d)
+            if self._sched is not None and (i + 1) % self.rebalance_every == 0:
+                # placement swap boundary: drain the in-flight window first
+                # (the new placement re-jits the step; state stays valid).
+                # The drain and any post-swap recompile are charged to the
+                # ITL stream on purpose — swaps cost real latency, and the
+                # serving metrics should show it.
+                while pending:
+                    d = pending.popleft()
+                    jax.block_until_ready(d)
+                    marks.append(time.perf_counter())
+                    done.append(d)
+                self._maybe_rebalance(i)
         while pending:
             d = pending.popleft()
             jax.block_until_ready(d)
@@ -120,8 +236,29 @@ class DecodeServer:
         # would inflate its tok/s relative to the depth-1 baseline
         decode_wall = time.perf_counter() - t0
         total = toks.shape[0] * toks.shape[1]
+        # EPLB: fold the tracked per-expert heat into the metrics so serving
+        # benchmarks report load imbalance alongside latency
+        heat = self._tracked_heat()
+        heat_mm = rank_mm = None
+        if heat is not None:
+            heat_mm = PL.imbalance(heat)
+            n = self._ep_size()
+            phys = (self.cfg.moe.placement.num_slots
+                    if self.cfg.moe.placement is not None
+                    else self.cfg.moe.num_experts)
+            if n > 1 and phys % n == 0:
+                # per-window attribution: drained windows were charged to
+                # their active placement in _maybe_rebalance; only the
+                # residual device counter ran under the current placement
+                rl = PL.rank_loads(self._device_heat(),
+                                   self.cfg.moe.placement, n)
+                if self._rank_loads is not None:
+                    rl = self._rank_loads + rl
+                rank_mm = PL.imbalance(rl)
         return ServeMetrics(
             ttft_s=ttft, itl_mean_s=float(itls.mean()),
             itl_p99_s=float(np.percentile(itls, 99)),
             output_tok_s=total / (ttft + decode_wall),
-            total_tokens=total)
+            total_tokens=total,
+            expert_heat=None if heat is None else heat.tolist(),
+            heat_max_mean=heat_mm, rank_heat_max_mean=rank_mm)

@@ -24,12 +24,18 @@ from repro.core import (EpGroupConfig, EpPending, ep_create_group,
 
 N, E, K, T, H = 8, 16, 4, 16, 32
 
+from repro.core.placement import redundant_placement
+
 CONFIGS = {
     "ll": dict(mode="ll"),
     "ll/deepep": dict(mode="ll", ll_layout="deepep"),
     "ht": dict(mode="ht"),
     "ht/hier": dict(mode="ht", ep_axis=("pod", "data"), ht_hierarchical=True),
     "baseline": dict(mode="baseline"),
+    # EPLB: a redundant placement rides the exact same staged surface — the
+    # replica-aware slot maps ship in the plan like every other map
+    "ll/eplb": dict(mode="ll", placement=redundant_placement(E, N, 8)),
+    "ht/eplb": dict(mode="ht", placement=redundant_placement(E, N, 8)),
 }
 
 

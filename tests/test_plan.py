@@ -264,6 +264,42 @@ def test_plan_gmaps_match_oracle_construction():
                 cnt[d] += 1
 
 
+def test_plan_maps_identity_placement_bitwise():
+    """EPLB parity at the MAP level: building the plan through an explicit
+    identity placement table must produce bit-identical gather maps to the
+    default contiguous `e // L` arithmetic (outputs-level parity across all
+    backends lives in tests/test_placement.py)."""
+    from repro.core.placement import identity_placement
+    N, E, K, T = 8, 16, 4, 16
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(11)
+    topk = jnp.asarray(
+        np.stack([np.stack([rng.choice(E, K, replace=False) for _ in range(T)])
+                  for _ in range(N)]), jnp.int32)
+    w = jnp.ones((N, T, K), jnp.float32)
+
+    def maps_for(placement):
+        cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=32,
+                            top_k=K, mode="ll", payload_dtype=jnp.float32,
+                            placement=placement)
+        group = ep_create_group(cfg, ep_size=N)
+
+        def step(topk, w):
+            h = ll.ll_create_handle(group, topk[0], w[0])
+            p = h.plan
+            return (p.disp_send_gmap[None], p.disp_recv_gmap[None],
+                    p.comb_send_gmap[None], p.comb_recv_rows[None],
+                    p.disp_counts[None])
+
+        f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 2,
+                                  out_specs=(P("data"),) * 5))
+        return [np.asarray(m) for m in f(topk, w)]
+
+    for a, b in zip(maps_for(None), maps_for(identity_placement(E, N))):
+        np.testing.assert_array_equal(a, b)
+
+
 def test_ht_flat_staged_counts_query():
     """disp_counts rides the plan; the paper's GetNumRecvTokens query and the
     per-expert counts must agree with the routing histogram."""

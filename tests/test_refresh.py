@@ -306,6 +306,180 @@ def test_routing_hash_sensitivity():
 
 
 # --------------------------------------------------------------------------
+# EPLB: placement swaps force rebuild; replay under one placement stays fast
+# --------------------------------------------------------------------------
+
+def _run_with_group(group, placement, x, topk, w, refresh_from=None):
+    """Roundtrip under `group`, scaling y3d by LOGICAL expert id (via the
+    placement's slot table) so results are placement-invariant. With
+    ``refresh_from`` (another group), the handle is created there first and
+    refreshed into `group` — the placement-swap path."""
+    from repro.core import placement as PL
+    E = group.cfg.num_experts
+    L = group.local_experts
+    se = (jnp.arange(E, dtype=jnp.int32).reshape(group.ep_size, L)
+          if placement is None else jnp.asarray(PL.tables(placement).slot_expert))
+    mesh = make_mesh()
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        if refresh_from is not None:
+            h0 = ep_create_handle(refresh_from, topk, w)
+            h = ep_handle_refresh(group, h0, w, jnp.array(topk))
+        else:
+            h = ep_create_handle(group, topk, w)
+        y3d, counts = ep_dispatch(group, h, x)
+        me = plan_mod.my_rank(group)
+        y3d = y3d * (1.0 + se[me])[:, None, None].astype(y3d.dtype)
+        return ep_combine(group, h, y3d)[None]
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                              out_specs=P("data")))
+    return np.asarray(f(x, topk, w))
+
+
+@pytest.mark.parametrize("num_redundant", [0, 8],
+                         ids=["same-slot-count", "changed-slot-count"])
+def test_refresh_placement_swap_rebuilds(num_redundant):
+    """A refresh against a group with a DIFFERENT placement must rebuild the
+    plan even when the routing replays bit-for-bit: the placement-salted
+    routing hash mismatches (same slot count -> cond rebuild branch) or the
+    map shapes differ (changed slot count -> unconditional rebuild). The
+    result must equal a fresh handle built under the new placement."""
+    import dataclasses
+    from repro.core.placement import rebalance
+    rng = np.random.RandomState(12)
+    x, topk, w = rand_inputs(rng)
+    heat = np.ones(E)
+    heat[:4] = 50.0
+    pl = rebalance(heat, N, num_redundant=num_redundant)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32)
+    g_old = ep_create_group(cfg, ep_size=N)
+    g_new = ep_create_group(dataclasses.replace(cfg, placement=pl), ep_size=N)
+    got = _run_with_group(g_new, pl, x, topk, w, refresh_from=g_old)
+    want = _run_with_group(g_new, pl, x, topk, w)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_allclose(got, np.asarray(oracle(x, topk, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_refresh_same_placement_replay_keeps_fast_path():
+    """Under an unchanged (non-default) placement, a routing replay must
+    still take the hash fast path: the weights-only refresh reuses the plan
+    object and a same-value refresh matches the original bitwise."""
+    from repro.core.placement import rebalance
+    rng = np.random.RandomState(13)
+    x, topk, w = rand_inputs(rng)
+    pl = rebalance(np.arange(E, dtype=float) + 1.0, N, num_redundant=8)
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, mode="ll", payload_dtype=jnp.float32,
+                        placement=pl)
+    group = ep_create_group(cfg, ep_size=N)
+    mesh = make_mesh()
+
+    def step(x, topk, w):
+        x, topk, w = x[0], topk[0], w[0]
+        h = ep_create_handle(group, topk, w)
+        h2 = ep_handle_refresh(group, h, w)              # weights-only
+        assert h2.plan is h.plan
+        h3 = ep_handle_refresh(group, h, w, jnp.array(topk))  # hash path
+        return (ep_roundtrip(group, h2, x)[None],
+                ep_roundtrip(group, h3, x)[None])
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                              out_specs=(P("data"), P("data"))))
+    a, b = map(np.asarray, f(x, topk, w))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_rebalancing_decode_loop_matches_naive():
+    """Rebalance-mid-decode parity: the EPLB decode driver (placement swaps
+    between windows through the staged pipeline) must produce exactly what
+    the naive unpipelined loop produces under the same placement schedule."""
+    from repro.core import placement as PL
+    from repro.runtime.decode import rebalancing_decode_loop
+
+    rng = np.random.RandomState(14)
+    mesh = make_mesh()
+    router_w = jnp.asarray(rng.randn(H, E), jnp.float32)
+    # hot-expert routing: a logit bump keeps experts 0-3 hot so the
+    # rebalancer actually moves things
+    bump = jnp.zeros((E,)).at[:4].set(3.0)
+
+    def router_fn(x):
+        logits = x @ router_w + bump
+        w, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+        return idx.astype(jnp.int32), w / w.sum(-1, keepdims=True)
+
+    def expert_fn_for(group, placement):
+        se = (jnp.arange(E, dtype=jnp.int32).reshape(N, -1) if placement is None
+              else jnp.asarray(PL.tables(placement).slot_expert))
+
+        def expert_fn(y3d, counts):
+            me = plan_mod.my_rank(group)
+            return y3d * (1.0 + se[me])[:, None, None].astype(y3d.dtype)
+        return expert_fn
+
+    base_cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                             top_k=K, mode="ll", payload_dtype=jnp.float32)
+    S_steps = 4
+    xs_np = rng.randn(S_steps, 2, N, T, H).astype(np.float32)
+    xs = [(jnp.asarray(xs_np[s, 0]), jnp.asarray(xs_np[s, 1]))
+          for s in range(S_steps)]
+
+    def make_window(group):
+        pl = group.placement
+        efn = expert_fn_for(group, pl)
+
+        def win(pairs):
+            stack = jnp.stack([jnp.stack(p) for p in pairs])  # [S, 2, N, T, H]
+
+            def run(stack):
+                seq = [(stack[s, 0, 0], stack[s, 1, 0])
+                       for s in range(stack.shape[0])]
+                outs = decode_loop(group, router_fn, efn, seq)
+                heat = sum(
+                    PL.heat_from_topk(router_fn(x)[0], E)
+                    for pair in seq for x in pair)
+                heat = jax.lax.psum(heat, "data")
+                return (jnp.stack([jnp.stack([a, b]) for a, b in outs])[None],
+                        heat[None])
+
+            o, heat = jax.jit(jax.shard_map(
+                run, mesh=mesh, in_specs=(P(None, None, "data"),),
+                out_specs=(P("data"), P("data"))))(stack)
+            o = np.asarray(o)                       # [N, S, 2, T, H]
+            return ([(o[:, s, 0], o[:, s, 1]) for s in range(len(pairs))],
+                    np.asarray(heat)[0])
+        return win
+
+    outs, placements = rebalancing_decode_loop(
+        base_cfg, make_window, xs, rebalance_every=2, ep_size=N,
+        num_redundant=8)
+    assert placements[0] is None and placements[1] is not None
+    assert len(outs) == S_steps
+
+    # naive reference under the SAME placement schedule
+    import dataclasses as dc
+    for s in range(S_steps):
+        pl = placements[s // 2]
+        group = ep_create_group(dc.replace(base_cfg, placement=pl), ep_size=N)
+        efn = expert_fn_for(group, pl)
+
+        def naive(stack):
+            oa = naive_decode_step(group, router_fn, efn, stack[0, 0])
+            ob = naive_decode_step(group, router_fn, efn, stack[1, 0])
+            return jnp.stack([oa, ob])[None]
+
+        want = np.asarray(jax.jit(jax.shard_map(
+            naive, mesh=mesh, in_specs=(P(None, "data"),),
+            out_specs=P("data")))(jnp.asarray(xs_np[s])))
+        got = np.stack([outs[s][0], outs[s][1]], axis=1)   # [N, 2, T, H]
+        np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
 # double-buffered decode pipeline == naive loop
 # --------------------------------------------------------------------------
 

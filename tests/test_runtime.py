@@ -116,6 +116,51 @@ def test_decode_server_metrics():
     assert m.output_tok_s > 0 and m.itl_p99_s >= m.itl_mean_s
 
 
+def test_decode_server_heat_metrics_and_rebalance():
+    """EPLB serving hook: with track_expert_heat the metrics fold per-expert
+    heat + load-imbalance ratios (JSON-safe), and rebalance_every swaps
+    placements mid-decode WITHOUT changing the greedy token stream."""
+    import dataclasses
+    import json
+    from repro.runtime.server import DecodeServer
+    cfg = get_smoke("dbrx-132b")
+    moe = dataclasses.replace(cfg.moe, ep_mode="ll", ep_axis=("data",),
+                              track_expert_heat=True)
+    cfg = dataclasses.replace(cfg, moe=moe)
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    prompts = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab, (8, 4)), jnp.int32)
+
+    srv = DecodeServer(cfg, batch=8, max_len=32, mesh=mesh)
+    m = srv.serve(prompts, gen_steps=6)
+    assert m.expert_heat is not None and len(m.expert_heat) == moe.num_experts
+    assert m.heat_max_mean >= 1.0 and m.rank_heat_max_mean >= 1.0
+    assert sum(m.expert_heat) > 0
+    json.dumps(m.as_dict())                 # serving benches emit this
+
+    # rebalancing server: same greedy tokens, placements actually adopted
+    srv_a = DecodeServer(cfg, batch=8, max_len=32, mesh=mesh)
+    first_a, _ = srv_a.prefill(prompts)
+    toks_a, _ = srv_a.decode(first_a, 6)
+    srv_b = DecodeServer(cfg, batch=8, max_len=32, mesh=mesh,
+                         rebalance_every=2, num_redundant_experts=8)
+    first_b, _ = srv_b.prefill(prompts)
+    toks_b, _ = srv_b.decode(first_b, 6)
+    np.testing.assert_array_equal(toks_a, toks_b)
+    # at least one placement adopted (an unchanged rebalance table is
+    # deduped — the scheduler reuses the object and skips the re-jit)
+    assert len(srv_b.placements) >= 1
+    assert srv_b.placements[0].num_redundant == 8
+    assert srv_b.cfg.moe.placement is srv_b.placements[-1]
+
+    # the hook refuses configs that can't feed it
+    moe_off = dataclasses.replace(moe, track_expert_heat=False)
+    with pytest.raises(ValueError, match="track_expert_heat"):
+        DecodeServer(dataclasses.replace(cfg, moe=moe_off), batch=8,
+                     max_len=32, mesh=mesh, rebalance_every=2)
+
+
 def test_decode_server_pipelined_same_tokens():
     """pipeline_depth=2 (double-buffered host dispatch) must produce the
     identical greedy token stream — only the blocking schedule changes."""
