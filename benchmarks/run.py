@@ -60,6 +60,7 @@ def emit_bench_ll_kernels() -> bool:
     src_dp = RESULTS / "decode_pipeline.json"
     src_md = RESULTS / "modes_crossover.json"
     src_pl = RESULTS / "imbalance.json"
+    src_sv = RESULTS / "serving.json"
     if not (src_ll.exists() and src_sm.exists()):
         return False
     ll = json.loads(src_ll.read_text())
@@ -67,6 +68,7 @@ def emit_bench_ll_kernels() -> bool:
     dp = json.loads(src_dp.read_text()) if src_dp.exists() else None
     md = json.loads(src_md.read_text()) if src_md.exists() else None
     pl = json.loads(src_pl.read_text()) if src_pl.exists() else None
+    sv = json.loads(src_sv.read_text()) if src_sv.exists() else None
 
     def stamp(p):
         return datetime.datetime.fromtimestamp(p.stat().st_mtime).isoformat(
@@ -79,6 +81,8 @@ def emit_bench_ll_kernels() -> bool:
         sources["modes"] = stamp(src_md)
     if pl is not None:
         sources["placement"] = stamp(src_pl)
+    if sv is not None:
+        sources["serving"] = stamp(src_sv)
     payload = {
         "schema": "bench_ll_kernels/v4",
         "sources": sources,
@@ -96,8 +100,13 @@ def emit_bench_ll_kernels() -> bool:
         payload["modes"] = md
     if pl is not None:
         # EPLB imbalance sweep: per-rank recv load, contiguous vs
-        # rebalanced vs redundant placement under skewed routing
+        # rebalanced vs redundant placement under skewed routing (plus the
+        # adoption rows: per-step in-graph expansion vs adopt-once)
         payload["placement"] = pl
+    if sv is not None:
+        # Table VII serving metrics, incl. the placed-serving steady-state
+        # rows (per-step expansion vs MoESpec.params_physical adopt-once)
+        payload["serving"] = sv
     (ROOT / "BENCH_ll_kernels.json").write_text(json.dumps(payload, indent=1))
     print(f"wrote {ROOT / 'BENCH_ll_kernels.json'}")
     return True

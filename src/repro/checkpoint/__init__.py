@@ -1,3 +1,4 @@
 from repro.checkpoint.store import (  # noqa: F401
     save_checkpoint, restore_checkpoint, latest_step, rebind_expert_leaves,
+    adopt_expert_params, EXPERT_PARAM_KEYS,
 )

@@ -11,17 +11,30 @@ index records the global shape; this container is single-host so the "shard"
 is the whole array — the reshard logic is identical either way.)
 
 EPLB interplay (`core/placement.py`): expert-stacked weights are stored in
-LOGICAL [E, ...] order — placements rebind them to physical slot order
-in-graph — so checkpoints are placement-independent by default and a restart
-may adopt any placement. For engines that persist the *physical* layout
-(replicated hot experts on their serving ranks), ``rebind_expert_leaves``
-converts expert leaves between placements at restore time: collapse the
-source placement's replicas to logical weights (primary replica), then
-expand for the destination placement — the elastic-EPLB analogue of the
-mesh reshard this module already does.
+LOGICAL [E, ...] order by default — training rebinds them to physical slot
+order in-graph — so checkpoints are placement-independent and a restart may
+adopt any placement. Serving engines that adopt placements once
+(``MoESpec.params_physical``) persist the *physical* layout instead:
+``save_checkpoint(..., placement=...)`` records the placement table +
+fingerprint in the index, and ``restore_checkpoint(..., placement=...)``
+validates the fingerprint against the requested layout and rebinds on
+mismatch (collapse the stored placement's replicas to logical via the
+primary replica, then expand for the requested placement — the elastic-EPLB
+analogue of the mesh reshard this module already does). ``rebind_expert_
+leaves`` / ``adopt_expert_params`` are the standalone rebinds the runtime
+drivers use at adoption boundaries (old physical -> new physical, device
+buffers donated so peak memory stays ~one set of expert weights).
+
+Dtype hygiene: restore never routes a pure-host numpy leaf through
+``jax.numpy.asarray`` (x64 counters would be silently truncated on x32
+runtimes — the trainer's step/seed leaves and drained float64 heat totals
+stay numpy), and device-leaf target dtypes are canonicalized with
+``jax.dtypes.canonicalize_dtype`` so an x64 host dtype in a target spec
+restores cleanly instead of emitting a truncation warning.
 """
 from __future__ import annotations
 
+import functools
 import json
 import pathlib
 import re
@@ -61,42 +74,177 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def rebind_expert_leaves(tree, expert_keys, src_placement=None,
-                         dst_placement=None):
+# canonical in core/placement.py; re-exported here because the checkpoint
+# surface is where callers meet the rebinding helpers
+EXPERT_PARAM_KEYS = PL.EXPERT_PARAM_KEYS
+
+
+def _leaf_name(path):
+    """Innermost dict key on a tree path — the single definition the
+    save-time layout check, restore-time rebind, and rebind_expert_leaves
+    all share, so they can never disagree on which leaves are expert
+    weights."""
+    return next((p.key for p in reversed(path)
+                 if isinstance(p, jax.tree_util.DictKey)), None)
+
+
+def _same_layout(src_placement, dst_placement) -> bool:
+    if src_placement is dst_placement:
+        return True
+    if src_placement is None or dst_placement is None:
+        # None = logical order; only an identity table matches it exactly
+        other = src_placement if dst_placement is None else dst_placement
+        return other.is_identity()
+    return src_placement.slot_expert == dst_placement.slot_expert
+
+
+@functools.lru_cache(maxsize=8)
+def _donating_rebind(src_placement, dst_placement, axis: int):
+    """Jitted physical->physical rebind with input-buffer donation: the old
+    layout's buffer is reused for the new one, so an adoption boundary holds
+    ~one set of expert weights plus one leaf in flight, never two full sets.
+    Donation requires shape preservation — when the slot count changes
+    (e.g. a different redundant-slot budget) XLA cannot alias the buffers,
+    so we skip the donation flag rather than warn; the old buffer still
+    frees at its last use. Cached per (src, dst, axis) — placements are
+    hashable — and bounded, so a long-lived rebalancing server cannot
+    accumulate compiled rebinds."""
+    any_pl = src_placement or dst_placement
+    in_rows = (src_placement.num_slots if src_placement
+               else any_pl.num_experts if any_pl else None)
+    out_rows = (dst_placement.num_slots if dst_placement
+                else any_pl.num_experts if any_pl else None)
+    same_rows = in_rows is not None and in_rows == out_rows
+
+    def f(w):
+        if src_placement is not None:
+            w = PL.collapse_expert_params(w, src_placement, axis)
+        if dst_placement is not None:
+            w = PL.expand_expert_params(w, dst_placement, axis)
+        return w
+    return jax.jit(f, donate_argnums=(0,) if same_rows else ())
+
+
+def _structural(placement):
+    """Placement canonicalized to its table content (version stripped): the
+    rebind computation reads only the table, and the scheduler bumps the
+    version on every changed table — keying compiled rebinds on the full
+    object would therefore never cache-hit across adoption boundaries."""
+    import dataclasses
+    if placement is None or placement.version == 0:
+        return placement
+    return dataclasses.replace(placement, version=0)
+
+
+def _rebind_leaf(w, src_placement, dst_placement, axis: int, donate: bool):
+    if _same_layout(src_placement, dst_placement):
+        return w
+    if donate and not isinstance(w, (np.ndarray, np.generic)):
+        return _donating_rebind(_structural(src_placement),
+                                _structural(dst_placement), axis)(w)
+    if src_placement is not None:
+        w = PL.collapse_expert_params(w, src_placement, axis)
+    if dst_placement is not None:
+        w = PL.expand_expert_params(w, dst_placement, axis)
+    return w
+
+
+def rebind_expert_leaves(tree, expert_keys=EXPERT_PARAM_KEYS,
+                         src_placement=None, dst_placement=None, *,
+                         axis: int = 0, donate: bool = False):
     """Replica-aware expert-weight rebinding between placements.
 
     Leaves whose dict key is in ``expert_keys`` (e.g. ``w_gate``/``w_up``/
-    ``w_down``) carry a leading expert axis laid out by ``src_placement``
+    ``w_down``) carry an expert axis (``axis``) laid out by ``src_placement``
     (None = logical [E, ...] order) and are re-gathered for
     ``dst_placement`` (None = back to logical). Replicas of one expert hold
     identical weights by construction, so collapsing reads the primary
     replica and expanding duplicates — a rebalance that moves or replicates
     an expert never loses weight state. All other leaves pass through
-    untouched."""
+    untouched. ``donate=True`` routes device leaves through a jitted rebind
+    that donates the source buffer (the adopt-once serving path); numpy
+    leaves always rebind host-side."""
     keys = set(expert_keys)
 
     def rebind(path, leaf):
-        name = next((p.key for p in reversed(path)
-                     if isinstance(p, jax.tree_util.DictKey)), None)
+        name = _leaf_name(path)
         if name not in keys:
             return leaf
-        w = leaf
-        if src_placement is not None:
-            w = PL.collapse_expert_params(w, src_placement)
-        if dst_placement is not None:
-            w = PL.expand_expert_params(w, dst_placement)
-        return w
+        return _rebind_leaf(leaf, src_placement, dst_placement, axis, donate)
 
     return jax.tree_util.tree_map_with_path(rebind, tree)
 
 
-def save_checkpoint(ckpt_dir, step: int, tree, *, extra: dict | None = None):
+def adopt_expert_params(params, specs, src_placement=None, dst_placement=None,
+                        *, donate: bool = True):
+    """Adopt-once rebinding over a FULL model parameter tree: every leaf
+    whose ``ParamSpec`` names an ``"expert"`` logical axis is rebound from
+    ``src_placement``'s physical slot order to ``dst_placement``'s along
+    that axis (handles scan-stacked ``[n_layers, slots, ...]`` leaves, where
+    the expert axis sits behind the stack axis). Non-expert leaves pass
+    through untouched. This is the ``MoESpec.params_physical`` serving path:
+    the runtime rebinds once at a placement-adoption boundary instead of
+    paying the in-graph gather every step (docs/DESIGN.md §8).
+
+    OWNERSHIP: ``donate=True`` (the default — adoption means taking
+    ownership, matching the runtime drivers' ``donate_params=True``)
+    DELETES the input tree's expert device buffers whenever the slot count
+    is preserved (e.g. logical -> pure-permutation placement); pass
+    ``donate=False`` to keep using the source tree afterwards (e.g. to
+    also save a logical checkpoint from it)."""
+    def go(spec, leaf):
+        axes = spec.axes or ()
+        if "expert" not in axes:
+            return leaf
+        return _rebind_leaf(leaf, src_placement, dst_placement,
+                            axes.index("expert"), donate)
+
+    return jax.tree.map(go, specs, params,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, *, extra: dict | None = None,
+                    placement=None, expert_keys=EXPERT_PARAM_KEYS):
+    """Write one checkpoint. With ``placement`` the tree's expert leaves are
+    declared to be in that placement's PHYSICAL slot order (the adopt-once
+    serving layout): the placement table + fingerprint are recorded in the
+    index so ``restore_checkpoint`` can validate the layout or rebind to
+    whatever placement the restoring process wants — an elastic restart is
+    never locked to the placement that wrote the checkpoint."""
+    if placement is not None:
+        # sanity-check the declaration where a shape signal exists — and do
+        # it BEFORE touching the filesystem, so a rejected save leaves no
+        # stale .tmp directory behind: every expert leaf must carry
+        # num_slots rows on its expert axis (axis 0, or axis 1 for
+        # scan-stacked leaves). A mislabeled LOGICAL tree under a redundant
+        # placement is caught here at save time instead of restoring
+        # corrupted weights later; a pure-permutation placement
+        # (num_slots == E) is shape-indistinguishable from logical order,
+        # so THAT mislabel is the caller's to avoid.
+        keys, S = set(expert_keys), placement.num_slots
+
+        def check(path, leaf):
+            name = _leaf_name(path)
+            if name in keys and S not in leaf.shape[:2]:
+                raise ValueError(
+                    f"save_checkpoint(placement=...): expert leaf "
+                    f"{jax.tree_util.keystr(path)} has shape "
+                    f"{tuple(leaf.shape)} but the placement defines {S} "
+                    "physical slots — the tree is not in this placement's "
+                    "physical layout (adopt_expert_params first)")
+            return leaf
+        jax.tree_util.tree_map_with_path(check, tree)
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
     tmp = d.with_suffix(".tmp")
     tmp.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(tree)
     index = dict(step=step, n_leaves=len(leaves),
                  treedef=str(treedef), time=time.time(), extra=extra or {})
+    if placement is not None:
+        index["expert_layout"] = dict(
+            keys=list(expert_keys),
+            fingerprint=placement.fingerprint(),
+            placement=PL.placement_to_jsonable(placement))
     shapes = []
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
@@ -122,29 +270,101 @@ def latest_step(ckpt_dir) -> int | None:
     return max(steps) if steps else None
 
 
+# sentinel: restore the expert leaves exactly as stored (no layout change)
+_AS_STORED = object()
+
+
 def restore_checkpoint(ckpt_dir, step: int, target_tree, *, mesh=None,
-                       rules=None):
+                       rules=None, placement=_AS_STORED, expert_keys=None):
     """target_tree: pytree of arrays OR ParamSpec (for sharding metadata).
-    Elastic: the mesh may differ from the one that wrote the checkpoint."""
+    Elastic: the mesh may differ from the one that wrote the checkpoint.
+
+    ``placement`` requests the expert-leaf layout the restoring process
+    wants: an ``EpPlacement`` (physical slot order for that table), ``None``
+    (logical ``[E, ...]`` order), or omitted (as stored). When the request
+    differs from the layout recorded in the index — fingerprints compared,
+    absent record = logical — the expert leaves are rebound host-side
+    (collapse the stored placement via primary replicas, expand for the
+    requested one), so an elastic restart may adopt any placement
+    regardless of which one wrote the checkpoint. ``expert_keys`` defaults
+    to the keys recorded at save time (or the standard MoE weight keys).
+
+    Dtype policy: numpy targets restore as numpy at full host precision
+    (x64-safe); device targets canonicalize the requested dtype first, so an
+    x32 runtime restores an int64-specced counter as int32 cleanly instead
+    of emitting a truncation warning."""
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
     index = json.loads((d / "index.json").read_text())
     is_leaf = lambda x: isinstance(x, ParamSpec)
-    leaves, treedef = jax.tree.flatten(target_tree, is_leaf=is_leaf)
-    assert len(leaves) == index["n_leaves"], \
-        f"leaf count mismatch: {len(leaves)} vs {index['n_leaves']}"
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target_tree,
+                                                             is_leaf=is_leaf)
+    assert len(leaves_p) == index["n_leaves"], \
+        f"leaf count mismatch: {len(leaves_p)} vs {index['n_leaves']}"
+
+    layout = index.get("expert_layout")
+    src_pl = (PL.placement_from_jsonable(layout["placement"])
+              if layout else None)
+    dst_pl = src_pl if placement is _AS_STORED else placement
+    need_rebind = not _same_layout(src_pl, dst_pl)
+    keys = set(expert_keys if expert_keys is not None
+               else (layout["keys"] if layout else EXPERT_PARAM_KEYS))
+    # rows the stored layout puts at the expert axis — used to sanity-check
+    # key-matched plain-array targets, whose expert axis we must assume is 0
+    src_rows = (src_pl.num_slots if src_pl
+                else dst_pl.num_experts if dst_pl else None)
+
+    def _canon(dt):
+        return jax.dtypes.canonicalize_dtype(dt)
+
     out = []
-    for i, tgt in enumerate(leaves):
+    for i, (path, tgt) in enumerate(leaves_p):
         arr = _from_savable(np.load(d / f"leaf_{i:05d}.npy"),
                             index["shapes"][i][1])
+        if need_rebind:
+            name = _leaf_name(path)
+            spec_axes = tgt.axes if isinstance(tgt, ParamSpec) else ()
+            if "expert" in (spec_axes or ()):
+                arr = _rebind_leaf(arr, src_pl, dst_pl,
+                                   spec_axes.index("expert"), False)
+            elif name in keys:
+                # plain-array target: no spec to name the expert axis, so it
+                # must be the leading one. A scan-stacked leaf ([n_layers,
+                # slots, ...]) would be silently rebound along the LAYER
+                # axis — refuse when detectable (n_layers != slot count; a
+                # coincidental match is indistinguishable, which is why
+                # ParamSpec targets are the authoritative path for stacked
+                # trees) and point at the spec-driven path.
+                if arr.shape[0] != src_rows:
+                    raise ValueError(
+                        f"cannot rebind leaf {jax.tree_util.keystr(path)}: "
+                        f"axis 0 has {arr.shape[0]} rows but the stored "
+                        f"layout defines {src_rows} expert slots — for "
+                        "stacked expert leaves restore against a ParamSpec "
+                        "target (the spec's \"expert\" axis names the "
+                        "rebind axis)")
+                arr = _rebind_leaf(arr, src_pl, dst_pl, 0, False)
         if isinstance(tgt, ParamSpec):
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(
+                    f"restored leaf {jax.tree_util.keystr(path)} has shape "
+                    f"{tuple(arr.shape)} but the target spec says "
+                    f"{tuple(tgt.shape)} — for expert-stacked weights this "
+                    "usually means the checkpoint's placement layout doesn't "
+                    "match the requested one (pass placement=... to rebind)")
             if mesh is not None:
                 from repro.parallel.sharding import DEFAULT_RULES
                 sh = spec_to_named_sharding(tgt, mesh, rules or DEFAULT_RULES)
-                out.append(jax.device_put(arr.astype(tgt.dtype), sh))
+                out.append(jax.device_put(
+                    np.asarray(arr).astype(_canon(tgt.dtype), copy=False), sh))
             else:
-                out.append(jax.numpy.asarray(arr, tgt.dtype))
+                out.append(jax.numpy.asarray(arr, _canon(tgt.dtype)))
+        elif isinstance(tgt, (np.ndarray, np.generic)):
+            # pure-host leaf (trainer step/seed counters, drained float64
+            # heat totals): stays numpy — never routed through
+            # jax.numpy.asarray, where x64 dtypes truncate on x32 runtimes
+            out.append(np.asarray(arr, dtype=tgt.dtype))
         else:
-            x = jax.numpy.asarray(arr, tgt.dtype)
+            x = jax.numpy.asarray(arr, _canon(tgt.dtype))
             if hasattr(tgt, "sharding") and mesh is not None:
                 x = jax.device_put(x, tgt.sharding)
             out.append(x)

@@ -14,6 +14,7 @@ from repro.core.placement import (  # noqa: F401
     EpPlacement, HeatTracker, identity_placement, redundant_placement,
     rebalance, heat_from_topk, fold_slot_counts, rank_loads, imbalance,
     expand_expert_params, collapse_expert_params,
+    placement_to_jsonable, placement_from_jsonable,
 )
 from repro.core.plan import EpPlan, build_plan, routing_hash  # noqa: F401
 from repro.core.routing import RouterConfig, RouterOutput, route  # noqa: F401

@@ -49,6 +49,11 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+# dict keys of the expert-stacked MoE weights (models/moe.py moe_spec) —
+# the leaves the placement/checkpoint rebinding helpers act on by default
+# (canonical here; checkpoint.store re-exports it)
+EXPERT_PARAM_KEYS = ("w_gate", "w_up", "w_down")
+
 
 @dataclasses.dataclass(frozen=True)
 class EpPlacement:
@@ -115,6 +120,21 @@ class EpPlacement:
         fp = zlib.crc32(flat.tobytes())
         fp ^= (self.version * 0x9E3779B1) & 0xFFFFFFFF
         return fp or 1
+
+
+def placement_to_jsonable(placement: EpPlacement) -> dict:
+    """JSON-safe rendering of a placement table (checkpoint indexes, bench
+    result files). Round-trips exactly through ``placement_from_jsonable``."""
+    return dict(num_experts=placement.num_experts,
+                slot_expert=[list(row) for row in placement.slot_expert],
+                version=placement.version)
+
+
+def placement_from_jsonable(d: dict) -> EpPlacement:
+    return EpPlacement(int(d["num_experts"]),
+                       tuple(tuple(int(e) for e in row)
+                             for row in d["slot_expert"]),
+                       version=int(d.get("version", 0)))
 
 
 def identity_placement(num_experts: int, num_ranks: int) -> EpPlacement:
@@ -345,15 +365,33 @@ class RebalanceScheduler:
 def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
                     ep_size: int, num_redundant: int = 0,
                     inner_size: int | None = None, decay: float = 0.0,
-                    rebalance_fn=None):
+                    rebalance_fn=None, params=None,
+                    expert_keys: tuple = EXPERT_PARAM_KEYS,
+                    donate_params: bool = True):
     """Shared skeleton of the host-level EPLB drivers (`runtime/decode.py`,
     `runtime/prefill.py`): run each item through a per-placement compiled
     fn, fold its heat, and advance the placement at every ``advance_every``
     item boundary (never after the last item). ``make_fn(group)`` builds the
     caller's jit/shard_map-wrapped unit returning ``(out, heat)``; fns are
     cached per placement object, so an unchanged rebalance table (the
-    scheduler's dedup) re-traces nothing. Returns ``(outs, placements)``,
-    one entry per item."""
+    scheduler's dedup) re-traces nothing. The cache is BOUNDED to the
+    current and previous placement: a long-lived server swapping hundreds
+    of times must not accumulate compiled executables (each holds device
+    buffers for its traced constants). Returns ``(outs, placements)``,
+    one entry per item.
+
+    Adopt-once physical weights: with ``params`` (a pytree whose
+    ``expert_keys`` dict leaves carry a leading expert axis), ``make_fn`` is
+    called as ``make_fn(group, params)`` where the expert leaves have been
+    rebound ONCE per adopted placement into that placement's physical slot
+    order (old physical -> new physical) — the per-step in-graph expansion
+    is skipped entirely, which is the serving fast path (docs/DESIGN.md
+    §8). ``params`` must arrive laid out for ``base_cfg.placement``
+    (logical when that is None). With ``donate_params=True`` (default) the
+    driver takes OWNERSHIP: old expert buffers are donated at each
+    boundary (peak memory ~one weight set), which deletes the caller's
+    arrays when the slot count is preserved — pass ``donate_params=False``
+    to keep using the original tree afterwards."""
     import dataclasses as _dc
 
     from repro.core.group import ep_create_group
@@ -370,13 +408,23 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
         cfg = _dc.replace(base_cfg, placement=pl, num_redundant_experts=0)
         group = ep_create_group(cfg, ep_size=ep_size, inner_size=inner_size)
         if pl not in fns:
-            fns[pl] = make_fn(group)
+            fns[pl] = (make_fn(group) if params is None
+                       else make_fn(group, params))
+            if len(fns) > 2:     # keep current + previous placement only
+                for k in [k for k in fns if k is not pl][:-1]:
+                    del fns[k]
         out, heat = fns[pl](item)
         outs.append(out)
         placements.append(pl)
         sched.observe(heat)
         if (i + 1) % advance_every == 0 and i + 1 < len(items):
-            pl = sched.advance()
+            new_pl = sched.advance()
+            if new_pl is not pl and params is not None:
+                from repro.checkpoint.store import rebind_expert_leaves
+                params = rebind_expert_leaves(
+                    params, expert_keys, src_placement=pl,
+                    dst_placement=new_pl, donate=donate_params)
+            pl = new_pl
     return outs, placements
 
 
@@ -384,17 +432,25 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
 # replica-aware expert-parameter rebinding
 # --------------------------------------------------------------------------
 
-def expand_expert_params(w, placement: EpPlacement):
-    """Logical expert-stacked weights [E, ...] -> physical slot order
-    [N*S, ...]: each physical slot gets its logical expert's weights
-    (replicas duplicate). Works on jnp or np arrays."""
+def expand_expert_params(w, placement: EpPlacement, axis: int = 0):
+    """Logical expert-stacked weights [..., E, ...] -> physical slot order
+    [..., N*S, ...] along ``axis``: each physical slot gets its logical
+    expert's weights (replicas duplicate). numpy stays numpy (host-side
+    checkpoint rebinds never round-trip through the device), jnp stays jnp
+    — ``axis`` covers scan-stacked parameter trees whose expert dim sits
+    behind the leading stack axis."""
     perm = tables(placement).slot_expert.reshape(-1)
-    return jnp.take(jnp.asarray(w), jnp.asarray(perm), axis=0)
+    if isinstance(w, np.ndarray):
+        return np.take(w, perm, axis=axis)
+    return jnp.take(jnp.asarray(w), jnp.asarray(perm), axis=axis)
 
 
-def collapse_expert_params(w_phys, placement: EpPlacement):
-    """Physical slot-ordered weights [N*S, ...] -> logical [E, ...] via each
-    expert's primary replica (replicas hold identical weights by
-    construction, so any replica would do — the primary is deterministic)."""
+def collapse_expert_params(w_phys, placement: EpPlacement, axis: int = 0):
+    """Physical slot-ordered weights [..., N*S, ...] -> logical [..., E, ...]
+    along ``axis`` via each expert's primary replica (replicas hold identical
+    weights by construction, so any replica would do — the primary is
+    deterministic). numpy in, numpy out (see ``expand_expert_params``)."""
     rows = tables(placement).primary_row
-    return jnp.take(jnp.asarray(w_phys), jnp.asarray(rows), axis=0)
+    if isinstance(w_phys, np.ndarray):
+        return np.take(w_phys, rows, axis=axis)
+    return jnp.take(jnp.asarray(w_phys), jnp.asarray(rows), axis=axis)

@@ -56,10 +56,19 @@ class MoESpec:
     quantize_dispatch: bool = False
     # --- EPLB (core/placement.py) ---
     # Explicit expert placement table (EpPlacement) with optional redundant
-    # replicas; None = contiguous striping. Expert weights stay stored in
-    # logical [E, ...] order — moe_block rebinds them to physical slot order
-    # in-graph when a placement is set.
+    # replicas; None = contiguous striping. In the default logical mode
+    # expert weights stay stored in logical [E, ...] order — moe_block
+    # rebinds them to physical slot order in-graph when a placement is set.
     placement: "object | None" = None
+    # Adopt-once physical parameter mode (serving fast path): expert-stacked
+    # weights (w_gate/w_up/w_down) are stored ALREADY in `placement`'s
+    # physical [N*S, ...] slot order and moe_block skips the per-step
+    # in-graph expansion entirely. The runtime rebinds params host-side at
+    # placement-adoption boundaries (checkpoint.adopt_expert_params, buffers
+    # donated). Keep False for training, where placements may swap mid-epoch
+    # and checkpoints should stay placement-independent; with placement=None
+    # the physical layout coincides with the logical one (docs/DESIGN.md §8).
+    params_physical: bool = False
     # Fold per-logical-expert routed-token counts into the decode state
     # ("expert_heat") so serving reports load imbalance and the rebalance
     # hook (runtime/server.py) can re-place experts between steps. The

@@ -25,23 +25,39 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (EpGroupConfig, ep_create_group, ep_create_handle,
                         ep_dispatch, ep_combine, ep_complete)
-from repro.core.placement import expand_expert_params
+from repro.core.placement import expand_expert_params, collapse_expert_params
 from repro.core.routing import RouterConfig, route
 from repro.kernels import ops as K
 from repro.models.config import ArchConfig
 from repro.models.layers import ffn_spec, ffn_apply
 from repro.parallel.sharding import ParamSpec
 
+def _num_weight_rows(m) -> int:
+    """Leading dim of the expert-stacked weights under the param-layout
+    mode: physical slot count in adopt-once mode (== E when placement is
+    None or identity), logical E otherwise."""
+    if m.params_physical and m.placement is not None:
+        return m.placement.num_slots
+    return m.num_experts
+
 
 def moe_spec(cfg: ArchConfig, dtype=None):
+    """Param specs. The expert-stacked weights (w_gate/w_up/w_down — the
+    ``checkpoint.EXPERT_PARAM_KEYS``) follow the layout mode: logical
+    [E, ...] by default, physical [N*S, ...] under ``params_physical``
+    (router and sel_bias always stay logical — routing is a logical-expert
+    concept). NOTE: physical specs describe shapes/sharding only; random
+    init must go through the LOGICAL spec + one adoption
+    (checkpoint.adopt_expert_params) so replicas hold identical weights."""
     m, d = cfg.moe, cfg.d_model
     dtype = dtype or cfg.dtype
     f = m.d_ff_expert
+    P_rows = _num_weight_rows(m)
     sp = dict(
         router=ParamSpec((d, m.num_experts), jnp.float32, ("embed", None)),
-        w_gate=ParamSpec((m.num_experts, d, f), dtype, ("expert", "embed", "expert_ffn")),
-        w_up=ParamSpec((m.num_experts, d, f), dtype, ("expert", "embed", "expert_ffn")),
-        w_down=ParamSpec((m.num_experts, f, d), dtype, ("expert", "expert_ffn", "embed")),
+        w_gate=ParamSpec((P_rows, d, f), dtype, ("expert", "embed", "expert_ffn")),
+        w_up=ParamSpec((P_rows, d, f), dtype, ("expert", "embed", "expert_ffn")),
+        w_down=ParamSpec((P_rows, f, d), dtype, ("expert", "expert_ffn", "embed")),
     )
     if m.use_selection_bias:
         sp["sel_bias"] = ParamSpec((m.num_experts,), jnp.float32, (None,), init="zeros")
@@ -201,16 +217,28 @@ def moe_block(p, x, cfg: ArchConfig, mesh, *, with_heat: bool = False):
     )
     w1, w3, w2 = p["w_gate"], p["w_up"], p["w_down"]
     if m.placement is not None:
-        # replica-aware weight rebinding: params stay stored logical [E, ...];
-        # each physical slot gathers its expert's weights (replicas duplicate)
-        # before the shard_map splits them over the EP axes — resolved at the
-        # same altitude as the plan's slot maps, never inside phase bodies.
-        # Trade-off: the gather runs per forward step (cross-rank for moved
-        # experts), which keeps checkpoints placement-independent; a serving
-        # engine that swaps rarely should instead rebind params ONCE at
-        # adoption via checkpoint.rebind_expert_leaves (ROADMAP open item).
-        w1, w3, w2 = (expand_expert_params(w, m.placement)
-                      for w in (w1, w3, w2))
+        if m.params_physical:
+            # adopt-once mode (serving fast path): weights arrive ALREADY in
+            # physical [N*S, ...] slot order — rebound host-side at the last
+            # placement-adoption boundary (checkpoint.adopt_expert_params) —
+            # so the per-step cross-rank gather is skipped entirely and the
+            # placed steady state matches placement=None per-step cost.
+            if w1.shape[0] != phys:
+                raise ValueError(
+                    f"params_physical=True: expert weights have "
+                    f"{w1.shape[0]} rows but the placement defines {phys} "
+                    "physical slots — rebind at adoption via "
+                    "checkpoint.adopt_expert_params / rebind_expert_leaves")
+        else:
+            # logical mode (training default): params stay stored logical
+            # [E, ...]; each physical slot gathers its expert's weights
+            # (replicas duplicate) before the shard_map splits them over the
+            # EP axes — resolved at the same altitude as the plan's slot
+            # maps, never inside phase bodies. The gather runs per forward
+            # step (cross-rank for moved experts), which keeps checkpoints
+            # placement-independent across mid-epoch swaps.
+            w1, w3, w2 = (expand_expert_params(w, m.placement)
+                          for w in (w1, w3, w2))
     res = fn(x, p["router"], w1, w3, w2, sel)
     y, aux = res[0], res[1]
     if m.shared_experts:
@@ -227,6 +255,11 @@ def _moe_dense_fallback(p, x, cfg: ArchConfig, *, with_heat: bool = False):
     r = route(xt.astype(jnp.float32) @ p["router"], _router_cfg(m),
               p.get("sel_bias"))
     w1, w3, w2 = p["w_gate"], p["w_up"], p["w_down"]
+    if m.params_physical and m.placement is not None:
+        # the dense reference routes by logical expert: collapse physical
+        # slot-ordered weights to logical order (primary replica)
+        w1, w3, w2 = (collapse_expert_params(w, m.placement)
+                      for w in (w1, w3, w2))
     h_g = jnp.einsum("td,edf->tef", xt, w1)
     h_u = jnp.einsum("td,edf->tef", xt, w3)
     h = (jax.nn.silu(h_g.astype(jnp.float32)) * h_u.astype(jnp.float32)).astype(x.dtype)

@@ -6,6 +6,16 @@ modules but reuse the stack machinery here.
 
 Scan-over-layers keeps the HLO O(1) in depth (the production-framework norm);
 the dry-run's roofline corrects per-layer cost by trip count (docs/DESIGN.md §6).
+
+Param-layout threading (docs/DESIGN.md §8): expert-stacked MoE weights ride
+the scanned ``moe_stack`` as ``[n_moe, R, ...]`` where R follows the layout
+mode — logical E by default, physical slot count (E + redundant replicas)
+under ``MoESpec.params_physical``. The stack machinery is shape-agnostic, so
+a placement adoption that changes the slot count simply retraces the decode
+step with the new stacked shapes; everything *routing*-scoped stays logical
+regardless of mode: the router/sel_bias specs, and the ``expert_heat``
+decode-state counter, which is [E] per-LOGICAL-expert in both layouts (the
+EPLB rebalancer consumes logical heat).
 """
 from __future__ import annotations
 
@@ -192,8 +202,11 @@ def lm_decode_state_spec(cfg: ArchConfig, batch: int, max_len: int, *, long=Fals
     if n_moe:
         st["moe"] = _stack(mk(cfg, batch, max_len, long=long), n_moe)
         if cfg.moe.track_expert_heat:
-            # EPLB heat counters ride the decode state: per-logical-expert
-            # routed tokens summed over MoE layers and steps (replicated)
+            # EPLB heat counters ride the decode state: per-LOGICAL-expert
+            # routed tokens summed over MoE layers and steps (replicated).
+            # Deliberately [E] in both param-layout modes — heat drives the
+            # rebalancer, which reasons about logical experts; a placement
+            # adoption therefore never invalidates the decode state.
             st["expert_heat"] = ParamSpec((cfg.moe.num_experts,), jnp.float32,
                                           (None,), init="zeros")
     return st

@@ -128,7 +128,9 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
                             *, rebalance_every: int, ep_size: int,
                             num_redundant: int = 0, inner_size: int | None = None,
                             decay: float = 0.0,
-                            rebalance_fn=PL.rebalance):
+                            rebalance_fn=PL.rebalance, params=None,
+                            expert_keys: tuple = PL.EXPERT_PARAM_KEYS,
+                            donate_params: bool = True):
     """Host-level EPLB decode driver: placements swap BETWEEN steps, at
     window boundaries, through the same mode-agnostic staged surface the
     pipeline runs on.
@@ -149,7 +151,16 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
     Returns ``(outs, placements)`` — the per-step outputs and the placement
     used for each window (None = the contiguous default). A window whose
     rebalance reproduces the current table reuses the placement object, so
-    the compiled window function is cache-hit, not re-traced."""
+    the compiled window function is cache-hit, not re-traced.
+
+    Adopt-once physical weights: pass ``params`` (expert-stacked leaves
+    under ``expert_keys``, laid out for ``base_cfg.placement``) and
+    ``make_window`` is called as ``make_window(group, params)`` with the
+    expert leaves rebound ONCE per adopted placement (old physical -> new
+    physical) — no per-step expansion inside the window (docs/DESIGN.md
+    §8). The driver takes ownership of ``params`` by default (old buffers
+    donated at each boundary); ``donate_params=False`` preserves the
+    caller's tree."""
     if rebalance_every < 1:
         raise ValueError(f"rebalance_every={rebalance_every} must be >= 1")
     windows = [xs[s:s + rebalance_every]
@@ -157,5 +168,6 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
     win_outs, placements = PL.run_rebalancing(
         base_cfg, make_window, windows, advance_every=1, ep_size=ep_size,
         num_redundant=num_redundant, inner_size=inner_size, decay=decay,
-        rebalance_fn=rebalance_fn)
+        rebalance_fn=rebalance_fn, params=params, expert_keys=expert_keys,
+        donate_params=donate_params)
     return [o for w in win_outs for o in w], placements

@@ -103,7 +103,10 @@ def prefill_moe(group: EpGroup, router_fn: RouterFn, expert_fn: ExpertFn,
 def rebalancing_prefill(base_cfg: EpGroupConfig, make_layer, batches,
                         *, rebalance_every: int, ep_size: int,
                         num_redundant: int = 0, inner_size: int | None = None,
-                        decay: float = 0.0, rebalance_fn=PL.rebalance):
+                        decay: float = 0.0, rebalance_fn=PL.rebalance,
+                        params=None,
+                        expert_keys: tuple = PL.EXPERT_PARAM_KEYS,
+                        donate_params: bool = True):
     """Prefill mirror of ``runtime/decode.py::rebalancing_decode_loop``:
     placements swap between *batches* (a prefill batch is the natural
     scheduling boundary — within one batch the micro-batched staged pipeline
@@ -116,8 +119,12 @@ def rebalancing_prefill(base_cfg: EpGroupConfig, make_layer, batches,
     ``RebalanceScheduler`` (same dedup semantics as the decode driver: an
     unchanged table reuses the placement object and its compiled layer).
     Returns ``(outs, placements)`` (one placement per batch; None =
-    contiguous)."""
+    contiguous). With ``params``, ``make_layer(group, params)`` receives
+    expert leaves rebound once per adopted placement (adopt-once physical
+    mode; the driver owns ``params`` unless ``donate_params=False`` — see
+    ``rebalancing_decode_loop``)."""
     return PL.run_rebalancing(
         base_cfg, make_layer, list(batches), advance_every=rebalance_every,
         ep_size=ep_size, num_redundant=num_redundant, inner_size=inner_size,
-        decay=decay, rebalance_fn=rebalance_fn)
+        decay=decay, rebalance_fn=rebalance_fn, params=params,
+        expert_keys=expert_keys, donate_params=donate_params)

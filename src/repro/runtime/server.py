@@ -15,7 +15,18 @@ folds them into ``ServeMetrics`` (load imbalance alongside latency), and
 ``rebalance_every > 0`` swaps the expert placement between decode steps —
 the heat drives the greedy rebalancer (core/placement.py), the serve step is
 re-jitted for the new (static) placement, and the token stream is unchanged
-because placement only moves *where* experts compute."""
+because placement only moves *where* experts compute.
+
+Adopt-once physical weights (``MoESpec.params_physical``): the server keeps
+expert weights in the ACTIVE placement's physical slot order and rebinds
+them host-side exactly once per adoption boundary
+(``checkpoint.adopt_expert_params``, old buffers donated so peak memory
+stays ~one set of expert weights) — the per-step in-graph logical->physical
+gather is skipped, so placed steady-state decode matches the
+placement=None per-step cost. Token parity with the per-step-expansion mode
+is pinned by tests/test_runtime.py. Compiled serve steps are cached per
+placement and BOUNDED to {current, previous}: a server that swaps hundreds
+of times must not accumulate compiled executables."""
 from __future__ import annotations
 
 import collections
@@ -26,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import adopt_expert_params
 from repro.core import placement as PL
 from repro.models import get_model
 from repro.models.config import ArchConfig
@@ -87,14 +99,69 @@ class DecodeServer:
                     num_redundant=self.num_redundant_experts,
                     initial=cfg.moe.placement)
         self.model = get_model(cfg)
+        self.params_physical = bool(cfg.moe and cfg.moe.params_physical)
+        # Caller-supplied ``params`` must already match the config's weight
+        # layout: logical [E, ...] normally, cfg.moe.placement's physical
+        # slot order under params_physical (convert with
+        # checkpoint.adopt_expert_params, or restore_checkpoint(placement=
+        # cfg.moe.placement), which validates against the recorded
+        # fingerprint). Raw arrays carry no layout metadata, so a
+        # wrongly-ordered tree with the RIGHT row count (e.g. logical
+        # weights under a pure-permutation placement) cannot be detected
+        # here — the checkpoint path is the validated way in. Under
+        # params_physical the server also takes OWNERSHIP of the tree:
+        # adoption boundaries donate the old expert buffers (slot count
+        # permitting), so the caller's original arrays may be deleted.
         if params is None:
+            # random init ALWAYS goes through the logical [E, ...] spec —
+            # per-slot init under a redundant placement would give replicas
+            # of one expert different weights, breaking the replica
+            # invariant. Physical mode then adopts the initial placement
+            # once (logical -> physical expansion, host-level).
+            init_cfg = self._logical_cfg()
             params = init_from_specs(jax.random.PRNGKey(seed),
-                                     self.model.params_spec(cfg), mesh)
+                                     self.model.params_spec(init_cfg), mesh)
+            if self.params_physical and cfg.moe.placement is not None:
+                params = adopt_expert_params(
+                    params, self.model.params_spec(init_cfg),
+                    None, cfg.moe.placement)
         self.params = params
         st_spec, _ = serve_state_specs(cfg, batch, max_len)
         self.state = jax.tree.map(
             jnp.zeros_like, init_from_specs(jax.random.PRNGKey(1), st_spec, mesh))
-        self.step = jax.jit(make_serve_step(cfg, mesh), donate_argnums=(1,))
+        # compiled serve steps, keyed by placement, bounded to
+        # {current, previous} — see _compiled_step
+        self._step_cache: collections.OrderedDict = collections.OrderedDict()
+        self.step = self._compiled_step()
+
+    def _logical_cfg(self) -> ArchConfig:
+        """This server's config with the expert-weight layout forced logical
+        (spec metadata for init and for locating expert axes at adoption)."""
+        if not self.params_physical:
+            return self.cfg
+        return dataclasses.replace(
+            self.cfg, moe=dataclasses.replace(self.cfg.moe,
+                                              params_physical=False))
+
+    def _compiled_step(self):
+        """Compiled serve step for the CURRENT placement. Cached per
+        placement and bounded to two entries (current + previous): each
+        compiled executable pins device buffers, so an unbounded per-swap
+        cache is a leak on a long-lived rebalancing server. Today a
+        placement key never recurs (the scheduler version-bumps every
+        changed table and _maybe_rebalance early-returns on an unchanged
+        one), so the previous entry is a one-window grace retention, not a
+        reuse path — the cache-hit branch is defensive; what matters is
+        the bound."""
+        key = self.cfg.moe.placement if self.cfg.moe else None
+        if key in self._step_cache:
+            self._step_cache.move_to_end(key)
+        else:
+            self._step_cache[key] = jax.jit(
+                make_serve_step(self.cfg, self.mesh), donate_argnums=(1,))
+            while len(self._step_cache) > 2:
+                self._step_cache.popitem(last=False)
+        return self._step_cache[key]
 
     # ---- EPLB hook: heat-driven placement swaps between steps ----
 
@@ -128,9 +195,10 @@ class DecodeServer:
         into the host-side float64 totals, fold it into the shared
         ``RebalanceScheduler``, and — only when the table actually changed —
         adopt the new placement and re-jit the serve step. The placement
-        only moves *where* experts compute — weights stay stored logical and
-        are rebound in-graph (models/moe.py) — so the greedy token stream is
-        unchanged (pinned by tests)."""
+        only moves *where* experts compute — weights are rebound in-graph
+        per step (logical mode, models/moe.py) or once right here at the
+        adoption boundary (``params_physical``) — so the greedy token
+        stream is unchanged either way (pinned by tests)."""
         if self._sched is None or (step_idx + 1) % self.rebalance_every:
             return
         dev = self._device_heat()
@@ -146,13 +214,22 @@ class DecodeServer:
         self._rank_loads = rl if self._rank_loads is None else self._rank_loads + rl
         self.state["expert_heat"] = jnp.zeros_like(self.state["expert_heat"])
         pl = self._sched.advance()
-        if pl is self.cfg.moe.placement:
+        old = self.cfg.moe.placement
+        if pl is old:
             return                  # unchanged table: keep the compiled step
         self.cfg = dataclasses.replace(
             self.cfg, moe=dataclasses.replace(self.cfg.moe, placement=pl))
         self.placements.append(pl)
-        self.step = jax.jit(make_serve_step(self.cfg, self.mesh),
-                            donate_argnums=(1,))
+        if self.params_physical:
+            # adopt-once: rebind the physical expert weights from the old
+            # placement's slot order to the new one, HOST-LEVEL and exactly
+            # once per adoption (old buffers donated — peak memory ~one set
+            # of expert weights). The re-jitted step then runs with zero
+            # per-step expansion cost.
+            self.params = adopt_expert_params(
+                self.params, self.model.params_spec(self._logical_cfg()),
+                old, pl)
+        self.step = self._compiled_step()
 
     def prefill(self, prompts: jax.Array):
         """Token-by-token prefill through the decode path (keeps this harness

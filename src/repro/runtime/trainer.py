@@ -33,6 +33,17 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, mesh=None,
                  opt_cfg: AdamWConfig | None = None):
+        if cfg.moe and cfg.moe.params_physical:
+            # adopt-once physical weights are a SERVING layout: under
+            # training, gradients would flow to physical slots independently
+            # and replicas of one expert would diverge, breaking the
+            # replica-consistency invariant every placed transfer relies on.
+            # Training keeps logical [E, ...] storage + the in-graph per-step
+            # expansion (placements may swap mid-epoch; checkpoints stay
+            # placement-independent — docs/DESIGN.md §8).
+            raise ValueError(
+                "MoESpec.params_physical=True is a serving-only layout; "
+                "train with params_physical=False (logical expert weights)")
         self.cfg, self.tcfg, self.mesh = cfg, tcfg, mesh
         self.opt_cfg = opt_cfg or AdamWConfig(
             total_steps=tcfg.steps, warmup_steps=max(tcfg.steps // 20, 1))

@@ -294,6 +294,172 @@ def test_expand_collapse_round_trip():
     np.testing.assert_array_equal(np.asarray(w_phys), np.asarray(w)[se])
 
 
+def test_adopt_expert_params_spec_driven_axes():
+    """Spec-driven adoption (checkpoint.adopt_expert_params): leaves whose
+    ParamSpec names an "expert" axis rebind along THAT axis — scan-stacked
+    [n_layers, slots, ...] weights included — and physical -> logical
+    collapse after any chain of adoptions recovers the logical weights
+    bitwise (replica invariant)."""
+    from repro.checkpoint import adopt_expert_params
+    from repro.parallel.sharding import ParamSpec
+    rng = np.random.RandomState(5)
+    logical = dict(stacked=jnp.asarray(rng.randn(3, E, 4), jnp.float32),
+                   flat=jnp.asarray(rng.randn(E, 2), jnp.float32),
+                   other=jnp.asarray(rng.randn(7), jnp.float32))
+    specs = dict(stacked=ParamSpec((3, E, 4), jnp.float32,
+                                   ("stack", "expert", None)),
+                 flat=ParamSpec((E, 2), jnp.float32, ("expert", None)),
+                 other=ParamSpec((7,), jnp.float32, (None,)))
+    pl_a = redundant_placement(E, N, 8)
+    pl_b = rebalance(np.arange(E, dtype=float) + 1.0, N, num_redundant=16)
+    phys_a = adopt_expert_params(logical, specs, None, pl_a)
+    assert phys_a["stacked"].shape == (3, E + 8, 4)
+    assert phys_a["flat"].shape == (E + 8, 2)
+    se_a = PL.tables(pl_a).slot_expert.reshape(-1)
+    np.testing.assert_array_equal(np.asarray(phys_a["stacked"]),
+                                  np.asarray(logical["stacked"])[:, se_a])
+    # adopt a -> b, then collapse: logical weights recovered bitwise
+    phys_b = adopt_expert_params(phys_a, specs, pl_a, pl_b)
+    back = adopt_expert_params(phys_b, specs, pl_b, None)
+    for k in logical:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(logical[k]))
+
+
+def test_physical_checkpoint_layout_recorded_and_validated(tmp_path):
+    """save_checkpoint(placement=...) records the physical layout in the
+    index; restore validates the fingerprint and rebinds to whatever layout
+    the restoring process requests (as-stored / other placement / logical),
+    and a spec-target shape mismatch from an unrequested rebind fails
+    loudly instead of restoring garbage."""
+    from repro.checkpoint import save_checkpoint, restore_checkpoint
+    from repro.parallel.sharding import ParamSpec
+    rng = np.random.RandomState(7)
+    w = rng.randn(E, 4).astype(np.float32)
+    pl_a = redundant_placement(E, N, 8)
+    pl_b = rebalance(np.arange(E, dtype=float) + 1.0, N, num_redundant=16)
+    w_a = PL.expand_expert_params(w, pl_a)
+    tree = dict(w_gate=w_a, step=np.int64(9))
+    save_checkpoint(tmp_path, 2, tree, placement=pl_a,
+                    expert_keys=("w_gate",))
+    # as-stored (default): physical layout untouched, fingerprint readable
+    got, idx = restore_checkpoint(tmp_path, 2, tree)
+    assert idx["expert_layout"]["fingerprint"] == pl_a.fingerprint()
+    assert PL.placement_from_jsonable(
+        idx["expert_layout"]["placement"]) == pl_a
+    np.testing.assert_array_equal(np.asarray(got["w_gate"]), w_a)
+    # elastic re-place: restore under a DIFFERENT placement
+    got_b, _ = restore_checkpoint(tmp_path, 2, tree, placement=pl_b)
+    se_b = PL.tables(pl_b).slot_expert.reshape(-1)
+    np.testing.assert_array_equal(np.asarray(got_b["w_gate"]), w[se_b])
+    # back to logical (placement-independent restart) — host leaf stays
+    # numpy int64 (dtype hygiene)
+    got_l, _ = restore_checkpoint(tmp_path, 2, tree, placement=None)
+    np.testing.assert_array_equal(np.asarray(got_l["w_gate"]), w)
+    assert got_l["step"].dtype == np.int64
+    # a LOGICAL tree mislabeled as physical is refused at SAVE time whenever
+    # the shape betrays it (redundant placements change the row count) —
+    # before the filesystem is touched, so no stale .tmp dir is left
+    with pytest.raises(ValueError, match="physical layout"):
+        save_checkpoint(tmp_path, 3, dict(w_gate=w, step=np.int64(1)),
+                        placement=pl_a, expert_keys=("w_gate",))
+    assert not list(tmp_path.glob("*.tmp"))
+    # a spec target whose shape doesn't match the restored layout trips the
+    # validation (catches placement mismatches at restore, not at serve)
+    bad_spec = dict(w_gate=ParamSpec((E, 4), jnp.float32, ("expert", None)),
+                    step=np.int64(0))
+    with pytest.raises(ValueError, match="placement"):
+        restore_checkpoint(tmp_path, 2, bad_spec)
+    # a SCAN-STACKED expert leaf saved as a plain array cannot be rebound
+    # key-based (axis 0 is the layer axis): restore refuses loudly and
+    # points at the spec-driven path instead of corrupting weights
+    stacked = dict(w_gate=np.stack([w_a] * 3), step=np.int64(9))
+    save_checkpoint(tmp_path, 4, stacked, placement=pl_a,
+                    expert_keys=("w_gate",))
+    with pytest.raises(ValueError, match="ParamSpec"):
+        restore_checkpoint(tmp_path, 4, stacked, placement=None)
+    # ...and the spec-driven target rebinds it fine
+    sp = dict(w_gate=ParamSpec((3, E, 4), jnp.float32,
+                               ("stack", "expert", None)),
+              step=np.int64(0))
+    got_s, _ = restore_checkpoint(tmp_path, 4, sp, placement=None)
+    np.testing.assert_array_equal(np.asarray(got_s["w_gate"]),
+                                  np.stack([w] * 3))
+
+
+def test_rebalancing_decode_adopt_once_matches_expansion():
+    """Driver-level adopt-once: run_rebalancing with ``params`` rebinds the
+    expert leaves once per adopted placement; outputs must be bitwise-equal
+    to the per-step in-graph expansion variant under the same placement
+    schedule (the heat streams are identical)."""
+    from jax.sharding import PartitionSpec as P2
+    from repro.runtime.decode import rebalancing_decode_loop
+    rng = np.random.RandomState(8)
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    router_w = jnp.asarray(rng.randn(H, E), jnp.float32)
+    bump = jnp.zeros((E,)).at[:4].set(3.0)
+    w_log = jnp.asarray(rng.rand(E).astype(np.float32) + 0.5)
+
+    def router_fn(x):
+        logits = x @ router_w + bump
+        w, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+        return idx.astype(jnp.int32), w / w.sum(-1, keepdims=True)
+
+    base_cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                             top_k=K, mode="ll", payload_dtype=jnp.float32)
+    xs = [jnp.asarray(rng.randn(N, T, H), jnp.float32) for _ in range(6)]
+
+    def make(group, w_phys_of):
+        L = group.local_experts
+
+        def fn(window):
+            def run(x, wv):
+                x = x[0]
+                ti, wi = router_fn(x)
+                h = ep_create_handle(group, ti, wi)
+                y3d, counts = ep_dispatch(group, h, x)
+                me = plan_mod.my_rank(group)
+                rows = jax.lax.dynamic_slice_in_dim(w_phys_of(wv), me * L, L)
+                out = ep_combine(group, h, y3d * rows[:, None, None])
+                heat = jax.lax.psum(PL.heat_from_topk(ti, E), "data")
+                return out[None], heat[None]
+            f = jax.jit(jax.shard_map(
+                run, mesh=mesh, in_specs=(P2("data"), P2(None)),
+                out_specs=(P2("data"), P2("data"))))
+            outs, hs = [], 0.0
+            for x in window:
+                o, hcur = f(x, fn.wv)
+                outs.append(np.asarray(o))
+                hs = hs + np.asarray(hcur)[0]
+            return outs, hs
+        return fn
+
+    def make_expand(group):     # logical weights, in-graph per-step gather
+        pl = group.placement
+        fn = make(group, lambda wv: (PL.expand_expert_params(wv, pl)
+                                     if pl is not None else wv))
+        fn.wv = w_log
+        return fn
+
+    def make_adopt(group, params):   # physical rows arrive pre-bound
+        fn = make(group, lambda wv: wv)
+        fn.wv = params["w_gate"]
+        return fn
+
+    outs_a, pls_a = rebalancing_decode_loop(
+        base_cfg, make_expand, xs, rebalance_every=2, ep_size=N,
+        num_redundant=8)
+    outs_b, pls_b = rebalancing_decode_loop(
+        base_cfg, make_adopt, xs, rebalance_every=2, ep_size=N,
+        num_redundant=8, params={"w_gate": w_log}, expert_keys=("w_gate",))
+    assert [p.fingerprint() if p else 0 for p in pls_a] == \
+           [p.fingerprint() if p else 0 for p in pls_b]
+    assert any(p is not None for p in pls_b)      # swaps actually happened
+    for a, b in zip(outs_a, outs_b):
+        np.testing.assert_array_equal(a, b)
+
+
 def test_checkpoint_rebind_across_placements(tmp_path):
     """A checkpoint persisted in one placement's physical layout restores
     under a different placement with every slot holding the right logical

@@ -161,6 +161,104 @@ def test_decode_server_heat_metrics_and_rebalance():
                      max_len=32, mesh=mesh, rebalance_every=2)
 
 
+@pytest.mark.filterwarnings("error")
+def test_checkpoint_restore_dtype_hygiene(tmp_path):
+    """Restore must never route pure-host numpy leaves through
+    jax.numpy.asarray (x64 counters silently truncate to x32 with a
+    UserWarning) and must canonicalize device-leaf target dtypes. Runs
+    under filterwarnings("error"): any truncation warning fails."""
+    from repro.parallel.sharding import ParamSpec
+    tree = dict(
+        w=jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+        step=np.int64(2**40),               # > int32 range: truncation would corrupt
+        heat=np.arange(4, dtype=np.float64) * 1e-9,
+    )
+    save_checkpoint(tmp_path, 3, tree)
+    restored, _ = restore_checkpoint(tmp_path, 3, tree)
+    assert isinstance(restored["step"], np.generic | np.ndarray)
+    assert restored["step"].dtype == np.int64 and int(restored["step"]) == 2**40
+    assert restored["heat"].dtype == np.float64
+    np.testing.assert_array_equal(restored["heat"], np.asarray(tree["heat"]))
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+    # an x64 dtype in a device-leaf target spec restores canonicalized
+    # (int32 on x32 runtimes) instead of warning
+    spec = dict(w=ParamSpec((2, 3), jnp.bfloat16, (None, None)),
+                step=ParamSpec((), np.int64, ()),
+                heat=ParamSpec((4,), np.float64, (None,)))
+    rs, _ = restore_checkpoint(tmp_path, 3, spec)
+    assert rs["step"].dtype == jax.dtypes.canonicalize_dtype(np.int64)
+
+
+def test_decode_server_adopt_once_same_tokens(tmp_path):
+    """Adopt-once physical weights (MoESpec.params_physical): the server
+    rebinds expert weights host-side once per placement adoption instead of
+    expanding in-graph every step — the greedy token stream must be
+    bitwise-identical to the per-step-expansion server across >= 2 swaps
+    with redundant replicas, collapsing the final physical weights must
+    recover the logical weights bitwise, and the compiled-step cache stays
+    bounded to {current, previous}."""
+    import dataclasses
+    from repro.checkpoint import adopt_expert_params, save_checkpoint as _save
+    from repro.runtime.server import DecodeServer
+    cfg = get_smoke("dbrx-132b")
+    moe = dataclasses.replace(cfg.moe, ep_mode="ll", ep_axis=("data",),
+                              track_expert_heat=True)
+    cfg_l = dataclasses.replace(cfg, moe=moe)
+    cfg_p = dataclasses.replace(
+        cfg, moe=dataclasses.replace(moe, params_physical=True))
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    prompts = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab, (8, 4)), jnp.int32)
+
+    srv_a = DecodeServer(cfg_l, batch=8, max_len=32, mesh=mesh,
+                         rebalance_every=2, num_redundant_experts=8)
+    first_a, _ = srv_a.prefill(prompts)
+    toks_a, _ = srv_a.decode(first_a, 8)
+    srv_b = DecodeServer(cfg_p, batch=8, max_len=32, mesh=mesh,
+                         rebalance_every=2, num_redundant_experts=8)
+    first_b, _ = srv_b.prefill(prompts)
+    toks_b, _ = srv_b.decode(first_b, 8)
+    np.testing.assert_array_equal(toks_a, toks_b)
+    assert len(srv_b.placements) >= 2          # >= 2 adoption boundaries
+    assert srv_b.placements[0].num_redundant == 8
+    # physical layout actually adopted: expert leaves carry slot rows
+    E, R = moe.num_experts, 8
+    assert srv_b.params["moe_stack"]["moe"]["w_gate"].shape[1] == E + R
+    assert srv_a.params["moe_stack"]["moe"]["w_gate"].shape[1] == E
+    # compiled executables bounded despite multiple swaps
+    assert len(srv_b._step_cache) <= 2
+    # collapse after adopt-once serving == the logical weights, bitwise
+    spec = srv_b.model.params_spec(srv_b._logical_cfg())
+    back = adopt_expert_params(srv_b.params, spec,
+                               srv_b.cfg.moe.placement, None)
+    for a, b in zip(jax.tree.leaves(srv_a.params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # physical-layout checkpoint: fingerprint recorded; an elastic restore
+    # against the LOGICAL spec rebinds stacked leaves along their "expert"
+    # spec axis (full flat-dict roundtrip is in test_placement)
+    _save(tmp_path, 1, srv_b.params, placement=srv_b.cfg.moe.placement)
+    got, idx = restore_checkpoint(tmp_path, 1, spec, placement=None)
+    assert (idx["expert_layout"]["fingerprint"]
+            == srv_b.cfg.moe.placement.fingerprint())
+    np.testing.assert_array_equal(
+        np.asarray(got["moe_stack"]["moe"]["w_gate"], np.float32),
+        np.asarray(srv_a.params["moe_stack"]["moe"]["w_gate"], np.float32))
+
+
+def test_trainer_rejects_physical_params():
+    """params_physical is a serving-only layout: training would push
+    gradients into replicas independently and de-sync them."""
+    import dataclasses
+    cfg = get_smoke("dbrx-132b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, params_physical=True))
+    with pytest.raises(ValueError, match="serving-only"):
+        Trainer(cfg, TrainerConfig(steps=1, global_batch=4, seq_len=8))
+
+
 def test_decode_server_pipelined_same_tokens():
     """pipeline_depth=2 (double-buffered host dispatch) must produce the
     identical greedy token stream — only the blocking schedule changes."""
