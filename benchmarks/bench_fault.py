@@ -1,0 +1,128 @@
+"""Elastic fault-tolerant EP (docs/DESIGN.md §9): recovery cost under an
+injected kill/rejoin schedule in the decode serving loop.
+
+A fully-replicated placement (R = E: every expert on 2 distinct ranks)
+serves a fixed decode trace; the deterministic ``FaultInjector`` kills one
+rank mid-serve and rejoins it later. Measured per ``miss_threshold``:
+
+  * steps-to-detect — boundaries between the injected kill and the shrink
+    transition (exactly ``miss_threshold - 1`` by construction: the
+    detector is deterministic, and the bench ASSERTS it);
+  * recovery latency — wall time inside each shrink/expand transition
+    (degraded-placement build + masked weight re-adoption + re-jit);
+  * degraded throughput — steady-state ITL on N-1 ranks vs healthy, the
+    first post-transition step (which carries the recompile) excluded.
+
+In-bench acceptance (the functional contract, asserted every run): the
+token stream is BITWISE-identical to an uninterrupted serve, the degraded
+placement assigns zero slots to the dead rank, and the rejoin restores the
+full-width table. Wall-clock ratios are tracked, never asserted (CPU-host
+noise). Results land in results/benchmarks/fault.json and feed the
+``fault`` section of BENCH_ll_kernels.json (schema v5) via
+benchmarks/run.py."""
+from benchmarks.common import ensure_devices, write_result, table
+
+ensure_devices(8)
+
+import dataclasses             # noqa: E402
+
+import jax                     # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro.configs import get_smoke              # noqa: E402
+from repro.core import placement as PL           # noqa: E402
+from repro.runtime.fault import FaultInjector    # noqa: E402
+from repro.runtime.server import DecodeServer    # noqa: E402
+
+STEPS, KILL, REJOIN, DEAD_RANK = 40, 10, 30, 2
+
+
+def _cfg():
+    cfg = get_smoke("dbrx-132b")
+    E = cfg.moe.num_experts
+    pl0 = PL.redundant_placement(E, 8, E)       # every expert 2x replicated
+    moe = dataclasses.replace(cfg.moe, ep_mode="ll", ep_axis=("data",),
+                              track_expert_heat=True, params_physical=True,
+                              placement=pl0)
+    return dataclasses.replace(cfg, moe=moe), E
+
+
+def _serve(fault_injector=None, miss_threshold=1):
+    cfg, E = _cfg()
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    srv = DecodeServer(cfg, batch=8, max_len=64, mesh=mesh,
+                       num_redundant_experts=E,
+                       fault_injector=fault_injector,
+                       miss_threshold=miss_threshold)
+    prompts = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab, (8, 8)), jnp.int32)
+    first, _ = srv.prefill(prompts)
+    toks, itls = srv.decode(first, STEPS)
+    return srv, toks, np.asarray(itls)
+
+
+def _steady(itls, lo, hi, skip_first=1):
+    """Mean ITL over [lo, hi), excluding the first ``skip_first`` steps
+    (they carry the post-transition recompile)."""
+    window = itls[lo + skip_first:hi]
+    return float(window.mean()) if window.size else float("nan")
+
+
+def main():
+    _, toks_ref, itls_ref = _serve()
+    rows = []
+    for mt in (1, 2):
+        inj = FaultInjector(8, kill={KILL: DEAD_RANK},
+                            rejoin={REJOIN: DEAD_RANK})
+        srv, toks, itls = _serve(fault_injector=inj, miss_threshold=mt)
+
+        # ---- in-bench acceptance: the functional contract ----
+        np.testing.assert_array_equal(toks_ref, toks)   # bitwise across kill
+        kinds = [e["kind"] for e in srv.recoveries]
+        assert kinds == ["shrink", "expand"], kinds
+        shrink, expand = srv.recoveries
+        assert shrink["lost_experts"] == [] and shrink["restored_from"] is None
+        degraded = srv.placements[-2]
+        assert degraded.dead_ranks() == (DEAD_RANK,)
+        assert degraded.num_empty == degraded.slots_per_rank  # zero slots
+        assert srv.placements[-1].dead_ranks() == ()          # re-expanded
+        steps_to_detect = shrink["step"] - KILL
+        assert steps_to_detect == mt - 1, (shrink["step"], KILL, mt)
+
+        healthy = _steady(itls, 1, KILL)
+        deg_lo, deg_hi = shrink["step"] + 1, expand["step"] + 1
+        degraded_itl = _steady(itls, deg_lo, deg_hi)
+        post = _steady(itls, expand["step"] + 1, STEPS)
+        rows.append(dict(
+            miss_threshold=mt,
+            steps_to_detect=steps_to_detect,
+            shrink_ms=round(shrink["latency_s"] * 1e3, 1),
+            expand_ms=round(expand["latency_s"] * 1e3, 1),
+            healthy_itl_ms=round(healthy * 1e3, 2),
+            degraded_itl_ms=round(degraded_itl * 1e3, 2),
+            post_rejoin_itl_ms=round(post * 1e3, 2),
+            degraded_over_healthy=round(degraded_itl / healthy, 3),
+            degraded_steps=srv._degraded_steps,
+            token_parity=True))
+    table(rows, ["miss_threshold", "steps_to_detect", "shrink_ms",
+                 "expand_ms", "healthy_itl_ms", "degraded_itl_ms",
+                 "post_rejoin_itl_ms", "degraded_over_healthy",
+                 "degraded_steps", "token_parity"],
+          f"Elastic recovery: kill rank {DEAD_RANK} @ step {KILL}, "
+          f"rejoin @ {REJOIN} (8 ranks, R=E replication, {STEPS} steps)")
+    print("  degraded/healthy ITL tracked, not asserted (host noise); "
+          "token parity + zero-slot degraded placement ASSERTED above")
+    write_result("fault", dict(
+        config=dict(ranks=8, steps=STEPS, kill_step=KILL,
+                    rejoin_step=REJOIN, dead_rank=DEAD_RANK,
+                    replication="R=E (every expert on 2 ranks)",
+                    baseline_itl_ms=round(_steady(itls_ref, 1, STEPS) * 1e3,
+                                          2)),
+        rows=rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

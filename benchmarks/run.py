@@ -12,18 +12,21 @@
   placement — EPLB imbalance sweep: skewed routing, contiguous vs
               rebalanced vs redundant expert placement (per-rank recv load)
   serving   — Table VII end-to-end serving metrics by EP backend
+  fault     — elastic recovery under injected rank kill/rejoin:
+              steps-to-detect, shrink/expand latency, degraded throughput
 
 Each sub-benchmark needs its own fake-device count, so they run as separate
 processes; results land in results/benchmarks/*.json. After the ll and
 slotmap benchmarks run, their results are folded into ``BENCH_ll_kernels.json``
 at the repo root — the machine-readable perf trajectory (schema
-bench_ll_kernels/v4: handle-create / dispatch / combine phase times,
+bench_ll_kernels/v5: handle-create / dispatch / combine phase times,
 recv-unpack kernel timings, slot-map engine comparison, the decode-pipeline
 steady-state rows, the modes section — LL/HT/baseline crossover plus the
 prefill-pipeline steady-state rows: chunked vs monolithic hierarchical HT
-and hier vs flat through the staged driver — and the placement section:
-the EPLB skewed-routing sweep, contiguous vs rebalanced vs redundant)
-tracked across PRs.
+and hier vs flat through the staged driver — the placement section:
+the EPLB skewed-routing sweep, contiguous vs rebalanced vs redundant —
+and, new in v5, the fault section: elastic kill/rejoin recovery rows,
+validated in-bench) tracked across PRs.
 """
 import argparse
 import json
@@ -31,7 +34,8 @@ import pathlib
 import subprocess
 import sys
 
-BENCHES = ["memory", "ll", "slotmap", "decode", "modes", "placement", "serving"]
+BENCHES = ["memory", "ll", "slotmap", "decode", "modes", "placement",
+           "serving", "fault"]
 MODULES = {
     "memory": "benchmarks.bench_memory",
     "ll": "benchmarks.bench_ll_kernels",
@@ -40,6 +44,7 @@ MODULES = {
     "modes": "benchmarks.bench_modes",
     "placement": "benchmarks.bench_imbalance",
     "serving": "benchmarks.bench_serving",
+    "fault": "benchmarks.bench_fault",
 }
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -61,6 +66,7 @@ def emit_bench_ll_kernels() -> bool:
     src_md = RESULTS / "modes_crossover.json"
     src_pl = RESULTS / "imbalance.json"
     src_sv = RESULTS / "serving.json"
+    src_ft = RESULTS / "fault.json"
     if not (src_ll.exists() and src_sm.exists()):
         return False
     ll = json.loads(src_ll.read_text())
@@ -69,6 +75,7 @@ def emit_bench_ll_kernels() -> bool:
     md = json.loads(src_md.read_text()) if src_md.exists() else None
     pl = json.loads(src_pl.read_text()) if src_pl.exists() else None
     sv = json.loads(src_sv.read_text()) if src_sv.exists() else None
+    ft = json.loads(src_ft.read_text()) if src_ft.exists() else None
 
     def stamp(p):
         return datetime.datetime.fromtimestamp(p.stat().st_mtime).isoformat(
@@ -83,8 +90,10 @@ def emit_bench_ll_kernels() -> bool:
         sources["placement"] = stamp(src_pl)
     if sv is not None:
         sources["serving"] = stamp(src_sv)
+    if ft is not None:
+        sources["fault"] = stamp(src_ft)
     payload = {
-        "schema": "bench_ll_kernels/v4",
+        "schema": "bench_ll_kernels/v5",
         "sources": sources,
         "config": ll.get("config", {}),
         "phases": ll.get("rows", []),       # handle/dispatch/combine per layout
@@ -107,6 +116,11 @@ def emit_bench_ll_kernels() -> bool:
         # Table VII serving metrics, incl. the placed-serving steady-state
         # rows (per-step expansion vs MoESpec.params_physical adopt-once)
         payload["serving"] = sv
+    if ft is not None:
+        # v5: elastic recovery under injected kill/rejoin — steps-to-detect,
+        # shrink/expand latency, degraded-mode throughput (token parity and
+        # the zero-slot degraded placement are ASSERTED inside the bench)
+        payload["fault"] = ft
     (ROOT / "BENCH_ll_kernels.json").write_text(json.dumps(payload, indent=1))
     print(f"wrote {ROOT / 'BENCH_ll_kernels.json'}")
     return True

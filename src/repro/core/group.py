@@ -185,16 +185,23 @@ def ep_create_group(
             raise ValueError(
                 f"num_redundant_experts={R} contradicts the placement's "
                 f"{pl.num_redundant} redundant slots")
+        # physical slot grid straight from the table: L = slots per rank.
+        # For healthy tables this is (E + R) / N exactly as before; a
+        # DEGRADED table (dead ranks' rows all EMPTY — elastic EP,
+        # docs/DESIGN.md §9) packs all experts onto the survivors, so
+        # slots_per_rank grows while empty slots host (and receive) nothing.
+        L = pl.slots_per_rank
         R = pl.num_redundant
     elif R:
         raise ValueError(
             f"num_redundant_experts={R} requires an explicit placement "
             "(the table defines where replicas live — build one with "
             "repro.core.placement.rebalance or redundant_placement)")
-    if (E + R) % N != 0:
-        raise ValueError(f"num_experts={E} (+{R} redundant) must divide by "
-                         f"ep_size={N}")
-    L = (E + R) // N
+    else:
+        if E % N != 0:
+            raise ValueError(f"num_experts={E} (+{R} redundant) must divide "
+                             f"by ep_size={N}")
+        L = E // N
     cf = cfg.capacity_factor
     al = cfg.slot_align
 

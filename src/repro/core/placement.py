@@ -54,6 +54,13 @@ import numpy as np
 # (canonical here; checkpoint.store re-exports it)
 EXPERT_PARAM_KEYS = ("w_gate", "w_up", "w_down")
 
+# Sentinel for a slot that hosts NOTHING: degraded placements (a dead rank's
+# row is all EMPTY) and the masked view of a placement restricted to its
+# survivors. An empty slot never appears in any expert's replica list, so
+# plan-time assignment (``assign``/``plan.dest_of``) can never route a token
+# to it — zero traffic to a dead rank by construction (docs/DESIGN.md §9).
+EMPTY = -1
+
 
 @dataclasses.dataclass(frozen=True)
 class EpPlacement:
@@ -79,6 +86,8 @@ class EpPlacement:
         seen = np.zeros(E, bool)
         for row in tbl:
             for e in row:
+                if e == EMPTY:
+                    continue            # degraded: slot hosts nothing
                 if not (0 <= e < E):
                     raise ValueError(f"slot expert {e} out of range [0, {E})")
                 seen[e] = True
@@ -99,8 +108,26 @@ class EpPlacement:
         return self.num_ranks * self.slots_per_rank
 
     @property
+    def num_empty(self) -> int:
+        """Empty (EMPTY-sentinel) slots — nonzero only on degraded tables."""
+        return sum(1 for row in self.slot_expert for e in row if e == EMPTY)
+
+    @property
     def num_redundant(self) -> int:
-        return self.num_slots - self.num_experts
+        """Replica surplus over one-slot-per-expert, counting LIVE slots
+        only (empty slots host nothing, so they are capacity, not
+        redundancy)."""
+        return self.num_slots - self.num_empty - self.num_experts
+
+    def dead_ranks(self) -> tuple[int, ...]:
+        """Ranks whose every slot is empty — the degraded-placement marker
+        (a rank with zero slots assigned receives zero traffic)."""
+        return tuple(r for r, row in enumerate(self.slot_expert)
+                     if all(e == EMPTY for e in row))
+
+    def alive_ranks(self) -> tuple[int, ...]:
+        dead = set(self.dead_ranks())
+        return tuple(r for r in range(self.num_ranks) if r not in dead)
 
     def is_identity(self) -> bool:
         """True iff this is exactly the contiguous striping (no replicas)."""
@@ -172,6 +199,8 @@ def tables(placement: EpPlacement) -> PlacementTables:
     reps: list[list[tuple[int, int]]] = [[] for _ in range(E)]
     for r, row in enumerate(placement.slot_expert):
         for s, e in enumerate(row):
+            if e == EMPTY:
+                continue                     # degraded slot: hosts nothing
             reps[e].append((r, s))           # rank-major replica order
     rmax = max(len(x) for x in reps)
     rank_t = np.full((E + 1, rmax), N, np.int32)
@@ -225,7 +254,10 @@ def fold_slot_counts(placement: EpPlacement | None, counts_by_rank):
     if placement is None:
         return c.reshape(-1)
     heat = np.zeros(placement.num_experts, np.float64)
-    np.add.at(heat, tables(placement).slot_expert.reshape(-1), c.reshape(-1))
+    se = tables(placement).slot_expert.reshape(-1)
+    live = se != EMPTY      # empty slots receive nothing; don't let the
+    #                         sentinel alias an expert id under np.add.at
+    np.add.at(heat, se[live], c.reshape(-1)[live])
     return heat
 
 
@@ -260,7 +292,8 @@ def rank_loads(heat, placement: EpPlacement | None, num_ranks: int | None = None
         return h.reshape(num_ranks, -1).sum(axis=1)
     tb = tables(placement)
     share = h / np.maximum(tb.replica_count[:-1], 1)
-    return share[tb.slot_expert].sum(axis=1)
+    live = tb.slot_expert != EMPTY
+    return (share[np.where(live, tb.slot_expert, 0)] * live).sum(axis=1)
 
 
 def imbalance(loads) -> float:
@@ -275,7 +308,8 @@ def imbalance(loads) -> float:
 # --------------------------------------------------------------------------
 
 def rebalance(heat, num_ranks: int, *, num_redundant: int = 0,
-              version: int = 1) -> EpPlacement:
+              version: int = 1,
+              alive_ranks: tuple[int, ...] | None = None) -> EpPlacement:
     """Greedy placement minimizing the max per-rank load.
 
     1. Replica counts: every expert gets one slot; each of the
@@ -286,16 +320,30 @@ def rebalance(heat, num_ranks: int, *, num_redundant: int = 0,
        onto ranks (least-loaded rank with a free slot wins; replicas of one
        expert prefer distinct ranks, since the source-rank round-robin only
        splits load across *ranks*). Fully deterministic: ties break by
-       expert id then rank id."""
+       expert id then rank id.
+
+    ``alive_ranks`` (elastic EP, docs/DESIGN.md §9): pack onto that subset
+    only — the table still spans ``num_ranks`` rows (the group's static
+    geometry is unchanged) but every dead rank's row is all ``EMPTY``, so
+    plan-time assignment routes it zero traffic. ``num_experts +
+    num_redundant`` must then divide by the survivor count
+    (``shrink_placement`` auto-fits the redundancy budget)."""
     h = np.asarray(heat, np.float64)
     E = h.size
     P = E + num_redundant
     if num_redundant < 0:
         raise ValueError(f"num_redundant={num_redundant} must be >= 0")
-    if P % num_ranks:
+    alive = (tuple(range(num_ranks)) if alive_ranks is None
+             else tuple(sorted(set(alive_ranks))))
+    if not alive or any(not 0 <= r < num_ranks for r in alive):
+        raise ValueError(f"alive_ranks={alive_ranks} must be a non-empty "
+                         f"subset of range({num_ranks})")
+    if P % len(alive):
         raise ValueError(
-            f"num_experts+num_redundant={P} must divide by num_ranks={num_ranks}")
-    S = P // num_ranks
+            f"num_experts+num_redundant={P} must divide by the "
+            f"{'alive rank count' if alive_ranks is not None else 'rank count'}"
+            f"={len(alive)}")
+    S = P // len(alive)
     rc = np.ones(E, np.int64)
     for _ in range(num_redundant):
         e = int(np.argmax(h / rc))           # argmax: first index on ties
@@ -304,18 +352,20 @@ def rebalance(heat, num_ranks: int, *, num_redundant: int = 0,
         ((h[e] / rc[e], e) for e in range(E) for _ in range(rc[e])),
         key=lambda t: (-t[0], t[1]))
     loads = np.zeros(num_ranks, np.float64)
-    rows: list[list[int]] = [[] for _ in range(num_ranks)]
-    hosted: list[set[int]] = [set() for _ in range(num_ranks)]
+    rows: dict[int, list[int]] = {r: [] for r in alive}
+    hosted: dict[int, set[int]] = {r: set() for r in alive}
     for load, e in items:
-        cand = [r for r in range(num_ranks)
+        cand = [r for r in alive
                 if len(rows[r]) < S and e not in hosted[r]]
         if not cand:                          # forced: co-host a replica
-            cand = [r for r in range(num_ranks) if len(rows[r]) < S]
+            cand = [r for r in alive if len(rows[r]) < S]
         r = min(cand, key=lambda r: (loads[r], r))
         rows[r].append(e)
         hosted[r].add(e)
         loads[r] += load
-    return EpPlacement(E, tuple(tuple(r) for r in rows), version=version)
+    return EpPlacement(E, tuple(
+        tuple(rows[r]) if r in rows else (EMPTY,) * S
+        for r in range(num_ranks)), version=version)
 
 
 def redundant_placement(num_experts: int, num_ranks: int, num_redundant: int,
@@ -327,6 +377,96 @@ def redundant_placement(num_experts: int, num_ranks: int, num_redundant: int,
                      num_redundant=num_redundant, version=version)
 
 
+# --------------------------------------------------------------------------
+# elastic EP: degraded placements around dead ranks (docs/DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+def fit_redundant(num_experts: int, num_redundant: int, n_alive: int) -> int:
+    """Largest redundancy budget <= ``num_redundant`` whose total slot count
+    divides by the survivor count — or, when none exists (e.g. E=8 on 7
+    survivors with R=0), the smallest larger one. Keeps shrink/expand from
+    failing on divisibility when the rank count changes under a fixed R."""
+    for r in range(num_redundant, -1, -1):
+        if (num_experts + r) % n_alive == 0:
+            return r
+    r = num_redundant + 1
+    while (num_experts + r) % n_alive:
+        r += 1
+    return r
+
+
+def lost_experts(placement: EpPlacement | None,
+                 alive_ranks) -> tuple[int, ...]:
+    """Experts whose EVERY replica sits on a non-alive rank — the weights a
+    shrink cannot recover from survivors (zero-data-loss fails; the driver
+    must fall back to checkpoint restore). ``placement=None`` = contiguous
+    striping, where no expert has a second replica."""
+    alive = set(alive_ranks)
+    if placement is None:
+        return ()               # resolved by the caller via identity_placement
+    lost = []
+    tb = tables(placement)
+    for e in range(placement.num_experts):
+        n = int(tb.replica_count[e])
+        if not any(int(tb.replica_rank[e, j]) in alive for j in range(n)):
+            lost.append(e)
+    return tuple(lost)
+
+
+def mask_placement(placement: EpPlacement,
+                   alive_ranks) -> EpPlacement:
+    """The placement restricted to its survivors: non-alive rows become all
+    ``EMPTY``. This is the SOURCE layout for a zero-data-loss shrink rebind
+    — collapsing through it reads only live replicas, never a dead rank's
+    slots. Raises when any expert would lose its last replica
+    (``lost_experts`` names them); callers check first and take the
+    checkpoint-restore fallback instead."""
+    alive = set(alive_ranks)
+    lost = lost_experts(placement, alive)
+    if lost:
+        raise ValueError(
+            f"experts {list(lost)[:8]} have no replica on alive ranks "
+            f"{sorted(alive)} — weights unrecoverable from survivors "
+            "(restore from checkpoint)")
+    S = placement.slots_per_rank
+    tbl = tuple(row if r in alive else (EMPTY,) * S
+                for r, row in enumerate(placement.slot_expert))
+    if tbl == placement.slot_expert:
+        return placement
+    return dataclasses.replace(placement, slot_expert=tbl)
+
+
+def shrink_placement(heat, num_ranks: int, dead_ranks, *,
+                     num_redundant: int = 0, version: int = 1,
+                     rebalance_fn=None) -> EpPlacement:
+    """Degraded placement after rank death: every expert packed onto the
+    survivors (dead rows all ``EMPTY`` — zero slots, zero traffic), the
+    redundancy budget auto-fitted to the survivor count. Heat-driven like
+    any rebalance, so the degraded table is still load-balanced."""
+    dead = set(dead_ranks)
+    alive = tuple(r for r in range(num_ranks) if r not in dead)
+    if not alive:
+        raise ValueError(f"all {num_ranks} ranks dead — nothing to shrink onto")
+    E = np.asarray(heat).size
+    R = fit_redundant(E, num_redundant, len(alive))
+    fn = rebalance_fn or rebalance
+    return fn(heat, num_ranks, num_redundant=R, version=version,
+              alive_ranks=alive)
+
+
+def expand_placement(heat, num_ranks: int, *, num_redundant: int = 0,
+                     version: int = 1, rebalance_fn=None) -> EpPlacement:
+    """The symmetric rejoin path: a full-width rebalance over all ranks
+    again (redundancy budget refitted in case the caller's R only fit the
+    degraded geometry). The rejoined rank's slots are filled by replica
+    expansion at adoption — replicas duplicate live weights, so re-expand
+    is always zero-data-loss."""
+    E = np.asarray(heat).size
+    R = fit_redundant(E, num_redundant, num_ranks)
+    fn = rebalance_fn or rebalance
+    return fn(heat, num_ranks, num_redundant=R, version=version)
+
+
 class RebalanceScheduler:
     """Host-side EPLB schedule shared by the runtime drivers
     (`runtime/decode.py`, `runtime/prefill.py`, `runtime/server.py`):
@@ -334,7 +474,14 @@ class RebalanceScheduler:
     window. When the rebalancer reproduces the current slot table verbatim
     (steady traffic), the SAME placement object is returned — version and
     fingerprint unchanged — so per-placement compiled-function caches keep
-    hitting and the refresh fast path survives the boundary."""
+    hitting and the refresh fast path survives the boundary.
+
+    Elastic EP: ``set_alive`` narrows the scheduler to the surviving ranks —
+    every subsequent ``advance`` emits a DEGRADED placement (dead rows all
+    ``EMPTY``, redundancy refitted to the survivor count); restoring the
+    full set flips it back to full-width tables (the rejoin/expand path).
+    A custom ``rebalance_fn`` must accept ``alive_ranks=`` to be used with
+    a narrowed alive set."""
 
     def __init__(self, num_experts: int, num_ranks: int, *,
                  num_redundant: int = 0, decay: float = 0.0,
@@ -344,15 +491,31 @@ class RebalanceScheduler:
         self.num_redundant = num_redundant
         self.rebalance_fn = rebalance_fn or rebalance
         self.placement = initial
+        self.alive: tuple[int, ...] = tuple(range(num_ranks))
         self._version = 0
 
     def observe(self, heat):
         self.tracker.update(np.asarray(heat, np.float64))
 
+    def set_alive(self, alive_ranks):
+        alive = tuple(sorted(set(alive_ranks)))
+        if not alive or any(not 0 <= r < self.num_ranks for r in alive):
+            raise ValueError(f"alive_ranks={alive_ranks} must be a non-empty "
+                             f"subset of range({self.num_ranks})")
+        self.alive = alive
+
     def advance(self) -> EpPlacement:
-        new = self.rebalance_fn(self.tracker.totals, self.num_ranks,
-                                num_redundant=self.num_redundant,
-                                version=self._version + 1)
+        v = self._version + 1
+        if len(self.alive) < self.num_ranks:
+            dead = [r for r in range(self.num_ranks) if r not in self.alive]
+            new = shrink_placement(self.tracker.totals, self.num_ranks, dead,
+                                   num_redundant=self.num_redundant,
+                                   version=v, rebalance_fn=self.rebalance_fn)
+        else:
+            R = fit_redundant(self.tracker.totals.size, self.num_redundant,
+                              self.num_ranks)
+            new = self.rebalance_fn(self.tracker.totals, self.num_ranks,
+                                    num_redundant=R, version=v)
         if (self.placement is not None
                 and new.slot_expert == self.placement.slot_expert):
             return self.placement            # unchanged table: reuse object
@@ -367,7 +530,7 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
                     inner_size: int | None = None, decay: float = 0.0,
                     rebalance_fn=None, params=None,
                     expert_keys: tuple = EXPERT_PARAM_KEYS,
-                    donate_params: bool = True):
+                    donate_params: bool = True, fault_injector=None):
     """Shared skeleton of the host-level EPLB drivers (`runtime/decode.py`,
     `runtime/prefill.py`): run each item through a per-placement compiled
     fn, fold its heat, and advance the placement at every ``advance_every``
@@ -391,7 +554,18 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
     driver takes OWNERSHIP: old expert buffers are donated at each
     boundary (peak memory ~one weight set), which deletes the caller's
     arrays when the slot count is preserved — pass ``donate_params=False``
-    to keep using the original tree afterwards."""
+    to keep using the original tree afterwards.
+
+    Elastic EP (``fault_injector``, docs/DESIGN.md §9): the injector's
+    kill/rejoin schedule is polled at every item boundary. A fault forces an
+    immediate placement advance — shrink to a DEGRADED table (dead rows all
+    ``EMPTY``) on a kill, full-width re-expand on a rejoin — instead of
+    waiting for the next ``advance_every`` boundary. Across a shrink the
+    ``params`` rebind collapses through the MASKED old placement (reads only
+    surviving replicas); an expert whose every replica died makes
+    zero-data-loss impossible, so the driver warns ``DegradedRecovery`` and
+    raises — the serving layer (`runtime/server.py`) owns the
+    checkpoint-restore fallback."""
     import dataclasses as _dc
 
     from repro.core.group import ep_create_group
@@ -417,12 +591,40 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
         outs.append(out)
         placements.append(pl)
         sched.observe(heat)
-        if (i + 1) % advance_every == 0 and i + 1 < len(items):
+        fault = (fault_injector.advance(i) if fault_injector is not None
+                 else None)
+        if fault:
+            sched.set_alive(tuple(r for r in range(ep_size)
+                                  if fault_injector.is_alive(r)))
+        if (fault or (i + 1) % advance_every == 0) and i + 1 < len(items):
             new_pl = sched.advance()
             if new_pl is not pl and params is not None:
                 from repro.checkpoint.store import rebind_expert_leaves
+                src = pl
+                if fault and fault.died:
+                    # shrink: collapse only through surviving replicas — a
+                    # dead rank's slot rows are gone on a real pod
+                    src_live = (pl if pl is not None else
+                                identity_placement(base_cfg.num_experts,
+                                                   ep_size))
+                    lost = lost_experts(src_live, sched.alive)
+                    if lost:
+                        import warnings
+
+                        from repro.runtime.fault import DegradedRecovery
+                        warnings.warn(DegradedRecovery(
+                            f"rank death {list(fault.died)} lost every "
+                            f"replica of experts {list(lost)[:8]} — "
+                            "zero-data-loss shrink impossible; restore from "
+                            "checkpoint"))
+                        raise ValueError(
+                            f"experts {list(lost)[:8]} unrecoverable from "
+                            "surviving ranks and run_rebalancing has no "
+                            "checkpoint fallback — use DecodeServer "
+                            "(ckpt_dir=...) or re-init the lost weights")
+                    src = mask_placement(src_live, sched.alive)
                 params = rebind_expert_leaves(
-                    params, expert_keys, src_placement=pl,
+                    params, expert_keys, src_placement=src,
                     dst_placement=new_pl, donate=donate_params)
             pl = new_pl
     return outs, placements
@@ -438,8 +640,11 @@ def expand_expert_params(w, placement: EpPlacement, axis: int = 0):
     expert's weights (replicas duplicate). numpy stays numpy (host-side
     checkpoint rebinds never round-trip through the device), jnp stays jnp
     — ``axis`` covers scan-stacked parameter trees whose expert dim sits
-    behind the leading stack axis."""
+    behind the leading stack axis. Empty (degraded) slots host nothing but
+    the physical buffer still needs rows, so they carry expert 0's weights —
+    plan-time assignment never routes a token to them."""
     perm = tables(placement).slot_expert.reshape(-1)
+    perm = np.where(perm == EMPTY, 0, perm)
     if isinstance(w, np.ndarray):
         return np.take(w, perm, axis=axis)
     return jnp.take(jnp.asarray(w), jnp.asarray(perm), axis=axis)

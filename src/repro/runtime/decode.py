@@ -130,7 +130,7 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
                             decay: float = 0.0,
                             rebalance_fn=PL.rebalance, params=None,
                             expert_keys: tuple = PL.EXPERT_PARAM_KEYS,
-                            donate_params: bool = True):
+                            donate_params: bool = True, fault_injector=None):
     """Host-level EPLB decode driver: placements swap BETWEEN steps, at
     window boundaries, through the same mode-agnostic staged surface the
     pipeline runs on.
@@ -160,7 +160,13 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
     physical) — no per-step expansion inside the window (docs/DESIGN.md
     §8). The driver takes ownership of ``params`` by default (old buffers
     donated at each boundary); ``donate_params=False`` preserves the
-    caller's tree."""
+    caller's tree.
+
+    Elastic EP: ``fault_injector`` (a ``runtime/fault.py FaultInjector``,
+    step indices = WINDOW indices here) forces an immediate shrink to a
+    degraded placement on an injected kill and a full-width re-expand on
+    rejoin — the ``run_rebalancing`` fault path; see docs/DESIGN.md §9 for
+    the zero-data-loss rules."""
     if rebalance_every < 1:
         raise ValueError(f"rebalance_every={rebalance_every} must be >= 1")
     windows = [xs[s:s + rebalance_every]
@@ -169,5 +175,5 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
         base_cfg, make_window, windows, advance_every=1, ep_size=ep_size,
         num_redundant=num_redundant, inner_size=inner_size, decay=decay,
         rebalance_fn=rebalance_fn, params=params, expert_keys=expert_keys,
-        donate_params=donate_params)
+        donate_params=donate_params, fault_injector=fault_injector)
     return [o for w in win_outs for o in w], placements

@@ -1,25 +1,53 @@
-"""Fault tolerance: preemption-safe checkpointing, restart, stragglers.
+"""Fault tolerance: preemption-safe checkpointing, restart, stragglers,
+rank-death detection, and elastic recovery.
 
 At 1000+-node scale the failure model is: (a) planned preemption (SIGTERM
 with grace), (b) hard node loss (step dies; orchestrator restarts the job on
 a reconfigured slice), (c) stragglers (synchronous collectives make the step
-time the max over nodes). The corresponding mechanisms here:
+time the max over nodes), and (d) EP rank death mid-serve (UBEP, PAPERS.md:
+a production EP library must shrink around a dead rank instead of restarting
+the world). The corresponding mechanisms here:
 
   * SIGTERM/SIGINT handler sets a flag checked once per step; the loop then
     writes a synchronous checkpoint (data-pipeline state included) and exits
-    cleanly — restart resumes bit-exact from (params, opt, data.step).
+    cleanly — restart resumes bit-exact from (params, opt, data.step). Both
+    ``Trainer`` and ``DecodeServer.serve`` poll the guard at step boundaries
+    (the server's checkpoint is placement-tagged, docs/DESIGN.md §9).
   * restart: `latest_step()` + elastic `restore_checkpoint` re-shards onto
     the new mesh — node replacement and scale changes are the same code path.
   * stragglers: a step-time watchdog keeps an EMA and flags outliers
-    (> factor x EMA). Under synchronous SPMD the mitigation is detect ->
-    checkpoint -> evict -> elastic restart; the watchdog emits the signal an
-    orchestrator would consume.
+    (> factor x EMA). A transient outlier never updates the EMA; a
+    *persistent* slowdown (``rebase_after`` consecutive outliers — a new
+    steady state, e.g. thermal throttling) re-bases the EMA so the flag
+    clears instead of firing forever. Under synchronous SPMD the mitigation
+    is detect -> checkpoint -> evict -> elastic restart; the watchdog emits
+    the signal an orchestrator would consume (surfaced through
+    ``ServeMetrics.stragglers_flagged`` and the Trainer metrics log).
+  * rank death: ``FaultDetector`` watches per-rank heartbeats at serving-step
+    boundaries and declares a rank dead after ``miss_threshold`` consecutive
+    silent boundaries (or a wall-clock ``timeout_s``); a dead rank that
+    heartbeats again is reported as rejoined. ``FaultInjector`` is the
+    deterministic test/bench fault source: a step-keyed kill/rejoin schedule
+    that suppresses the victims' heartbeats so detection takes the exact
+    path a production transport error would. Recovery — degraded placement
+    on survivors, weight re-adoption, later re-expand — is the driver's job
+    (`runtime/server.py DecodeServer`, `core/placement.py run_rebalancing`);
+    docs/DESIGN.md §9 records the contract.
 """
 from __future__ import annotations
 
 import dataclasses
 import signal
 import time
+from typing import NamedTuple
+
+
+class DegradedRecovery(UserWarning):
+    """A rank death could NOT be absorbed with zero data loss: some experts
+    had every replica on dead ranks, so their weights are unrecoverable from
+    survivors. The driver falls back to checkpoint restore when one is
+    available and raises otherwise — this warning is the loud marker that
+    the recovery was degraded, never silent corruption (docs/DESIGN.md §9)."""
 
 
 class PreemptionGuard:
@@ -44,15 +72,27 @@ class PreemptionGuard:
     def restore(self):
         for sig, h in self._orig.items():
             signal.signal(sig, h)
+        self._orig = {}
 
 
 @dataclasses.dataclass
 class StragglerWatchdog:
-    """EMA step-time monitor; returns True when the step is an outlier."""
+    """EMA step-time monitor; ``observe`` returns True when the step is an
+    outlier (> factor x EMA). Transient outliers never update the EMA (one
+    slow collective must not poison the baseline) — but a slowdown that
+    *persists* for ``rebase_after`` consecutive steps is a new steady state
+    (thermal throttling, a degraded link), so the EMA re-bases to the mean
+    of that outlier run and the flag clears instead of firing forever.
+    ``flagged``/``rebased`` are the counters drivers surface
+    (``ServeMetrics.stragglers_flagged``, Trainer metrics log)."""
     factor: float = 2.5
     decay: float = 0.9
+    rebase_after: int = 5
     ema: float | None = None
     flagged: int = 0
+    rebased: int = 0
+    consecutive: int = 0
+    _outlier_sum: float = 0.0
 
     def observe(self, step_time: float) -> bool:
         if self.ema is None:
@@ -61,7 +101,17 @@ class StragglerWatchdog:
         outlier = step_time > self.factor * self.ema
         if outlier:
             self.flagged += 1
+            self.consecutive += 1
+            self._outlier_sum += step_time
+            if self.consecutive >= self.rebase_after:
+                # persistent new steady state: re-base on the outlier run
+                self.ema = self._outlier_sum / self.consecutive
+                self.rebased += 1
+                self.consecutive = 0
+                self._outlier_sum = 0.0
         else:
+            self.consecutive = 0
+            self._outlier_sum = 0.0
             self.ema = self.decay * self.ema + (1 - self.decay) * step_time
         return outlier
 
@@ -77,3 +127,135 @@ class StepTimer:
 
     def __exit__(self, *a):
         self.times.append(time.perf_counter() - self.t0)
+
+
+# --------------------------------------------------------------------------
+# rank-death detection (elastic EP)
+# --------------------------------------------------------------------------
+
+class FaultReport(NamedTuple):
+    """What one detector poll found: ranks newly declared dead and dead
+    ranks that came back. Empty tuples = healthy boundary."""
+    died: tuple[int, ...] = ()
+    rejoined: tuple[int, ...] = ()
+
+    def __bool__(self):
+        return bool(self.died or self.rejoined)
+
+
+class FaultDetector:
+    """Heartbeat/step-timeout rank-death detector, polled at serving-step
+    boundaries.
+
+    Each live rank calls ``heartbeat(rank, step)`` once per step (in this
+    single-host harness the driver forwards heartbeats for every rank the
+    ``FaultInjector`` says is alive; on a real pod the transport layer
+    would). ``poll(step)`` then declares dead any rank silent for
+    ``miss_threshold`` consecutive boundaries — strictly step-count based,
+    so detection is deterministic for tests — optionally OR'd with a
+    wall-clock ``timeout_s`` (the production knob: a rank pinned in a hung
+    collective misses wall time before it misses steps). A dead rank whose
+    heartbeat resumes is reported ``rejoined`` at the next poll. The
+    detector only *reports*; placement shrink/expand is the caller's move.
+    """
+
+    def __init__(self, num_ranks: int, *, miss_threshold: int = 2,
+                 timeout_s: float | None = None):
+        if num_ranks < 1:
+            raise ValueError(f"num_ranks={num_ranks} must be >= 1")
+        if miss_threshold < 1:
+            raise ValueError(f"miss_threshold={miss_threshold} must be >= 1")
+        self.num_ranks = num_ranks
+        self.miss_threshold = miss_threshold
+        self.timeout_s = timeout_s
+        self._last_step = {r: -1 for r in range(num_ranks)}
+        self._last_time = {r: None for r in range(num_ranks)}
+        self._dead: set[int] = set()
+
+    def heartbeat(self, rank: int, step: int, now: float | None = None):
+        if not 0 <= rank < self.num_ranks:
+            raise ValueError(f"rank {rank} out of range [0, {self.num_ranks})")
+        self._last_step[rank] = step
+        self._last_time[rank] = time.perf_counter() if now is None else now
+
+    def poll(self, step: int, now: float | None = None) -> FaultReport:
+        """Evaluate liveness at a step boundary. A rank is dead when it has
+        been silent for >= miss_threshold boundaries (a rank that NEVER
+        heartbeat counts from step 0) or, with ``timeout_s``, when its last
+        heartbeat is older than the timeout."""
+        died, rejoined = [], []
+        for r in range(self.num_ranks):
+            missed = step - self._last_step[r]
+            timed_out = missed >= self.miss_threshold
+            if (not timed_out and self.timeout_s is not None
+                    and self._last_time[r] is not None):
+                t = time.perf_counter() if now is None else now
+                timed_out = (t - self._last_time[r]) > self.timeout_s
+            if r in self._dead:
+                if not timed_out:
+                    self._dead.discard(r)
+                    rejoined.append(r)
+            elif timed_out:
+                self._dead.add(r)
+                died.append(r)
+        return FaultReport(tuple(died), tuple(rejoined))
+
+    @property
+    def dead(self) -> tuple[int, ...]:
+        return tuple(sorted(self._dead))
+
+    @property
+    def alive(self) -> tuple[int, ...]:
+        return tuple(r for r in range(self.num_ranks) if r not in self._dead)
+
+
+class FaultInjector:
+    """Deterministic kill/rejoin schedule for tests and benches.
+
+    ``kill``/``rejoin`` map a step index to the rank (or ranks) that die /
+    come back AT that step boundary: ``advance(step)`` applies the events
+    scheduled for ``step`` and returns them as a ``FaultReport`` (here
+    "died" means *injected*, not yet detected — detection is the
+    ``FaultDetector``'s job, fed by the injector suppressing the victims'
+    heartbeats). Pure function of the schedule and the step sequence, so
+    two runs over the same schedule produce identical event logs
+    (``self.log``) — the determinism tests/benches rely on.
+    """
+
+    def __init__(self, num_ranks: int, *, kill=None, rejoin=None):
+        self.num_ranks = num_ranks
+
+        def norm(d):
+            out = {}
+            for step, ranks in (d or {}).items():
+                rs = (ranks,) if isinstance(ranks, int) else tuple(ranks)
+                for r in rs:
+                    if not 0 <= r < num_ranks:
+                        raise ValueError(
+                            f"rank {r} out of range [0, {num_ranks})")
+                out[int(step)] = rs
+            return out
+
+        self.kill = norm(kill)
+        self.rejoin = norm(rejoin)
+        self._dead: set[int] = set()
+        self.log: list[tuple[int, FaultReport]] = []
+
+    def advance(self, step: int) -> FaultReport:
+        killed = tuple(r for r in self.kill.get(step, ())
+                       if r not in self._dead)
+        rejoined = tuple(r for r in self.rejoin.get(step, ())
+                         if r in self._dead)
+        self._dead |= set(killed)
+        self._dead -= set(rejoined)
+        report = FaultReport(killed, rejoined)
+        if report:
+            self.log.append((step, report))
+        return report
+
+    def is_alive(self, rank: int) -> bool:
+        return rank not in self._dead
+
+    @property
+    def dead_ranks(self) -> tuple[int, ...]:
+        return tuple(sorted(self._dead))

@@ -26,22 +26,49 @@ gather is skipped, so placed steady-state decode matches the
 placement=None per-step cost. Token parity with the per-step-expansion mode
 is pinned by tests/test_runtime.py. Compiled serve steps are cached per
 placement and BOUNDED to {current, previous}: a server that swaps hundreds
-of times must not accumulate compiled executables."""
+of times must not accumulate compiled executables.
+
+Elastic fault tolerance (docs/DESIGN.md §9): a ``FaultDetector`` (fed by a
+deterministic ``FaultInjector`` in tests/benches, by the transport layer in
+production) is polled at every decode-step boundary. On a detected rank
+death the server drains the pipeline, builds a DEGRADED placement that packs
+every expert onto the survivors (the dead rank's row is all EMPTY — zero
+slots, zero traffic), re-adopts weights by collapsing through the masked old
+placement (reads only surviving replicas — zero data loss whenever the dead
+rank's experts had replicas elsewhere), re-jits the step, and keeps serving
+on N-1 ranks. When no live replica exists the recovery warns
+``DegradedRecovery`` loudly and falls back to checkpoint restore
+(``ckpt_dir``) or raises — never silent corruption. A rejoin re-expands to a
+full-width placement at the next boundary; the placement-salted routing hash
+force-rebuilds handles exactly once per transition, after which the fast
+path resumes. The greedy token stream is placement-invariant, so surviving-
+rank decode tokens are bitwise-identical to an uninterrupted run
+(tests/test_elastic.py).
+
+Preemption (``runtime/fault.py PreemptionGuard``): SIGTERM/SIGINT is polled
+at the same boundaries — the server drains in-flight steps, writes a
+placement-tagged checkpoint (``ckpt_dir``), and returns cleanly with
+``preempted=True`` instead of dying mid-collective. A ``StragglerWatchdog``
+watches the ITL stream and its flag count lands in ``ServeMetrics``."""
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import adopt_expert_params
+from repro.checkpoint import (adopt_expert_params, latest_step,
+                              restore_checkpoint, save_checkpoint)
 from repro.core import placement as PL
 from repro.models import get_model
 from repro.models.config import ArchConfig
 from repro.parallel.sharding import init_from_specs
+from repro.runtime.fault import (DegradedRecovery, FaultDetector,
+                                 PreemptionGuard, StragglerWatchdog)
 from repro.runtime.steps import make_serve_step, serve_state_specs
 
 
@@ -56,6 +83,14 @@ class ServeMetrics:
     expert_heat: list | None = None        # per-logical-expert routed tokens
     heat_max_mean: float | None = None     # max/mean per-expert load ratio
     rank_heat_max_mean: float | None = None  # max/mean per-EP-rank load
+    # --- elastic fault tolerance (runtime/fault.py; docs/DESIGN.md §9) ---
+    degraded_steps: int = 0                # decode steps served with <N alive
+    recovery_count: int = 0                # shrink + expand transitions taken
+    recovery_latency_s: float | None = None  # total wall time inside recovery
+    recovery_events: list | None = None    # per-transition records (dicts)
+    alive_ranks: list | None = None        # EP ranks alive at end of serve
+    stragglers_flagged: int = 0            # watchdog outlier ITL steps
+    preempted: bool = False                # SIGTERM drain-and-checkpoint exit
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -64,7 +99,9 @@ class ServeMetrics:
 class DecodeServer:
     def __init__(self, cfg: ArchConfig, batch: int, max_len: int, mesh=None,
                  params=None, seed=0, pipeline_depth: int = 1,
-                 rebalance_every: int = 0, num_redundant_experts: int = 0):
+                 rebalance_every: int = 0, num_redundant_experts: int = 0,
+                 fault_injector=None, fault_detector: FaultDetector | None = None,
+                 miss_threshold: int = 2, ckpt_dir: str | None = None):
         self.cfg, self.mesh, self.batch = cfg, mesh, batch
         self.pipeline_depth = max(int(pipeline_depth), 1)
         # EPLB: swap expert placements every `rebalance_every` decode steps,
@@ -81,9 +118,36 @@ class DecodeServer:
         self._rank_loads = None             # [N] float64 per-rank load, summed
         #                                     under the placement ACTIVE when
         #                                     each window's heat accrued
-        if self.rebalance_every:
-            n = self._ep_size()
-            if n > 1:
+        # --- elastic fault tolerance (docs/DESIGN.md §9) ---
+        # the injector is the deterministic test/bench fault source; the
+        # detector is the serving-boundary heartbeat monitor (production
+        # feeds it from the transport layer and passes it in directly)
+        self.ckpt_dir = ckpt_dir
+        self._injector = fault_injector
+        self._detector = fault_detector
+        self.recoveries: list[dict] = []    # shrink/expand transition records
+        self._degraded_steps = 0
+        self._recovery_wall_s = 0.0
+        self.preempted = False
+        self.guard = PreemptionGuard()      # SIGTERM/SIGINT -> drain + ckpt
+        self.watchdog = StragglerWatchdog()
+        n = self._ep_size()
+        if (fault_injector is not None or fault_detector is not None):
+            if not (cfg.moe and n > 1):
+                raise ValueError("fault tolerance requires an MoE config on "
+                                 "an EP mesh (ep extent > 1) — rank death is "
+                                 "an EP-placement event")
+            if self._detector is None:
+                self._detector = FaultDetector(n,
+                                               miss_threshold=miss_threshold)
+            elif self._detector.num_ranks != n:
+                raise ValueError(
+                    f"fault_detector watches {self._detector.num_ranks} "
+                    f"ranks but the EP extent is {n}")
+        if self.rebalance_every or self._detector is not None:
+            if self.rebalance_every and n <= 1:
+                pass                        # rebalance hook inert off-mesh
+            elif n > 1:
                 if (cfg.moe.num_experts + self.num_redundant_experts) % n:
                     raise ValueError(
                         f"num_experts={cfg.moe.num_experts} + "
@@ -199,7 +263,8 @@ class DecodeServer:
         per step (logical mode, models/moe.py) or once right here at the
         adoption boundary (``params_physical``) — so the greedy token
         stream is unchanged either way (pinned by tests)."""
-        if self._sched is None or (step_idx + 1) % self.rebalance_every:
+        if (self._sched is None or not self.rebalance_every
+                or (step_idx + 1) % self.rebalance_every):
             return
         dev = self._device_heat()
         if dev is None:
@@ -231,6 +296,138 @@ class DecodeServer:
                 old, pl)
         self.step = self._compiled_step()
 
+    # ---- elastic fault tolerance: detect -> shrink/expand -> re-adopt ----
+
+    def _poll_faults(self, step_idx: int):
+        """Advance the injected fault schedule (tests/benches) and poll the
+        detector at a step boundary. Returns the FaultReport when something
+        newly died or rejoined, else None. Detection only — the caller
+        drains any in-flight pipeline before handing the report to
+        ``_recover`` (recovery re-jits the step; in-flight tokens must land
+        under the placement that issued them)."""
+        if self._detector is None:
+            return None
+        if self._injector is not None:
+            self._injector.advance(step_idx)
+            for r in range(self._detector.num_ranks):
+                if self._injector.is_alive(r):
+                    self._detector.heartbeat(r, step_idx)
+        report = self._detector.poll(step_idx)
+        return report if report else None
+
+    def _recover(self, step_idx: int, report):
+        """One shrink or expand transition (docs/DESIGN.md §9). Drains the
+        heat window, narrows/widens the scheduler to the detector's alive
+        set, builds the new placement, and re-adopts the physical expert
+        weights by collapsing through the MASKED old placement — reads only
+        surviving replicas, so the shrink is zero-data-loss whenever the
+        dead ranks' experts had replicas elsewhere. When an expert lost its
+        last replica this warns ``DegradedRecovery`` and restores the whole
+        tree from ``ckpt_dir`` (rebound to the new placement) or raises —
+        never silent corruption. Logical (non-physical) weight mode keeps
+        the full [E, ...] tree host/device-side, so no data can be lost and
+        only the placement swap happens. The placement-salted routing hash
+        force-rebuilds handles exactly once per transition."""
+        t0 = time.perf_counter()
+        dev = self._device_heat()
+        if dev is not None:
+            self._sched.observe(dev)
+            self._heat_drained = (dev if self._heat_drained is None
+                                  else self._heat_drained + dev)
+            rl = PL.rank_loads(dev, self.cfg.moe.placement,
+                               self._sched.num_ranks)
+            self._rank_loads = (rl if self._rank_loads is None
+                                else self._rank_loads + rl)
+            self.state["expert_heat"] = jnp.zeros_like(
+                self.state["expert_heat"])
+        self._sched.set_alive(self._detector.alive)
+        old = self.cfg.moe.placement
+        pl = self._sched.advance()
+        event = dict(step=step_idx,
+                     kind="shrink" if report.died else "expand",
+                     died=list(report.died), rejoined=list(report.rejoined),
+                     alive=list(self._detector.alive),
+                     lost_experts=[], restored_from=None,
+                     placement_changed=pl is not old)
+        if pl is not old:
+            if self.params_physical:
+                src_live = (old if old is not None else
+                            PL.identity_placement(self.cfg.moe.num_experts,
+                                                  self._sched.num_ranks))
+                lost = (PL.lost_experts(src_live, self._sched.alive)
+                        if report.died else ())
+                if lost:
+                    # the dead ranks held every replica of these experts:
+                    # their physical slot rows are unavailable on a real
+                    # pod, so zero-data-loss recovery is impossible
+                    event["lost_experts"] = list(lost)
+                    ck = (latest_step(self.ckpt_dir)
+                          if self.ckpt_dir is not None else None)
+                    warnings.warn(DegradedRecovery(
+                        f"rank death {list(report.died)} lost every replica "
+                        f"of experts {list(lost)[:8]} — zero-data-loss "
+                        "shrink impossible; "
+                        + (f"restoring from checkpoint step {ck}"
+                           if ck is not None else
+                           f"no checkpoint available (ckpt_dir="
+                           f"{self.ckpt_dir!r})")))
+                    if ck is None:
+                        # record the failed transition before bailing so
+                        # post-mortems see what died and what was lost
+                        event["latency_s"] = time.perf_counter() - t0
+                        self.recoveries.append(event)
+                        raise RuntimeError(
+                            f"experts {list(lost)[:8]} unrecoverable from "
+                            "surviving ranks and no checkpoint to restore "
+                            f"from (ckpt_dir={self.ckpt_dir!r}) — pass "
+                            "ckpt_dir= with a saved checkpoint or add "
+                            "redundant replicas (num_redundant_experts)")
+                    new_cfg = dataclasses.replace(
+                        self.cfg, moe=dataclasses.replace(self.cfg.moe,
+                                                          placement=pl))
+                    self.params, _ = restore_checkpoint(
+                        self.ckpt_dir, ck, self.model.params_spec(new_cfg),
+                        mesh=self.mesh, placement=pl)
+                    event["restored_from"] = ck
+                else:
+                    src = (PL.mask_placement(src_live, self._sched.alive)
+                           if report.died else old)
+                    self.params = adopt_expert_params(
+                        self.params,
+                        self.model.params_spec(self._logical_cfg()),
+                        src, pl)
+            self.cfg = dataclasses.replace(
+                self.cfg, moe=dataclasses.replace(self.cfg.moe, placement=pl))
+            self.placements.append(pl)
+            self.step = self._compiled_step()
+        dt = time.perf_counter() - t0
+        event["latency_s"] = dt
+        self._recovery_wall_s += dt
+        self.recoveries.append(event)
+
+    def _preempt(self, step_idx: int):
+        """SIGTERM/SIGINT drain path: with the pipeline already drained by
+        the caller, write a placement-tagged checkpoint (``ckpt_dir``) and
+        mark the server preempted — ``decode`` then exits cleanly at this
+        step boundary and ``serve`` reports metrics for the tokens that DID
+        complete, with ``preempted=True``."""
+        self.preempted = True
+        if self.ckpt_dir is None:
+            return
+        pl = self.cfg.moe.placement if self.cfg.moe else None
+        save_checkpoint(
+            self.ckpt_dir, step_idx + 1, self.params,
+            placement=pl if self.params_physical else None,
+            extra=dict(preempted=True,
+                       alive_ranks=(list(self._detector.alive)
+                                    if self._detector is not None else None)))
+
+    def close(self):
+        """Uninstall the preemption signal handlers (restores whatever was
+        registered before this server). Call when retiring a server inside
+        a longer-lived process; tests do."""
+        self.guard.restore()
+
     def prefill(self, prompts: jax.Array):
         """Token-by-token prefill through the decode path (keeps this harness
         family-agnostic; a production server runs a fused prefill)."""
@@ -255,7 +452,19 @@ class DecodeServer:
             jax.block_until_ready(tok)
             itls.append(time.perf_counter() - t0)
             outs.append(np.asarray(tok))
-            self._maybe_rebalance(i)
+            report = self._poll_faults(i)
+            if report is not None:
+                # recovery drains the heat window and advances the
+                # placement itself — a coinciding periodic boundary would
+                # just dedup to the same table
+                self._recover(i, report)
+            else:
+                self._maybe_rebalance(i)
+            if self._detector is not None and self._detector.dead:
+                self._degraded_steps += 1
+            if self.guard.should_stop:
+                self._preempt(i)
+                break
         return np.concatenate(outs, axis=1), np.asarray(itls)
 
     def _decode_pipelined(self, first_tok: jax.Array, steps: int):
@@ -280,18 +489,30 @@ class DecodeServer:
                 jax.block_until_ready(d)
                 marks.append(time.perf_counter())
                 done.append(d)
-            if self._sched is not None and (i + 1) % self.rebalance_every == 0:
-                # placement swap boundary: drain the in-flight window first
-                # (the new placement re-jits the step; state stays valid).
+            boundary = (self._sched is not None and self.rebalance_every
+                        and (i + 1) % self.rebalance_every == 0)
+            report = self._poll_faults(i)
+            if boundary or report is not None or self.guard.should_stop:
+                # placement swap / recovery / preemption boundary: drain the
+                # in-flight window first (a swap re-jits the step; in-flight
+                # tokens must land under the placement that issued them).
                 # The drain and any post-swap recompile are charged to the
-                # ITL stream on purpose — swaps cost real latency, and the
-                # serving metrics should show it.
+                # ITL stream on purpose — swaps and recoveries cost real
+                # latency, and the serving metrics should show it.
                 while pending:
                     d = pending.popleft()
                     jax.block_until_ready(d)
                     marks.append(time.perf_counter())
                     done.append(d)
-                self._maybe_rebalance(i)
+                if report is not None:
+                    self._recover(i, report)
+                elif boundary:
+                    self._maybe_rebalance(i)
+                if self.guard.should_stop:
+                    self._preempt(i)
+                    break
+            if self._detector is not None and self._detector.dead:
+                self._degraded_steps += 1
         while pending:
             d = pending.popleft()
             jax.block_until_ready(d)
@@ -313,6 +534,8 @@ class DecodeServer:
         # would inflate its tok/s relative to the depth-1 baseline
         decode_wall = time.perf_counter() - t0
         total = toks.shape[0] * toks.shape[1]
+        for t in itls:      # straggler signal over the ITL stream
+            self.watchdog.observe(float(t))
         # EPLB: fold the tracked per-expert heat into the metrics so serving
         # benchmarks report load imbalance alongside latency
         heat = self._tracked_heat()
@@ -338,4 +561,12 @@ class DecodeServer:
             output_tok_s=total / (ttft + decode_wall),
             total_tokens=total,
             expert_heat=None if heat is None else heat.tolist(),
-            heat_max_mean=heat_mm, rank_heat_max_mean=rank_mm)
+            heat_max_mean=heat_mm, rank_heat_max_mean=rank_mm,
+            degraded_steps=self._degraded_steps,
+            recovery_count=len(self.recoveries),
+            recovery_latency_s=self._recovery_wall_s or None,
+            recovery_events=list(self.recoveries) or None,
+            alive_ranks=(list(self._detector.alive)
+                         if self._detector is not None else None),
+            stragglers_flagged=self.watchdog.flagged,
+            preempted=self.preempted)

@@ -110,10 +110,14 @@ class Trainer:
                       f"{t.times[-1]:.2f}s vs ema {self.watchdog.ema:.2f}s")
             if self.data.step % self.tcfg.log_every == 0:
                 rec = dict(step=self.data.step, loss=float(m["loss"]),
-                           gnorm=float(m["grad_norm"]), t=t.times[-1])
+                           gnorm=float(m["grad_norm"]), t=t.times[-1],
+                           stragglers_flagged=self.watchdog.flagged,
+                           watchdog_rebased=self.watchdog.rebased)
                 self.metrics_log.append(rec)
                 print(f"[train] step={rec['step']} loss={rec['loss']:.4f} "
-                      f"gnorm={rec['gnorm']:.3f} {rec['t']*1e3:.0f}ms")
+                      f"gnorm={rec['gnorm']:.3f} {rec['t']*1e3:.0f}ms"
+                      + (f" stragglers={rec['stragglers_flagged']}"
+                         if rec['stragglers_flagged'] else ""))
             if (self.tcfg.ckpt_dir and
                     self.data.step % self.tcfg.ckpt_every == 0):
                 self.save(params, opt)

@@ -1,0 +1,302 @@
+"""Elastic fault-tolerant EP (docs/DESIGN.md §9): a rank killed mid-serve by
+the deterministic FaultInjector must leave the surviving ranks' greedy token
+stream BITWISE-identical to an uninterrupted run whenever the dead rank's
+experts have replicas elsewhere; the degraded placement must assign zero
+slots to the dead rank; a rejoin must re-expand to full width with the
+compiled-step/routing-hash fast path resuming; and the no-replica case must
+warn ``DegradedRecovery`` loudly and restore from checkpoint or raise —
+never silently corrupt. Plus the driver-level fault path
+(``run_rebalancing``/``rebalancing_decode_loop``) and SIGTERM preemption
+drain in ``DecodeServer.serve``."""
+import dataclasses
+import json
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_smoke
+from repro.core import (EpGroupConfig, ep_create_handle, ep_dispatch,
+                        ep_combine)
+from repro.core import placement as PL
+from repro.core import plan as plan_mod
+from repro.runtime.fault import DegradedRecovery, FaultInjector
+from repro.runtime.server import DecodeServer
+
+
+def _mesh8():
+    return jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _cfg_physical(placement):
+    """dbrx smoke (E=8 experts on 8 EP ranks) in the adopt-once serving
+    layout with an explicit initial placement."""
+    cfg = get_smoke("dbrx-132b")
+    moe = dataclasses.replace(cfg.moe, ep_mode="ll", ep_axis=("data",),
+                              track_expert_heat=True, params_physical=True,
+                              placement=placement)
+    return dataclasses.replace(cfg, moe=moe)
+
+
+def _prompts(cfg):
+    return jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab, (8, 4)), jnp.int32)
+
+
+def test_kill_midserve_bitwise_tokens_and_rejoin():
+    """The acceptance scenario: kill rank 2 mid-decode, rejoin it later.
+    Every expert has 2 replicas on distinct ranks (R=E), so the shrink is
+    zero-data-loss: (a) tokens bitwise-equal to the uninterrupted run,
+    (b) the degraded placement gives the dead rank ZERO slots, (c) rejoin
+    re-expands to full width and the fast path resumes, with the placement
+    fingerprint salt forcing exactly one handle/step rebuild per
+    transition."""
+    E = 8
+    pl0 = PL.redundant_placement(E, 8, E)      # every expert 2x replicated
+    cfg = _cfg_physical(pl0)
+    mesh = _mesh8()
+    prompts = _prompts(cfg)
+
+    srv_a = DecodeServer(cfg, batch=8, max_len=32, mesh=mesh,
+                         num_redundant_experts=E)
+    first_a, _ = srv_a.prefill(prompts)
+    toks_a, _ = srv_a.decode(first_a, 12)
+
+    inj = FaultInjector(8, kill={3: 2}, rejoin={8: 2})
+    srv_b = DecodeServer(cfg, batch=8, max_len=32, mesh=mesh,
+                         num_redundant_experts=E, fault_injector=inj,
+                         miss_threshold=1)
+    first_b, _ = srv_b.prefill(prompts)
+    toks_b, _ = srv_b.decode(first_b, 12)
+
+    # (a) surviving-rank tokens bitwise-identical across the kill + rejoin
+    np.testing.assert_array_equal(toks_a, toks_b)
+
+    # exactly one shrink + one expand, both zero-data-loss
+    assert [e["kind"] for e in srv_b.recoveries] == ["shrink", "expand"]
+    assert all(e["lost_experts"] == [] and e["restored_from"] is None
+               for e in srv_b.recoveries)
+    assert srv_b.recoveries[0]["died"] == [2]
+    assert srv_b.recoveries[1]["rejoined"] == [2]
+
+    # (b) degraded placement: zero slots on the dead rank, all experts live
+    degraded, expanded = srv_b.placements[-2:]
+    assert degraded.dead_ranks() == (2,)
+    assert all(e == PL.EMPTY for e in degraded.slot_expert[2])
+    assert degraded.num_empty == degraded.slots_per_rank
+    assert PL.lost_experts(degraded, degraded.alive_ranks()) == ()
+
+    # (c) rejoin re-expands; the current compiled step is the cached one
+    # (fast path resumed) and each transition got its own fingerprint salt
+    assert expanded.dead_ranks() == ()
+    assert srv_b.cfg.moe.placement is expanded
+    assert srv_b.step is srv_b._step_cache[expanded]
+    assert len(srv_b._step_cache) <= 2
+    fps = [pl0.fingerprint(), degraded.fingerprint(), expanded.fingerprint()]
+    assert len(set(fps)) == 3
+
+    # detector wound back to full health; degraded window really was served
+    assert srv_b._detector.alive == tuple(range(8))
+    assert srv_b._degraded_steps == 5          # boundaries 3..7 ran on N-1
+
+
+def test_serve_metrics_fault_fields_json_safe():
+    E = 8
+    pl0 = PL.redundant_placement(E, 8, E)
+    cfg = _cfg_physical(pl0)
+    inj = FaultInjector(8, kill={2: 1}, rejoin={5: 1})
+    srv = DecodeServer(cfg, batch=8, max_len=32, mesh=_mesh8(),
+                       num_redundant_experts=E, fault_injector=inj,
+                       miss_threshold=1)
+    m = srv.serve(_prompts(cfg), gen_steps=8)
+    assert m.recovery_count == 2 and m.degraded_steps > 0
+    assert m.recovery_latency_s > 0
+    assert m.alive_ranks == list(range(8))
+    assert [e["kind"] for e in m.recovery_events] == ["shrink", "expand"]
+    assert not m.preempted
+    json.dumps(m.as_dict())                    # bench_fault emits this
+
+
+def test_no_replica_death_warns_and_raises_without_checkpoint():
+    """(d) the identity placement has NO replicas: killing a rank loses its
+    experts' only weights. Without a checkpoint the recovery must warn
+    ``DegradedRecovery`` and raise — never serve silently corrupted."""
+    E = 8
+    cfg = _cfg_physical(PL.identity_placement(E, 8))
+    inj = FaultInjector(8, kill={2: 2})        # rank 2 dies at step 2
+    srv = DecodeServer(cfg, batch=8, max_len=32, mesh=_mesh8(),
+                       fault_injector=inj, miss_threshold=1)
+    first, _ = srv.prefill(_prompts(cfg))
+    with pytest.warns(DegradedRecovery, match="lost every replica"):
+        with pytest.raises(RuntimeError, match="unrecoverable"):
+            srv.decode(first, 6)
+    assert srv.recoveries[-1]["lost_experts"] == [2]    # rank 2's expert
+
+
+def test_no_replica_death_restores_from_checkpoint(tmp_path):
+    """(d) with ``ckpt_dir`` the no-replica death recovers by restoring the
+    whole tree rebound to the degraded placement — still loud (warning +
+    event record), and the tokens match the uninterrupted run because the
+    restored weights are the very ones that were lost."""
+    E = 8
+    pl_id = PL.identity_placement(E, 8)
+    cfg = _cfg_physical(pl_id)
+    mesh = _mesh8()
+    prompts = _prompts(cfg)
+
+    srv_a = DecodeServer(cfg, batch=8, max_len=32, mesh=mesh)
+    first_a, _ = srv_a.prefill(prompts)
+    toks_a, _ = srv_a.decode(first_a, 8)
+
+    inj = FaultInjector(8, kill={2: 2})        # rank 2 dies at step 2
+    srv_b = DecodeServer(cfg, batch=8, max_len=32, mesh=mesh,
+                         fault_injector=inj, miss_threshold=1,
+                         ckpt_dir=str(tmp_path))
+    save_checkpoint(tmp_path, 0, srv_b.params, placement=pl_id)
+    first_b, _ = srv_b.prefill(prompts)
+    with pytest.warns(DegradedRecovery, match="restoring from checkpoint"):
+        toks_b, _ = srv_b.decode(first_b, 8)
+    np.testing.assert_array_equal(toks_a, toks_b)
+    ev = srv_b.recoveries[0]
+    assert ev["kind"] == "shrink" and ev["restored_from"] == 0
+    assert ev["lost_experts"] == [2]
+    assert srv_b.cfg.moe.placement.dead_ranks() == (2,)
+
+
+def test_preemption_drains_and_checkpoints_decode_server(tmp_path):
+    """Satellite: SIGTERM mid-serve drains the pipeline, writes a
+    placement-tagged checkpoint, and exits cleanly at a step boundary with
+    ``preempted=True`` — the tokens that DID complete are intact."""
+    E = 8
+    pl0 = PL.redundant_placement(E, 8, E)
+    cfg = _cfg_physical(pl0)
+    srv = DecodeServer(cfg, batch=8, max_len=32, mesh=_mesh8(),
+                       num_redundant_experts=E, pipeline_depth=2,
+                       ckpt_dir=str(tmp_path))
+    try:
+        first, _ = srv.prefill(_prompts(cfg))
+        signal.raise_signal(signal.SIGTERM)
+        toks, _ = srv.decode(first, 16)
+    finally:
+        srv.close()
+    assert srv.preempted
+    assert toks.shape[1] < 17                  # exited at the first boundary
+    step = latest_step(tmp_path)
+    assert step is not None
+    spec = srv.model.params_spec(srv.cfg)
+    restored, idx = restore_checkpoint(tmp_path, step, spec, placement=pl0)
+    assert idx["expert_layout"]["fingerprint"] == pl0.fingerprint()
+    for a, b in zip(jax.tree.leaves(srv.params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# --------------------------------------------------------------------------
+# driver-level fault path: run_rebalancing / rebalancing_decode_loop
+# --------------------------------------------------------------------------
+
+N, E2, K, T, H = 8, 16, 4, 16, 32
+
+
+def _loop_harness(mesh, rng):
+    router_w = jnp.asarray(rng.randn(H, E2), jnp.float32)
+    bump = jnp.zeros((E2,)).at[:4].set(3.0)
+
+    def router_fn(x):
+        logits = x @ router_w + bump
+        w, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+        return idx.astype(jnp.int32), w / w.sum(-1, keepdims=True)
+
+    def make(group, params):
+        L = group.local_experts
+
+        def fn(window):
+            def run(x, wv):
+                x = x[0]
+                ti, wi = router_fn(x)
+                h = ep_create_handle(group, ti, wi)
+                y3d, counts = ep_dispatch(group, h, x)
+                me = plan_mod.my_rank(group)
+                rows = jax.lax.dynamic_slice_in_dim(wv, me * L, L)
+                out = ep_combine(group, h, y3d * rows[:, None, None])
+                heat = jax.lax.psum(PL.heat_from_topk(ti, E2), "data")
+                return out[None], heat[None]
+            f = jax.jit(jax.shard_map(
+                run, mesh=mesh, in_specs=(P("data"), P(None)),
+                out_specs=(P("data"), P("data"))))
+            outs, hs = [], 0.0
+            for x in window:
+                o, hcur = f(x, params["w_gate"])
+                outs.append(np.asarray(o))
+                hs = hs + np.asarray(hcur)[0]
+            return outs, hs
+        return fn
+    return make
+
+
+def test_rebalancing_decode_loop_survives_injected_kill():
+    """run_rebalancing's fault path: an injected kill forces an immediate
+    shrink (masked rebind through surviving replicas only) and a rejoin
+    re-expands — outputs stay bitwise-equal to the fault-free run because
+    placement only moves where experts compute."""
+    from repro.checkpoint import rebind_expert_leaves
+    from repro.runtime.decode import rebalancing_decode_loop
+    rng = np.random.RandomState(8)
+    mesh = _mesh8()
+    pl0 = PL.redundant_placement(E2, N, E2)    # full 2x replication
+    w_log = jnp.asarray(rng.rand(E2).astype(np.float32) + 0.5)
+    w_phys = rebind_expert_leaves({"w_gate": w_log}, ("w_gate",),
+                                  dst_placement=pl0)
+    base_cfg = EpGroupConfig(num_experts=E2, max_tokens_per_rank=T, hidden=H,
+                             top_k=K, mode="ll", payload_dtype=jnp.float32,
+                             placement=pl0)
+    xs = [jnp.asarray(rng.randn(N, T, H), jnp.float32) for _ in range(8)]
+    make = _loop_harness(mesh, np.random.RandomState(8))
+
+    outs_a, pls_a = rebalancing_decode_loop(
+        base_cfg, make, xs, rebalance_every=2, ep_size=N, num_redundant=E2,
+        params=dict(w_phys), expert_keys=("w_gate",), donate_params=False)
+
+    # kill rank 3 at the FIRST window boundary, while the fully-replicated
+    # initial placement is still live (a later heat-driven rebalance may
+    # have concentrated replicas on hot experts, leaving cold experts
+    # single-replica — then a kill is legitimately unrecoverable)
+    inj = FaultInjector(N, kill={0: 3}, rejoin={1: 3})
+    outs_b, pls_b = rebalancing_decode_loop(
+        base_cfg, make, xs, rebalance_every=2, ep_size=N, num_redundant=E2,
+        params=dict(w_phys), expert_keys=("w_gate",), donate_params=False,
+        fault_injector=inj)
+
+    for a, b in zip(outs_a, outs_b):
+        np.testing.assert_array_equal(a, b)
+    # placements are per WINDOW: [pl0, degraded, expanded, full-width]
+    assert pls_b[1].dead_ranks() == (3,)       # degraded window
+    assert pls_b[2].dead_ranks() == ()         # rejoined: full width again
+    assert pls_b[-1].dead_ranks() == ()
+    assert inj.log and inj.log[0][0] == 0
+
+
+def test_run_rebalancing_no_replica_kill_raises():
+    """Contiguous striping has no replicas: a kill must warn
+    ``DegradedRecovery`` and raise (run_rebalancing has no checkpoint
+    fallback — that is the DecodeServer's job)."""
+    from repro.runtime.decode import rebalancing_decode_loop
+    rng = np.random.RandomState(8)
+    mesh = _mesh8()
+    w_log = jnp.asarray(rng.rand(E2).astype(np.float32) + 0.5)
+    base_cfg = EpGroupConfig(num_experts=E2, max_tokens_per_rank=T, hidden=H,
+                             top_k=K, mode="ll", payload_dtype=jnp.float32)
+    xs = [jnp.asarray(rng.randn(N, T, H), jnp.float32) for _ in range(4)]
+    make = _loop_harness(mesh, np.random.RandomState(8))
+    inj = FaultInjector(N, kill={0: 2})
+    with pytest.warns(DegradedRecovery):
+        with pytest.raises(ValueError, match="unrecoverable"):
+            rebalancing_decode_loop(
+                base_cfg, make, xs, rebalance_every=2, ep_size=N,
+                params={"w_gate": w_log}, expert_keys=("w_gate",),
+                donate_params=False, fault_injector=inj)

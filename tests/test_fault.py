@@ -1,0 +1,218 @@
+"""runtime/fault.py unit coverage: PreemptionGuard install/restore (+ the
+non-main-thread fallback), StragglerWatchdog EMA / persistent-slowdown
+re-base, StepTimer, and the elastic-EP fault layer — FaultInjector schedule
+determinism and FaultDetector heartbeat/step-timeout semantics."""
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.runtime.fault import (FaultDetector, FaultInjector, FaultReport,
+                                 PreemptionGuard, StepTimer,
+                                 StragglerWatchdog)
+
+
+# --------------------------------------------------------------------------
+# PreemptionGuard
+# --------------------------------------------------------------------------
+
+def test_preemption_guard_install_signal_restore():
+    before = {s: signal.getsignal(s) for s in (signal.SIGTERM, signal.SIGINT)}
+    g = PreemptionGuard()
+    try:
+        assert not g.should_stop
+        for s in before:
+            assert signal.getsignal(s) == g._handler
+        signal.raise_signal(signal.SIGTERM)
+        assert g.should_stop
+    finally:
+        g.restore()
+    for s, h in before.items():
+        assert signal.getsignal(s) == h
+    g.restore()                      # idempotent: second restore is a no-op
+    for s, h in before.items():
+        assert signal.getsignal(s) == h
+
+
+def test_preemption_guard_non_main_thread_fallback():
+    """signal.signal raises ValueError off the main thread — the guard must
+    degrade to an inert flag (no handlers installed, restore a no-op)
+    instead of crashing the worker that built it."""
+    before = {s: signal.getsignal(s) for s in (signal.SIGTERM, signal.SIGINT)}
+    box = {}
+
+    def build():
+        g = PreemptionGuard()
+        box["stop"] = g.should_stop
+        box["orig"] = dict(g._orig)
+        g.restore()
+
+    t = threading.Thread(target=build)
+    t.start()
+    t.join()
+    assert box["stop"] is False and box["orig"] == {}
+    for s, h in before.items():      # main-thread handlers untouched
+        assert signal.getsignal(s) == h
+
+
+# --------------------------------------------------------------------------
+# StragglerWatchdog
+# --------------------------------------------------------------------------
+
+def test_watchdog_transient_outlier_never_updates_ema():
+    w = StragglerWatchdog(factor=2.0)
+    for _ in range(10):
+        assert not w.observe(1.0)
+    assert w.observe(5.0) and w.flagged == 1
+    assert abs(w.ema - 1.0) < 1e-6
+    assert not w.observe(1.0)        # recovery clears the consecutive run
+    assert w.consecutive == 0 and w.rebased == 0
+
+
+def test_watchdog_persistent_slowdown_rebases():
+    """A slowdown that persists for ``rebase_after`` consecutive steps is a
+    new steady state: the EMA re-bases to the outlier run's mean and the
+    flag CLEARS — without the re-base every subsequent step would be
+    flagged forever."""
+    w = StragglerWatchdog(factor=2.0, rebase_after=3)
+    for _ in range(10):
+        w.observe(1.0)
+    flags = [w.observe(5.0) for _ in range(3)]
+    assert flags == [True, True, True] and w.flagged == 3
+    assert w.rebased == 1 and abs(w.ema - 5.0) < 1e-6
+    assert not w.observe(5.0)        # the new steady state is not an outlier
+    assert w.flagged == 3
+
+
+def test_watchdog_interrupted_run_never_rebases():
+    w = StragglerWatchdog(factor=2.0, rebase_after=3)
+    for _ in range(10):
+        w.observe(1.0)
+    for _ in range(5):               # 2 outliers, then recovery, repeatedly
+        assert w.observe(5.0) and w.observe(5.0)
+        assert not w.observe(1.0)
+    assert w.rebased == 0 and w.flagged == 10
+    assert abs(w.ema - 1.0) < 0.2    # baseline survives the whole run
+
+
+def test_step_timer():
+    t = StepTimer()
+    with t:
+        time.sleep(0.01)
+    with t:
+        pass
+    assert len(t.times) == 2
+    assert t.times[0] >= 0.01 and t.times[1] >= 0.0
+
+
+# --------------------------------------------------------------------------
+# FaultInjector: deterministic kill/rejoin schedules
+# --------------------------------------------------------------------------
+
+def test_fault_injector_schedule_and_determinism():
+    def run():
+        inj = FaultInjector(4, kill={2: 1, 5: (0, 3)}, rejoin={7: 1})
+        reports = [inj.advance(s) for s in range(10)]
+        return inj, reports
+
+    inj, reports = run()
+    assert reports[2] == FaultReport((1,), ())
+    assert reports[5] == FaultReport((0, 3), ())
+    assert reports[7] == FaultReport((), (1,))
+    assert all(not r for i, r in enumerate(reports) if i not in (2, 5, 7))
+    assert inj.dead_ranks == (0, 3)
+    assert inj.is_alive(1) and not inj.is_alive(0)
+    # pure function of (schedule, step sequence): identical event log
+    inj2, _ = run()
+    assert inj.log == inj2.log
+    assert [s for s, _ in inj.log] == [2, 5, 7]
+
+
+def test_fault_injector_edge_cases():
+    inj = FaultInjector(2, kill={0: 1, 3: 1}, rejoin={1: 0})
+    assert inj.advance(0) == FaultReport((1,), ())
+    assert not inj.advance(1)        # rejoin of a LIVE rank: no event
+    assert not inj.advance(3)        # re-kill of a DEAD rank: no event
+    with pytest.raises(ValueError, match="out of range"):
+        FaultInjector(2, kill={0: 5})
+
+
+# --------------------------------------------------------------------------
+# FaultDetector: heartbeat / step-timeout semantics
+# --------------------------------------------------------------------------
+
+def test_fault_detector_miss_threshold_and_rejoin():
+    det = FaultDetector(3, miss_threshold=2)
+    for step in range(2):
+        for r in range(3):
+            det.heartbeat(r, step)
+        assert not det.poll(step)
+    # rank 1 goes silent after step 1
+    for r in (0, 2):
+        det.heartbeat(r, 2)
+    assert not det.poll(2)           # 1 missed boundary < threshold
+    for r in (0, 2):
+        det.heartbeat(r, 3)
+    assert det.poll(3) == FaultReport((1,), ())
+    assert det.dead == (1,) and det.alive == (0, 2)
+    assert not det.poll(4)           # already dead: reported exactly once
+    # heartbeat resumes -> rejoined exactly once
+    for r in range(3):
+        det.heartbeat(r, 5)
+    assert det.poll(5) == FaultReport((), (1,))
+    assert det.dead == () and det.alive == (0, 1, 2)
+
+
+def test_fault_detector_never_heartbeat_counts_from_start():
+    det = FaultDetector(2, miss_threshold=2)
+    det.heartbeat(0, 0)
+    assert not det.poll(0)
+    det.heartbeat(0, 1)
+    assert det.poll(1) == FaultReport((1,), ())   # 1 - (-1) >= 2
+
+
+def test_fault_detector_wall_clock_timeout():
+    det = FaultDetector(2, miss_threshold=100, timeout_s=1.0)
+    det.heartbeat(0, 0, now=0.0)
+    det.heartbeat(1, 0, now=0.0)
+    assert not det.poll(0, now=0.5)
+    det.heartbeat(0, 1, now=2.0)     # rank 1's heartbeat is now stale
+    assert det.poll(1, now=2.0) == FaultReport((1,), ())
+    det.heartbeat(1, 2, now=2.5)
+    assert det.poll(2, now=2.5) == FaultReport((), (1,))
+
+
+def test_fault_detector_validation():
+    with pytest.raises(ValueError, match="num_ranks"):
+        FaultDetector(0)
+    with pytest.raises(ValueError, match="miss_threshold"):
+        FaultDetector(2, miss_threshold=0)
+    det = FaultDetector(2)
+    with pytest.raises(ValueError, match="out of range"):
+        det.heartbeat(2, 0)
+
+
+def test_injector_feeds_detector_deterministically():
+    """The harness wiring (runtime/server.py): the injector suppresses the
+    victims' heartbeats, so detection lands exactly kill_step +
+    miss_threshold - 1 boundaries later — identical on every run."""
+    def run():
+        inj = FaultInjector(4, kill={3: 2}, rejoin={8: 2})
+        det = FaultDetector(4, miss_threshold=2)
+        events = []
+        for step in range(12):
+            inj.advance(step)
+            for r in range(4):
+                if inj.is_alive(r):
+                    det.heartbeat(r, step)
+            rep = det.poll(step)
+            if rep:
+                events.append((step, rep))
+        return events
+
+    a, b = run(), run()
+    assert a == b
+    # killed at 3 (last heartbeat step 2): missed >= 2 first at poll(4);
+    # rejoin heartbeat at 8 is seen by poll(8)
+    assert a == [(4, FaultReport((2,), ())), (8, FaultReport((), (2,)))]
