@@ -13,11 +13,20 @@ rank mid-serve and rejoins it later. Measured per ``miss_threshold``:
   * degraded throughput — steady-state ITL on N-1 ranks vs healthy, the
     first post-transition step (which carries the recompile) excluded.
 
+Correlated whole-pod kill (ISSUE 7 tentpole): a second scenario places the
+experts under the fault-domain floor (``min_replicas=2`` across 2 pods of
+4 ranks) and kills an ENTIRE pod at one step boundary via the injector's
+``kill_domains`` schedule. The four deaths coalesce into ONE shrink
+transition, recovered through the masked rebind — the bench ASSERTS
+bitwise survivor-token parity with the uninterrupted run and ZERO
+checkpoint restores (the floor's guarantee), and reports the coalesced
+recovery latency + degraded (half-capacity) ITL rows.
+
 In-bench acceptance (the functional contract, asserted every run): the
 token stream is BITWISE-identical to an uninterrupted serve, the degraded
-placement assigns zero slots to the dead rank, and the rejoin restores the
-full-width table. Wall-clock ratios are tracked, never asserted (CPU-host
-noise). Results land in results/benchmarks/fault.json and feed the
+placement assigns zero slots to the dead rank(s), and the rejoin restores
+the full-width table. Wall-clock ratios are tracked, never asserted (CPU-
+host noise). Results land in results/benchmarks/fault.json and feed the
 ``fault`` section of BENCH_ll_kernels.json (schema v5) via
 benchmarks/run.py."""
 from benchmarks.common import ensure_devices, write_result, table
@@ -36,26 +45,36 @@ from repro.runtime.fault import FaultInjector    # noqa: E402
 from repro.runtime.server import DecodeServer    # noqa: E402
 
 STEPS, KILL, REJOIN, DEAD_RANK = 40, 10, 30, 2
+# correlated scenario: 2 pods of 4 ranks; pod 1 (ranks 4..7) dies whole
+POD_DOMAINS = PL.domains_from_geometry(8, 4)
+DEAD_POD = 1
 
 
-def _cfg():
+def _cfg(floor=False):
     cfg = get_smoke("dbrx-132b")
     E = cfg.moe.num_experts
-    pl0 = PL.redundant_placement(E, 8, E)       # every expert 2x replicated
+    if floor:
+        # fault-domain floor: 2 replicas per expert, one per pod — survives
+        # a whole-pod kill by construction
+        pl0 = PL.rebalance(np.ones(E), 8, num_redundant=E,
+                           min_replicas=2, domains=POD_DOMAINS)
+    else:
+        pl0 = PL.redundant_placement(E, 8, E)   # every expert 2x replicated
     moe = dataclasses.replace(cfg.moe, ep_mode="ll", ep_axis=("data",),
                               track_expert_heat=True, params_physical=True,
                               placement=pl0)
     return dataclasses.replace(cfg, moe=moe), E
 
 
-def _serve(fault_injector=None, miss_threshold=1):
-    cfg, E = _cfg()
+def _serve(fault_injector=None, miss_threshold=1, floor=False):
+    cfg, E = _cfg(floor=floor)
     mesh = jax.make_mesh((8,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
+    kw = (dict(min_replicas=2, fault_domains=POD_DOMAINS) if floor else {})
     srv = DecodeServer(cfg, batch=8, max_len=64, mesh=mesh,
                        num_redundant_experts=E,
                        fault_injector=fault_injector,
-                       miss_threshold=miss_threshold)
+                       miss_threshold=miss_threshold, **kw)
     prompts = jnp.asarray(np.random.RandomState(0).randint(
         0, cfg.vocab, (8, 8)), jnp.int32)
     first, _ = srv.prefill(prompts)
@@ -68,6 +87,54 @@ def _steady(itls, lo, hi, skip_first=1):
     (they carry the post-transition recompile)."""
     window = itls[lo + skip_first:hi]
     return float(window.mean()) if window.size else float("nan")
+
+
+def _pod_kill_rows():
+    """Correlated whole-pod kill under the min_replicas=2 fault-domain
+    floor: ranks 4..7 die at ONE boundary, coalescing into a single shrink
+    transition; survivors keep serving at half capacity until the pod
+    rejoins. Acceptance asserted in-bench: bitwise survivor-token parity,
+    ZERO checkpoint restores, one coalesced transition, floor intact on
+    every adopted table."""
+    _, toks_ref, _ = _serve(floor=True)
+    inj = FaultInjector(8, domains=POD_DOMAINS,
+                        kill_domains={KILL: DEAD_POD},
+                        rejoin_domains={REJOIN: DEAD_POD})
+    srv, toks, itls = _serve(fault_injector=inj, miss_threshold=1,
+                             floor=True)
+
+    # ---- in-bench acceptance (ISSUE 7): the floor's guarantee ----
+    np.testing.assert_array_equal(toks_ref, toks)   # bitwise across pod kill
+    assert srv._ckpt_restores == 0, srv._ckpt_restores
+    kinds = [e["kind"] for e in srv.recoveries]
+    assert kinds == ["shrink", "expand"], kinds     # ONE coalesced shrink
+    shrink, expand = srv.recoveries
+    dead_pod_ranks = list(POD_DOMAINS.ranks_in(DEAD_POD))
+    assert shrink["died"] == dead_pod_ranks, shrink
+    assert shrink["lost_experts"] == [] and shrink["restored_from"] is None
+    degraded, expanded = srv.placements[-2:]
+    assert degraded.dead_ranks() == tuple(dead_pod_ranks)
+    assert PL.lost_experts(degraded, degraded.alive_ranks()) == ()
+    PL.validate_floor(degraded, 2, POD_DOMAINS)
+    PL.validate_floor(expanded, 2, POD_DOMAINS)
+
+    healthy = _steady(itls, 1, KILL)
+    degraded_itl = _steady(itls, shrink["step"] + 1, expand["step"] + 1)
+    post = _steady(itls, expand["step"] + 1, STEPS)
+    return [dict(
+        scenario=f"pod{DEAD_POD}_kill",
+        killed_ranks=dead_pod_ranks,
+        coalesced_deaths=len(dead_pod_ranks),
+        transitions=len(srv.recoveries),
+        checkpoint_restores=srv._ckpt_restores,
+        shrink_ms=round(shrink["latency_s"] * 1e3, 1),
+        expand_ms=round(expand["latency_s"] * 1e3, 1),
+        healthy_itl_ms=round(healthy * 1e3, 2),
+        degraded_itl_ms=round(degraded_itl * 1e3, 2),
+        post_rejoin_itl_ms=round(post * 1e3, 2),
+        degraded_over_healthy=round(degraded_itl / healthy, 3),
+        degraded_steps=srv._degraded_steps,
+        token_parity=True)]
 
 
 def main():
@@ -114,14 +181,34 @@ def main():
           f"rejoin @ {REJOIN} (8 ranks, R=E replication, {STEPS} steps)")
     print("  degraded/healthy ITL tracked, not asserted (host noise); "
           "token parity + zero-slot degraded placement ASSERTED above")
+
+    pod_rows = _pod_kill_rows()
+    table(pod_rows, ["scenario", "coalesced_deaths", "transitions",
+                     "checkpoint_restores", "shrink_ms", "expand_ms",
+                     "healthy_itl_ms", "degraded_itl_ms",
+                     "post_rejoin_itl_ms", "degraded_over_healthy",
+                     "degraded_steps", "token_parity"],
+          f"Correlated whole-pod kill: pod {DEAD_POD} "
+          f"(ranks {list(POD_DOMAINS.ranks_in(DEAD_POD))}) @ step {KILL}, "
+          f"rejoin @ {REJOIN} (min_replicas=2 floor, 2 pods of 4)")
+    print("  4 deaths coalesce into ONE shrink; bitwise token parity + "
+          "ZERO checkpoint restores ASSERTED above")
+
     write_result("fault", dict(
         config=dict(ranks=8, steps=STEPS, kill_step=KILL,
                     rejoin_step=REJOIN, dead_rank=DEAD_RANK,
                     replication="R=E (every expert on 2 ranks)",
                     baseline_itl_ms=round(_steady(itls_ref, 1, STEPS) * 1e3,
                                           2)),
-        rows=rows))
-    return rows
+        rows=rows,
+        pod_kill=dict(
+            config=dict(ranks=8, steps=STEPS, kill_step=KILL,
+                        rejoin_step=REJOIN, dead_pod=DEAD_POD,
+                        domains=POD_DOMAINS.describe(), min_replicas=2,
+                        replication="floor placement, R=E, one replica "
+                                    "per pod per expert"),
+            rows=pod_rows)))
+    return rows + pod_rows
 
 
 if __name__ == "__main__":

@@ -68,6 +68,12 @@ class EpGroupConfig:
     # without a table is an error (the table defines where replicas live).
     placement: "object | None" = None         # EpPlacement | None
     num_redundant_experts: int = 0
+    # Fault domains (core/placement.py FaultDomains, docs/DESIGN.md §9):
+    # rank -> correlated-failure unit for the replica-placement floor. None
+    # derives from the HT hierarchy when one exists (pod = rank //
+    # inner_size) and falls back to the flat rank-per-domain map — see
+    # EpGroup.fault_domains().
+    fault_domains: "object | None" = None     # FaultDomains | None
     slot_align: int = 8                       # capacity rounding (TPU lane-friendly)
 
     LL_BATCH_THRESHOLD = 128  # paper: LL targets 1–128 tokens/rank
@@ -123,6 +129,20 @@ class EpGroup:
     def physical_experts(self) -> int:
         """Total physical expert slots (= num_experts + redundant replicas)."""
         return self.ep_size * self.local_experts
+
+    def fault_domains(self):
+        """The group's correlated-failure topology (docs/DESIGN.md §9):
+        the explicit ``cfg.fault_domains`` override when set; else derived
+        from the HT hierarchy — ranks sharing an NVLink pod fail together,
+        and the pod is ``rank // inner_size`` (the same arithmetic the
+        hierarchical plan uses, `core/plan.py rank_pod`); else the flat
+        rank-per-domain map (every rank its own failure unit)."""
+        from repro.core.placement import domains_from_geometry, trivial_domains
+        if self.cfg.fault_domains is not None:
+            return self.cfg.fault_domains
+        if self.outer_size > 1:
+            return domains_from_geometry(self.ep_size, self.inner_size)
+        return trivial_domains(self.ep_size)
 
     def ht_chunks(self, num_tokens: int) -> int:
         """Static chunk count for a ``num_tokens``-token hierarchical handle
@@ -202,6 +222,10 @@ def ep_create_group(
             raise ValueError(f"num_experts={E} (+{R} redundant) must divide "
                              f"by ep_size={N}")
         L = E // N
+    if cfg.fault_domains is not None and cfg.fault_domains.num_ranks != N:
+        raise ValueError(
+            f"fault_domains cover {cfg.fault_domains.num_ranks} ranks, "
+            f"group has ep_size={N}")
     cf = cfg.capacity_factor
     al = cfg.slot_align
 

@@ -62,6 +62,78 @@ EXPERT_PARAM_KEYS = ("w_gate", "w_up", "w_down")
 EMPTY = -1
 
 
+# --------------------------------------------------------------------------
+# fault domains: the correlated-failure topology (docs/DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultDomains:
+    """Rank -> failure-domain map: ranks in one domain fail TOGETHER (a whole
+    NVLink pod losing power, a switch taking its rail down — UBEP's
+    correlated-failure model, PAPERS.md). Replica-placement constraints
+    (`rebalance(min_replicas=..., domains=...)`) and the shrink-feasibility
+    precheck (`shrink_feasibility`) treat the domain, not the rank, as the
+    unit of failure. Hashable (tuple) so it can ride in the static
+    ``EpGroupConfig``; the default derivation from the HT hierarchy is
+    ``EpGroup.fault_domains()`` (pod = rank // inner_size — the same
+    arithmetic the hierarchical plan uses, `core/plan.py rank_pod`)."""
+
+    domain_of: tuple[int, ...]      # [num_ranks] rank -> domain id
+
+    def __post_init__(self):
+        if not self.domain_of:
+            raise ValueError("fault-domain map must be non-empty")
+        if any(d < 0 for d in self.domain_of):
+            raise ValueError(f"domain ids must be >= 0, got {self.domain_of}")
+
+    @property
+    def num_ranks(self) -> int:
+        return len(self.domain_of)
+
+    @property
+    def num_domains(self) -> int:
+        return len(set(self.domain_of))
+
+    def domains(self) -> tuple[int, ...]:
+        return tuple(sorted(set(self.domain_of)))
+
+    def ranks_in(self, domain: int) -> tuple[int, ...]:
+        return tuple(r for r, d in enumerate(self.domain_of) if d == domain)
+
+    def live_domains(self, alive_ranks) -> tuple[int, ...]:
+        """Domains with at least one alive rank."""
+        alive = set(alive_ranks)
+        return tuple(sorted({d for r, d in enumerate(self.domain_of)
+                             if r in alive}))
+
+    def describe(self) -> str:
+        """Compact rendering for error messages: ``{domain: [ranks]}``."""
+        return "{" + ", ".join(f"{d}: {list(self.ranks_in(d))}"
+                               for d in self.domains()) + "}"
+
+
+def trivial_domains(num_ranks: int) -> FaultDomains:
+    """Every rank its own domain — the flat (non-hierarchical) topology,
+    where the only correlated-failure unit is the single rank. Under this
+    map "distinct domains" and "distinct ranks" coincide, so the floor
+    degenerates to exactly the rank-level constraint."""
+    if num_ranks < 1:
+        raise ValueError(f"num_ranks={num_ranks} must be >= 1")
+    return FaultDomains(tuple(range(num_ranks)))
+
+
+def domains_from_geometry(ep_size: int, inner_size: int) -> FaultDomains:
+    """The HT hierarchy's natural fault boundary: pod = rank // inner_size
+    (must agree with `core/plan.py rank_pod`, pinned by
+    tests/test_fault_domains.py)."""
+    if inner_size < 1 or ep_size % inner_size:
+        raise ValueError(f"inner_size={inner_size} must divide "
+                         f"ep_size={ep_size}")
+    from repro.core.plan import rank_pod
+    return FaultDomains(tuple(rank_pod(r, inner_size)
+                              for r in range(ep_size)))
+
+
 @dataclasses.dataclass(frozen=True)
 class EpPlacement:
     """Physical expert layout: ``slot_expert[r][s]`` is the logical expert
@@ -304,68 +376,277 @@ def imbalance(loads) -> float:
 
 
 # --------------------------------------------------------------------------
-# rebalancer: heat -> placement
+# rebalancer: heat -> placement (optionally fault-domain constrained)
 # --------------------------------------------------------------------------
+
+def _floor_ctx(E: int, num_redundant: int, num_ranks: int, alive,
+               domains: FaultDomains | None, min_replicas: int) -> str:
+    """The E/R/N/domains tail every floor error message carries."""
+    return (f"[E={E} experts, R={num_redundant} redundant slots, "
+            f"N={len(alive)} alive of {num_ranks} ranks, "
+            f"min_replicas={min_replicas}, domains="
+            f"{domains.describe() if domains is not None else None}]")
+
+
+def _warn_degraded(msg: str):
+    """Loud DegradedRecovery-class warning without a core->runtime import
+    cycle (runtime/fault.py imports nothing from here either way, but the
+    category is defined there — the serving layer owns the recovery
+    vocabulary)."""
+    import warnings
+
+    from repro.runtime.fault import DegradedRecovery
+    warnings.warn(DegradedRecovery(msg), stacklevel=3)
+
+
+def required_domain_span(E: int, min_replicas: int, alive,
+                         domains: FaultDomains | None,
+                         domain_caps: dict | None = None, *,
+                         warn: bool = False) -> int:
+    """How many DISTINCT fault domains each expert's replicas must span.
+
+    The target is ``min(min_replicas, live domain count)`` — "distinct
+    domains when domains permit" (ISSUE/DESIGN §9). Domains stop permitting
+    when capacity does: each expert claims one slot in each of ``span``
+    domains and a domain can serve at most ``min(cap_D, E)`` such claims, so
+    the span is lowered (never below 1) until
+    ``sum_D min(cap_D, E) >= E * span`` holds. ``domain_caps`` maps live
+    domain -> slot capacity; with ``warn=True`` a capacity-forced lowering
+    emits a loud DegradedRecovery-class warning (uneven pods weaken the
+    correlated-failure guarantee and that must never be silent)."""
+    if domains is None or min_replicas <= 1:
+        return 1
+    live = domains.live_domains(alive)
+    target = min(min_replicas, len(live))
+    if target <= 1:
+        return 1
+    caps = [domain_caps[d] for d in live] if domain_caps is not None else None
+    span = target
+    if caps is not None:
+        while span > 1 and sum(min(c, E) for c in caps) < E * span:
+            span -= 1
+    if span < target and warn:
+        _warn_degraded(
+            f"fault domains too uneven to give every expert {target} "
+            f"distinct domains (per-domain slot capacities "
+            f"{dict(zip(live, caps))}, E={E}) — enforcing span {span}; "
+            "a whole-domain failure may lose some experts' last replica")
+    return span
+
 
 def rebalance(heat, num_ranks: int, *, num_redundant: int = 0,
               version: int = 1,
-              alive_ranks: tuple[int, ...] | None = None) -> EpPlacement:
+              alive_ranks: tuple[int, ...] | None = None,
+              min_replicas: int = 1,
+              domains: FaultDomains | None = None,
+              max_slots_per_rank: int | None = None,
+              check_shrink: bool | None = None) -> EpPlacement:
     """Greedy placement minimizing the max per-rank load.
 
-    1. Replica counts: every expert gets one slot; each of the
-       ``num_redundant`` extra slots goes to the expert with the current
-       highest per-replica load (heat / replicas) — DeepSeek-EPLB-style
-       redundancy for the hottest experts.
+    1. Replica counts: every expert gets ``min_replicas`` slots (the
+       min-replica floor); each remaining redundant slot goes to the expert
+       with the current highest per-replica load (heat / replicas) —
+       DeepSeek-EPLB-style redundancy for the hottest experts. Under the
+       floor, replica counts are capped at the alive-rank count (a replica
+       beyond that could only co-host).
     2. Packing: replicas sorted by descending per-replica load are LPT-packed
-       onto ranks (least-loaded rank with a free slot wins; replicas of one
-       expert prefer distinct ranks, since the source-rank round-robin only
-       splits load across *ranks*). Fully deterministic: ties break by
-       expert id then rank id.
+       onto ranks (least-loaded rank with a free slot wins). Replicas of one
+       expert land on distinct ranks — a hard constraint under the floor
+       (``min_replicas > 1``; an impossible table raises loudly), a
+       preference in legacy floor-less mode where a FORCED co-hosting now
+       emits a loud DegradedRecovery-class warning (co-hosted replicas are
+       dead weight for both load-splitting and fault tolerance). Fully
+       deterministic: ties break by expert id then rank id.
 
     ``alive_ranks`` (elastic EP, docs/DESIGN.md §9): pack onto that subset
     only — the table still spans ``num_ranks`` rows (the group's static
     geometry is unchanged) but every dead rank's row is all ``EMPTY``, so
     plan-time assignment routes it zero traffic. ``num_experts +
     num_redundant`` must then divide by the survivor count
-    (``shrink_placement`` auto-fits the redundancy budget)."""
+    (``shrink_placement`` auto-fits the redundancy budget).
+
+    Fault domains (docs/DESIGN.md §9): with ``domains`` and a floor, each
+    expert's first ``required_domain_span(...)`` replicas are forced into
+    DISTINCT fault domains — a whole-domain (pod) failure then leaves every
+    expert a surviving replica, so recovery is the zero-data-loss masked
+    rebind, never a checkpoint restore. Extra replicas prefer fresh domains.
+    Infeasible floors (too few redundant slots / alive ranks / domain
+    capacity) raise loudly, naming E/R/N/domains.
+
+    Shrink-feasibility precheck: under a floor (default) the produced table
+    is validated with ``assert_shrink_feasible`` BEFORE being returned — a
+    subsequent whole-domain failure must leave a survivor set onto which the
+    shrink can re-pack without violating the floor or over-packing past
+    ``max_slots_per_rank``. Adoption-time is where infeasibility surfaces,
+    never mid-recovery. ``check_shrink=False`` opts out (the degraded
+    re-pack after an actual death keeps the floor checks but skips the
+    what-if)."""
     h = np.asarray(heat, np.float64)
     E = h.size
     P = E + num_redundant
     if num_redundant < 0:
         raise ValueError(f"num_redundant={num_redundant} must be >= 0")
+    if min_replicas < 1:
+        raise ValueError(f"min_replicas={min_replicas} must be >= 1")
     alive = (tuple(range(num_ranks)) if alive_ranks is None
              else tuple(sorted(set(alive_ranks))))
     if not alive or any(not 0 <= r < num_ranks for r in alive):
         raise ValueError(f"alive_ranks={alive_ranks} must be a non-empty "
                          f"subset of range({num_ranks})")
+    if domains is not None and domains.num_ranks != num_ranks:
+        raise ValueError(f"domains cover {domains.num_ranks} ranks, "
+                         f"rebalance spans num_ranks={num_ranks}")
+    m = min_replicas
+    ctx = _floor_ctx(E, num_redundant, num_ranks, alive, domains, m)
+    if m > 1:
+        if len(alive) < m:
+            raise ValueError(
+                f"min_replicas={m} floor infeasible: needs {m} distinct "
+                f"ranks per expert but only {len(alive)} are alive {ctx}")
+        if num_redundant < E * (m - 1):
+            raise ValueError(
+                f"min_replicas={m} floor infeasible: needs num_redundant >= "
+                f"E*(min_replicas-1) = {E * (m - 1)}, got {num_redundant} "
+                f"{ctx}")
     if P % len(alive):
         raise ValueError(
             f"num_experts+num_redundant={P} must divide by the "
             f"{'alive rank count' if alive_ranks is not None else 'rank count'}"
             f"={len(alive)}")
     S = P // len(alive)
-    rc = np.ones(E, np.int64)
-    for _ in range(num_redundant):
-        e = int(np.argmax(h / rc))           # argmax: first index on ties
+    if m > 1:
+        if S > E:
+            raise ValueError(
+                f"min_replicas={m} floor infeasible: {S} slots per alive "
+                f"rank exceed the {E} experts — some rank would have to "
+                f"co-host replicas of one expert {ctx}")
+
+    # ---- replica counts: floor first, extras to the hottest ----
+    rc = np.full(E, m, np.int64)
+    for _ in range(num_redundant - E * (m - 1)):
+        per = h / rc
+        if m > 1:                            # hard floor: no co-hosting ever
+            per = np.where(rc >= len(alive), -np.inf, per)
+        e = int(np.argmax(per))              # argmax: first index on ties
         rc[e] += 1
+
+    # ---- domain spread target + per-domain capacities ----
+    dom_caps = None
+    if domains is not None:
+        dom_caps = {d: S * len([r for r in alive
+                                if domains.domain_of[r] == d])
+                    for d in domains.live_domains(alive)}
+    span_req = required_domain_span(E, m, alive, domains, dom_caps, warn=True)
+
+    # ---- LPT packing under the constraints ----
     items = sorted(
         ((h[e] / rc[e], e) for e in range(E) for _ in range(rc[e])),
         key=lambda t: (-t[0], t[1]))
     loads = np.zeros(num_ranks, np.float64)
     rows: dict[int, list[int]] = {r: [] for r in alive}
     hosted: dict[int, set[int]] = {r: set() for r in alive}
-    for load, e in items:
-        cand = [r for r in alive
-                if len(rows[r]) < S and e not in hosted[r]]
-        if not cand:                          # forced: co-host a replica
-            cand = [r for r in alive if len(rows[r]) < S]
-        r = min(cand, key=lambda r: (loads[r], r))
+    placed = np.zeros(E, np.int64)
+    doms_used: dict[int, set[int]] = {e: set() for e in range(E)}
+
+    def _place(e, r, load):
         rows[r].append(e)
         hosted[r].add(e)
         loads[r] += load
-    return EpPlacement(E, tuple(
+        placed[e] += 1
+        if domains is not None:
+            doms_used[e].add(domains.domain_of[r])
+
+    def _repair(e, want_fresh_domain: bool):
+        """Free a slot on a constraint-satisfying rank by relocating one
+        already-placed replica (deterministic search; returns the freed
+        rank or None). Only reached under the floor when greedy order
+        painted itself into a corner — the relocated replica keeps its own
+        rank-distinctness and domain span."""
+        targets = [r for r in alive if e not in hosted[r]]
+        if want_fresh_domain:
+            targets = [r for r in targets
+                       if domains.domain_of[r] not in doms_used[e]]
+        for r_t in sorted(targets, key=lambda r: (loads[r], r)):
+            for e2 in list(rows[r_t]):
+                for r_o in sorted(alive, key=lambda r: (loads[r], r)):
+                    if (r_o == r_t or len(rows[r_o]) >= S
+                            or e2 in hosted[r_o]):
+                        continue
+                    if domains is not None:
+                        new_doms = {domains.domain_of[r] for r in alive
+                                    if e2 in hosted[r] and r != r_t}
+                        new_doms.add(domains.domain_of[r_o])
+                        need2 = min(span_req, int(placed[e2]))
+                        if len(new_doms) < need2:
+                            continue
+                    # move e2: r_t -> r_o (its load share moves with it)
+                    l2 = h[e2] / rc[e2]
+                    rows[r_t].remove(e2)
+                    hosted[r_t].discard(e2)
+                    loads[r_t] -= l2
+                    rows[r_o].append(e2)
+                    hosted[r_o].add(e2)
+                    loads[r_o] += l2
+                    if domains is not None:
+                        doms_used[e2] = {domains.domain_of[r] for r in alive
+                                         if e2 in hosted[r]}
+                    return r_t
+        return None
+
+    for load, e in items:
+        cand = [r for r in alive
+                if len(rows[r]) < S and e not in hosted[r]]
+        want_fresh = (domains is not None and m > 1
+                      and placed[e] < span_req
+                      and len(doms_used[e]) < span_req)
+        if want_fresh:
+            fresh = [r for r in cand
+                     if domains.domain_of[r] not in doms_used[e]]
+            if not fresh:
+                freed = _repair(e, want_fresh_domain=True)
+                if freed is None:
+                    raise ValueError(
+                        f"min_replicas={m} floor infeasible: expert {e} "
+                        f"cannot reach {span_req} distinct fault domains "
+                        f"{ctx}")
+                fresh = [freed]
+            cand = fresh
+        elif domains is not None and cand:
+            pref = [r for r in cand
+                    if domains.domain_of[r] not in doms_used[e]]
+            if pref:                         # soft: spread extras too
+                cand = pref
+        if not cand:
+            if m > 1:                        # hard error under the floor
+                freed = _repair(e, want_fresh_domain=False)
+                if freed is None:
+                    raise ValueError(
+                        f"min_replicas={m} floor infeasible: no rank can "
+                        f"host a distinct replica of expert {e} {ctx}")
+                cand = [freed]
+            else:                            # legacy: forced co-host, LOUD
+                cand = [r for r in alive if len(rows[r]) < S]
+                _warn_degraded(
+                    f"rebalance forced to collocate replicas of expert {e} "
+                    f"on one rank (every alive rank with free slots already "
+                    f"hosts it) — the co-hosted replica splits no load and "
+                    f"survives no rank death {ctx}")
+        r = min(cand, key=lambda r: (loads[r], r))
+        _place(e, r, load)
+    pl = EpPlacement(E, tuple(
         tuple(rows[r]) if r in rows else (EMPTY,) * S
         for r in range(num_ranks)), version=version)
+    if m > 1:
+        validate_floor(pl, m, domains)       # bug guard: never emit a
+        #                                      floor-violating table
+        if check_shrink is None:
+            check_shrink = True
+        if check_shrink:
+            assert_shrink_feasible(
+                E, num_redundant, num_ranks, alive_ranks=alive,
+                domains=domains, min_replicas=m,
+                max_slots_per_rank=max_slots_per_rank, placement=pl)
+    return pl
 
 
 def redundant_placement(num_experts: int, num_ranks: int, num_redundant: int,
@@ -381,18 +662,158 @@ def redundant_placement(num_experts: int, num_ranks: int, num_redundant: int,
 # elastic EP: degraded placements around dead ranks (docs/DESIGN.md §9)
 # --------------------------------------------------------------------------
 
-def fit_redundant(num_experts: int, num_redundant: int, n_alive: int) -> int:
+def fit_redundant(num_experts: int, num_redundant: int, n_alive: int, *,
+                  min_replicas: int = 1) -> int:
     """Largest redundancy budget <= ``num_redundant`` whose total slot count
     divides by the survivor count — or, when none exists (e.g. E=8 on 7
     survivors with R=0), the smallest larger one. Keeps shrink/expand from
-    failing on divisibility when the rank count changes under a fixed R."""
-    for r in range(num_redundant, -1, -1):
+    failing on divisibility when the rank count changes under a fixed R.
+
+    ``min_replicas`` imposes the replica floor on the budget itself: the
+    result never drops below ``E * (min_replicas - 1)`` (each expert's floor
+    replicas beyond the first consume one redundant slot), so a refit after
+    rank death cannot silently fit a budget the floor can't live in —
+    e.g. ``fit_redundant(8, 8, 7, min_replicas=2)`` is 13, not 6."""
+    floor = num_experts * (max(min_replicas, 1) - 1)
+    for r in range(num_redundant, floor - 1, -1):
         if (num_experts + r) % n_alive == 0:
             return r
-    r = num_redundant + 1
+    r = max(num_redundant + 1, floor)
     while (num_experts + r) % n_alive:
         r += 1
     return r
+
+
+def validate_floor(placement: EpPlacement, min_replicas: int,
+                   domains: FaultDomains | None = None, *,
+                   where: str = "placement") -> None:
+    """Assert the min-replica floor on a CONCRETE table: every expert has
+    >= ``min_replicas`` replicas, each on a distinct alive rank, spanning
+    >= ``required_domain_span(...)`` distinct fault domains. Raises
+    ``ValueError`` naming the first offending expert — the safety net behind
+    ``rebalance``'s constructive guarantees and the adoption-time check in
+    the serving layer."""
+    if min_replicas <= 1 and domains is None:
+        return
+    E = placement.num_experts
+    alive = placement.alive_ranks()
+    span_req = 1
+    if domains is not None:
+        if domains.num_ranks != placement.num_ranks:
+            raise ValueError(
+                f"domains cover {domains.num_ranks} ranks, {where} spans "
+                f"{placement.num_ranks}")
+        S = placement.slots_per_rank
+        caps = {d: S * len([r for r in alive
+                            if domains.domain_of[r] == d])
+                for d in domains.live_domains(alive)}
+        span_req = required_domain_span(E, min_replicas, alive, domains, caps)
+    hosts: dict[int, list[int]] = {e: [] for e in range(E)}
+    for r, row in enumerate(placement.slot_expert):
+        for e in row:
+            if e != EMPTY:
+                hosts[e].append(r)
+    for e in range(E):
+        rs = hosts[e]
+        if len(set(rs)) < len(rs):
+            dup = sorted({r for r in rs if rs.count(r) > 1})
+            raise ValueError(
+                f"{where} violates the min-replica floor: expert {e} has "
+                f"co-hosted replicas on rank(s) {dup} — collocated replicas "
+                "split no load and survive no rank death")
+        if len(rs) < min_replicas:
+            raise ValueError(
+                f"{where} violates the min-replica floor: expert {e} has "
+                f"{len(rs)} replica(s) on ranks {sorted(rs)}, needs "
+                f">= {min_replicas}")
+        if domains is not None:
+            span = len({domains.domain_of[r] for r in rs})
+            if span < span_req:
+                raise ValueError(
+                    f"{where} violates the fault-domain floor: expert {e}'s "
+                    f"replicas on ranks {sorted(rs)} span {span} domain(s) "
+                    f"of required {span_req} (domains {domains.describe()})")
+
+
+def shrink_feasibility(num_experts: int, num_redundant: int, num_ranks: int,
+                       *, alive_ranks=None,
+                       domains: FaultDomains | None = None,
+                       min_replicas: int = 1,
+                       max_slots_per_rank: int | None = None,
+                       placement: EpPlacement | None = None) -> list[str]:
+    """What-if every single correlated failure, BEFORE adopting a placement:
+    for each failure unit (a live fault domain, or each alive rank when
+    ``domains`` is None), would the shrink onto the survivors still work?
+    Returns a list of human-readable infeasibility reasons (empty = all
+    scenarios recoverable). A scenario is feasible when
+
+    - the concrete ``placement`` (if given) keeps a surviving replica of
+      every expert (``lost_experts`` empty) — zero-data-loss masked rebind;
+    - the refitted budget ``fit_redundant(E, R, n_surv,
+      min_replicas=min(m, n_surv))`` packs at <= ``num_experts`` slots per
+      survivor (pigeonhole: no forced co-hosting) and at
+      <= ``max_slots_per_rank`` when a headroom cap is set.
+
+    Scenarios that kill EVERY alive rank are skipped — nothing recovers
+    from losing the whole deployment, and requiring it would make every
+    single-domain topology infeasible by definition."""
+    alive = (tuple(range(num_ranks)) if alive_ranks is None
+             else tuple(sorted(set(alive_ranks))))
+    units: list[tuple[str, tuple[int, ...]]] = (
+        [(f"domain {d}", tuple(r for r in domains.ranks_in(d) if r in alive))
+         for d in domains.live_domains(alive)]
+        if domains is not None else
+        [(f"rank {r}", (r,)) for r in alive])
+    problems: list[str] = []
+    ctx = _floor_ctx(num_experts, num_redundant, num_ranks, alive, domains,
+                     min_replicas)
+    for name, killed in units:
+        survivors = tuple(r for r in alive if r not in set(killed))
+        if not survivors:
+            continue                         # total loss: out of scope
+        if placement is not None:
+            lost = lost_experts(placement, survivors)
+            if lost:
+                problems.append(
+                    f"killing {name} (ranks {list(killed)}) loses every "
+                    f"replica of experts {list(lost)[:8]} — shrink would "
+                    f"need a checkpoint restore {ctx}")
+                continue
+        m_eff = min(min_replicas, len(survivors))
+        R2 = fit_redundant(num_experts, num_redundant, len(survivors),
+                           min_replicas=m_eff)
+        S2 = (num_experts + R2) // len(survivors)
+        if S2 > num_experts:
+            problems.append(
+                f"killing {name} (ranks {list(killed)}) over-packs the "
+                f"{len(survivors)} survivor(s): {S2} slots per rank exceed "
+                f"the {num_experts} experts {ctx}")
+        elif max_slots_per_rank is not None and S2 > max_slots_per_rank:
+            problems.append(
+                f"killing {name} (ranks {list(killed)}) over-packs the "
+                f"{len(survivors)} survivor(s): {S2} slots per rank exceed "
+                f"the max_slots_per_rank={max_slots_per_rank} headroom cap "
+                f"{ctx}")
+    return problems
+
+
+def assert_shrink_feasible(num_experts: int, num_redundant: int,
+                           num_ranks: int, *, alive_ranks=None,
+                           domains: FaultDomains | None = None,
+                           min_replicas: int = 1,
+                           max_slots_per_rank: int | None = None,
+                           placement: EpPlacement | None = None) -> None:
+    """Raise ``ValueError`` listing every infeasible correlated-failure
+    scenario found by ``shrink_feasibility`` — the adoption-time gate:
+    infeasibility surfaces when a placement is BUILT, never mid-recovery."""
+    problems = shrink_feasibility(
+        num_experts, num_redundant, num_ranks, alive_ranks=alive_ranks,
+        domains=domains, min_replicas=min_replicas,
+        max_slots_per_rank=max_slots_per_rank, placement=placement)
+    if problems:
+        raise ValueError(
+            "placement fails the shrink-feasibility precheck:\n  - "
+            + "\n  - ".join(problems))
 
 
 def lost_experts(placement: EpPlacement | None,
@@ -436,35 +857,71 @@ def mask_placement(placement: EpPlacement,
     return dataclasses.replace(placement, slot_expert=tbl)
 
 
+def _floor_kwargs(min_replicas: int, domains: FaultDomains | None,
+                  max_slots_per_rank: int | None, *,
+                  check_shrink: bool | None = None) -> dict:
+    """The kwargs the elastic paths forward to ``rebalance`` — EMPTY unless
+    floor mode is active (``min_replicas > 1`` or explicit ``domains``), so
+    a legacy custom ``rebalance_fn`` that predates the floor keeps working
+    and legacy placements stay bit-identical."""
+    if min_replicas <= 1 and domains is None:
+        return {}
+    kw: dict = dict(min_replicas=min_replicas, domains=domains,
+                    max_slots_per_rank=max_slots_per_rank)
+    if check_shrink is not None:
+        kw["check_shrink"] = check_shrink
+    return kw
+
+
 def shrink_placement(heat, num_ranks: int, dead_ranks, *,
                      num_redundant: int = 0, version: int = 1,
-                     rebalance_fn=None) -> EpPlacement:
+                     rebalance_fn=None, min_replicas: int = 1,
+                     domains: FaultDomains | None = None,
+                     max_slots_per_rank: int | None = None) -> EpPlacement:
     """Degraded placement after rank death: every expert packed onto the
     survivors (dead rows all ``EMPTY`` — zero slots, zero traffic), the
     redundancy budget auto-fitted to the survivor count. Heat-driven like
-    any rebalance, so the degraded table is still load-balanced."""
+    any rebalance, so the degraded table is still load-balanced.
+
+    Under the min-replica floor the budget refit keeps the floor's share
+    (``fit_redundant(..., min_replicas=...)``, the floor itself relaxing to
+    the survivor count when fewer ranks than ``min_replicas`` remain) and
+    the repack enforces distinct ranks/domains — but the degraded table
+    skips the what-if shrink precheck: the HEALTHY placement's
+    adoption-time precheck already guaranteed this shrink works, and
+    demanding the degraded table survive a FURTHER correlated failure
+    would turn every recovery into a double-failure requirement."""
     dead = set(dead_ranks)
     alive = tuple(r for r in range(num_ranks) if r not in dead)
     if not alive:
         raise ValueError(f"all {num_ranks} ranks dead — nothing to shrink onto")
     E = np.asarray(heat).size
-    R = fit_redundant(E, num_redundant, len(alive))
+    m_eff = min(min_replicas, len(alive))
+    R = fit_redundant(E, num_redundant, len(alive), min_replicas=m_eff)
     fn = rebalance_fn or rebalance
     return fn(heat, num_ranks, num_redundant=R, version=version,
-              alive_ranks=alive)
+              alive_ranks=alive,
+              **_floor_kwargs(m_eff, domains, max_slots_per_rank,
+                              check_shrink=False))
 
 
 def expand_placement(heat, num_ranks: int, *, num_redundant: int = 0,
-                     version: int = 1, rebalance_fn=None) -> EpPlacement:
+                     version: int = 1, rebalance_fn=None,
+                     min_replicas: int = 1,
+                     domains: FaultDomains | None = None,
+                     max_slots_per_rank: int | None = None) -> EpPlacement:
     """The symmetric rejoin path: a full-width rebalance over all ranks
     again (redundancy budget refitted in case the caller's R only fit the
     degraded geometry). The rejoined rank's slots are filled by replica
     expansion at adoption — replicas duplicate live weights, so re-expand
-    is always zero-data-loss."""
+    is always zero-data-loss. Floor mode re-runs the full shrink-
+    feasibility precheck: a full-width table must again survive any single
+    correlated failure."""
     E = np.asarray(heat).size
-    R = fit_redundant(E, num_redundant, num_ranks)
+    R = fit_redundant(E, num_redundant, num_ranks, min_replicas=min_replicas)
     fn = rebalance_fn or rebalance
-    return fn(heat, num_ranks, num_redundant=R, version=version)
+    return fn(heat, num_ranks, num_redundant=R, version=version,
+              **_floor_kwargs(min_replicas, domains, max_slots_per_rank))
 
 
 class RebalanceScheduler:
@@ -481,11 +938,27 @@ class RebalanceScheduler:
     ``EMPTY``, redundancy refitted to the survivor count); restoring the
     full set flips it back to full-width tables (the rejoin/expand path).
     A custom ``rebalance_fn`` must accept ``alive_ranks=`` to be used with
-    a narrowed alive set."""
+    a narrowed alive set (and the floor kwargs when ``min_replicas``/
+    ``domains`` are set — floor kwargs are only forwarded in floor mode,
+    so legacy custom fns keep working floor-less).
+
+    Fault-domain floor (docs/DESIGN.md §9): with ``min_replicas > 1``
+    and/or ``domains``, every emitted FULL-WIDTH placement enforces the
+    floor and passes the shrink-feasibility precheck before it leaves the
+    scheduler; degraded placements enforce the (survivor-relaxed) floor
+    but skip the what-if precheck."""
 
     def __init__(self, num_experts: int, num_ranks: int, *,
                  num_redundant: int = 0, decay: float = 0.0,
-                 rebalance_fn=None, initial: EpPlacement | None = None):
+                 rebalance_fn=None, initial: EpPlacement | None = None,
+                 min_replicas: int = 1,
+                 domains: FaultDomains | None = None,
+                 max_slots_per_rank: int | None = None):
+        if min_replicas < 1:
+            raise ValueError(f"min_replicas={min_replicas} must be >= 1")
+        if domains is not None and domains.num_ranks != num_ranks:
+            raise ValueError(f"domains cover {domains.num_ranks} ranks, "
+                             f"scheduler spans num_ranks={num_ranks}")
         self.tracker = HeatTracker(num_experts, decay=decay)
         self.num_ranks = num_ranks
         self.num_redundant = num_redundant
@@ -493,6 +966,9 @@ class RebalanceScheduler:
         self.placement = initial
         self.alive: tuple[int, ...] = tuple(range(num_ranks))
         self._version = 0
+        self.min_replicas = min_replicas
+        self.domains = domains
+        self.max_slots_per_rank = max_slots_per_rank
 
     def observe(self, heat):
         self.tracker.update(np.asarray(heat, np.float64))
@@ -510,12 +986,19 @@ class RebalanceScheduler:
             dead = [r for r in range(self.num_ranks) if r not in self.alive]
             new = shrink_placement(self.tracker.totals, self.num_ranks, dead,
                                    num_redundant=self.num_redundant,
-                                   version=v, rebalance_fn=self.rebalance_fn)
+                                   version=v, rebalance_fn=self.rebalance_fn,
+                                   min_replicas=self.min_replicas,
+                                   domains=self.domains,
+                                   max_slots_per_rank=self.max_slots_per_rank)
         else:
             R = fit_redundant(self.tracker.totals.size, self.num_redundant,
-                              self.num_ranks)
+                              self.num_ranks,
+                              min_replicas=self.min_replicas)
             new = self.rebalance_fn(self.tracker.totals, self.num_ranks,
-                                    num_redundant=R, version=v)
+                                    num_redundant=R, version=v,
+                                    **_floor_kwargs(self.min_replicas,
+                                                    self.domains,
+                                                    self.max_slots_per_rank))
         if (self.placement is not None
                 and new.slot_expert == self.placement.slot_expert):
             return self.placement            # unchanged table: reuse object
@@ -530,7 +1013,10 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
                     inner_size: int | None = None, decay: float = 0.0,
                     rebalance_fn=None, params=None,
                     expert_keys: tuple = EXPERT_PARAM_KEYS,
-                    donate_params: bool = True, fault_injector=None):
+                    donate_params: bool = True, fault_injector=None,
+                    min_replicas: int = 1,
+                    fault_domains: FaultDomains | None = None,
+                    max_slots_per_rank: int | None = None):
     """Shared skeleton of the host-level EPLB drivers (`runtime/decode.py`,
     `runtime/prefill.py`): run each item through a per-placement compiled
     fn, fold its heat, and advance the placement at every ``advance_every``
@@ -565,7 +1051,14 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
     surviving replicas); an expert whose every replica died makes
     zero-data-loss impossible, so the driver warns ``DegradedRecovery`` and
     raises — the serving layer (`runtime/server.py`) owns the
-    checkpoint-restore fallback."""
+    checkpoint-restore fallback.
+
+    Fault-domain floor (``min_replicas`` / ``fault_domains`` /
+    ``max_slots_per_rank``, docs/DESIGN.md §9): forwarded to the scheduler —
+    every adopted full-width placement then satisfies the floor and the
+    shrink-feasibility precheck, which is what makes the injector path
+    recover from ANY single correlated failure without hitting the
+    lost-experts raise above."""
     import dataclasses as _dc
 
     from repro.core.group import ep_create_group
@@ -574,7 +1067,9 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
         raise ValueError(f"rebalance_every={advance_every} must be >= 1")
     sched = RebalanceScheduler(
         base_cfg.num_experts, ep_size, num_redundant=num_redundant,
-        decay=decay, rebalance_fn=rebalance_fn, initial=base_cfg.placement)
+        decay=decay, rebalance_fn=rebalance_fn, initial=base_cfg.placement,
+        min_replicas=min_replicas, domains=fault_domains,
+        max_slots_per_rank=max_slots_per_rank)
     pl = base_cfg.placement
     fns: dict = {}
     outs, placements = [], []

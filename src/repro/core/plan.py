@@ -460,6 +460,16 @@ def _ht_flat_plan(group, topk_idx, topk_g, num_tokens) -> EpPlan:
 # HT hierarchical path (paper §V / Hybrid-EP two-tier scheme)
 # --------------------------------------------------------------------------
 
+def rank_pod(rank, inner_size: int):
+    """Pod (outer) coordinate of an EP rank in the HT hierarchy. THE
+    definition of which ranks share an NVLink pod — the hierarchical a2a
+    stages below and the fault-domain derivation
+    (`core/placement.domains_from_geometry`, docs/DESIGN.md §9) must agree
+    on it, so both route through this helper (pinned by
+    tests/test_fault_domains.py). Works elementwise on arrays."""
+    return rank // inner_size
+
+
 def _hier_geometry(group: EpGroup, topk_g: jax.Array):
     """Global stage-1 maps, computed identically on every chip."""
     L, Ni, No = group.local_experts, group.inner_size, group.outer_size
@@ -469,7 +479,7 @@ def _hier_geometry(group: EpGroup, topk_g: jax.Array):
     src = (jnp.arange(No, dtype=jnp.int32)[:, None] * Ni +
            jnp.arange(Ni, dtype=jnp.int32)[None, :])[:, :, None, None]
     r_dst, s_dst = dest_of(group, g, src)                   # placement-aware
-    o_dst, i_dst = r_dst // Ni, r_dst % Ni                  # [No, Ni, T, K]
+    o_dst, i_dst = rank_pod(r_dst, Ni), r_dst % Ni          # [No, Ni, T, K]
     # stage 1 (per source chip): dedup over destination inner coordinate.
     # Invalid entries (sentinel expert) have r_dst == N -> i_dst computed from
     # it could alias a real coordinate, so mask by dst validity explicitly.

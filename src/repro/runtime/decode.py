@@ -130,7 +130,9 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
                             decay: float = 0.0,
                             rebalance_fn=PL.rebalance, params=None,
                             expert_keys: tuple = PL.EXPERT_PARAM_KEYS,
-                            donate_params: bool = True, fault_injector=None):
+                            donate_params: bool = True, fault_injector=None,
+                            min_replicas: int = 1, fault_domains=None,
+                            max_slots_per_rank: int | None = None):
     """Host-level EPLB decode driver: placements swap BETWEEN steps, at
     window boundaries, through the same mode-agnostic staged surface the
     pipeline runs on.
@@ -166,7 +168,11 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
     step indices = WINDOW indices here) forces an immediate shrink to a
     degraded placement on an injected kill and a full-width re-expand on
     rejoin — the ``run_rebalancing`` fault path; see docs/DESIGN.md §9 for
-    the zero-data-loss rules."""
+    the zero-data-loss rules. ``min_replicas``/``fault_domains``/
+    ``max_slots_per_rank`` turn on the fault-domain floor: every adopted
+    placement keeps >= ``min_replicas`` replicas of every expert on
+    distinct ranks/domains and passes the shrink-feasibility precheck, so
+    any single correlated kill recovers via the zero-data-loss path."""
     if rebalance_every < 1:
         raise ValueError(f"rebalance_every={rebalance_every} must be >= 1")
     windows = [xs[s:s + rebalance_every]
@@ -175,5 +181,7 @@ def rebalancing_decode_loop(base_cfg: EpGroupConfig, make_window, xs,
         base_cfg, make_window, windows, advance_every=1, ep_size=ep_size,
         num_redundant=num_redundant, inner_size=inner_size, decay=decay,
         rebalance_fn=rebalance_fn, params=params, expert_keys=expert_keys,
-        donate_params=donate_params, fault_injector=fault_injector)
+        donate_params=donate_params, fault_injector=fault_injector,
+        min_replicas=min_replicas, fault_domains=fault_domains,
+        max_slots_per_rank=max_slots_per_rank)
     return [o for w in win_outs for o in w], placements

@@ -142,6 +142,21 @@ class FaultReport(NamedTuple):
     def __bool__(self):
         return bool(self.died or self.rejoined)
 
+    def merge(self, other: "FaultReport") -> "FaultReport":
+        """Coalesce a later report into this one: the combined report the
+        driver treats as ONE fault event, so back-to-back detections within
+        a single step boundary trigger one degraded-placement transition —
+        one fingerprint bump, one handle rebuild, one weight adoption —
+        instead of one per dead rank. A rank that died in one report and
+        rejoined in the other cancels out (net no-op for the boundary);
+        duplicates dedupe; order is normalized (sorted) since the merged
+        report describes a set of simultaneous events, not a sequence."""
+        died = (set(self.died) | set(other.died))
+        rejoined = (set(self.rejoined) | set(other.rejoined))
+        both = died & rejoined
+        return FaultReport(tuple(sorted(died - both)),
+                           tuple(sorted(rejoined - both)))
+
 
 class FaultDetector:
     """Heartbeat/step-timeout rank-death detector, polled at serving-step
@@ -220,10 +235,26 @@ class FaultInjector:
     heartbeats). Pure function of the schedule and the step sequence, so
     two runs over the same schedule produce identical event logs
     (``self.log``) — the determinism tests/benches rely on.
+
+    Correlated (whole-domain) failures: ``kill_domains``/``rejoin_domains``
+    schedule entire fault domains — ``{step: domain_id_or_ids}`` against the
+    ``domains`` topology (`core/placement.FaultDomains`) — and expand to
+    every rank in the domain dying/rejoining AT THE SAME step boundary (a
+    pod losing power is one event, not a sequence). Expanded events merge
+    with any per-rank schedule for the same step.
     """
 
-    def __init__(self, num_ranks: int, *, kill=None, rejoin=None):
+    def __init__(self, num_ranks: int, *, kill=None, rejoin=None,
+                 domains=None, kill_domains=None, rejoin_domains=None):
         self.num_ranks = num_ranks
+        self.domains = domains
+        if (kill_domains or rejoin_domains) and domains is None:
+            raise ValueError(
+                "kill_domains/rejoin_domains need the domains= topology "
+                "(core/placement.FaultDomains) to expand to ranks")
+        if domains is not None and domains.num_ranks != num_ranks:
+            raise ValueError(f"domains cover {domains.num_ranks} ranks, "
+                             f"injector spans num_ranks={num_ranks}")
 
         def norm(d):
             out = {}
@@ -236,8 +267,24 @@ class FaultInjector:
                 out[int(step)] = rs
             return out
 
-        self.kill = norm(kill)
-        self.rejoin = norm(rejoin)
+        def expand(dom_sched, rank_sched):
+            for step, ds in (dom_sched or {}).items():
+                ds = (ds,) if isinstance(ds, int) else tuple(ds)
+                ranks = []
+                for d in ds:
+                    rs = domains.ranks_in(d)
+                    if not rs:
+                        raise ValueError(
+                            f"domain {d} has no ranks in "
+                            f"{domains.describe()}")
+                    ranks.extend(rs)
+                step = int(step)
+                rank_sched[step] = tuple(dict.fromkeys(
+                    rank_sched.get(step, ()) + tuple(ranks)))
+            return rank_sched
+
+        self.kill = expand(kill_domains, norm(kill))
+        self.rejoin = expand(rejoin_domains, norm(rejoin))
         self._dead: set[int] = set()
         self.log: list[tuple[int, FaultReport]] = []
 

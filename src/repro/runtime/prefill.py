@@ -106,7 +106,9 @@ def rebalancing_prefill(base_cfg: EpGroupConfig, make_layer, batches,
                         decay: float = 0.0, rebalance_fn=PL.rebalance,
                         params=None,
                         expert_keys: tuple = PL.EXPERT_PARAM_KEYS,
-                        donate_params: bool = True):
+                        donate_params: bool = True,
+                        min_replicas: int = 1, fault_domains=None,
+                        max_slots_per_rank: int | None = None):
     """Prefill mirror of ``runtime/decode.py::rebalancing_decode_loop``:
     placements swap between *batches* (a prefill batch is the natural
     scheduling boundary — within one batch the micro-batched staged pipeline
@@ -122,9 +124,13 @@ def rebalancing_prefill(base_cfg: EpGroupConfig, make_layer, batches,
     contiguous). With ``params``, ``make_layer(group, params)`` receives
     expert leaves rebound once per adopted placement (adopt-once physical
     mode; the driver owns ``params`` unless ``donate_params=False`` — see
-    ``rebalancing_decode_loop``)."""
+    ``rebalancing_decode_loop``). ``min_replicas``/``fault_domains``/
+    ``max_slots_per_rank`` enable the fault-domain placement floor
+    (docs/DESIGN.md §9), same semantics as the decode driver."""
     return PL.run_rebalancing(
         base_cfg, make_layer, list(batches), advance_every=rebalance_every,
         ep_size=ep_size, num_redundant=num_redundant, inner_size=inner_size,
         decay=decay, rebalance_fn=rebalance_fn, params=params,
-        expert_keys=expert_keys, donate_params=donate_params)
+        expert_keys=expert_keys, donate_params=donate_params,
+        min_replicas=min_replicas, fault_domains=fault_domains,
+        max_slots_per_rank=max_slots_per_rank)

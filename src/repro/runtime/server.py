@@ -43,7 +43,13 @@ full-width placement at the next boundary; the placement-salted routing hash
 force-rebuilds handles exactly once per transition, after which the fast
 path resumes. The greedy token stream is placement-invariant, so surviving-
 rank decode tokens are bitwise-identical to an uninterrupted run
-(tests/test_elastic.py).
+(tests/test_elastic.py). With ``min_replicas >= 2`` (the fault-domain
+replica floor) the checkpoint fallback becomes unreachable for any single
+correlated failure — every adopted placement keeps that many replicas of
+every expert on distinct ranks and distinct fault domains (pods), and is
+shrink-feasibility-prechecked at adoption, so even a whole pod dying at
+one boundary recovers through the masked rebind with zero restores
+(``ServeMetrics.checkpoint_restores``, asserted in bench_fault).
 
 Preemption (``runtime/fault.py PreemptionGuard``): SIGTERM/SIGINT is polled
 at the same boundaries — the server drains in-flight steps, writes a
@@ -88,6 +94,9 @@ class ServeMetrics:
     recovery_count: int = 0                # shrink + expand transitions taken
     recovery_latency_s: float | None = None  # total wall time inside recovery
     recovery_events: list | None = None    # per-transition records (dicts)
+    checkpoint_restores: int = 0           # recoveries that needed a restore
+    #                                        (0 under a satisfied replica
+    #                                        floor — the bench asserts it)
     alive_ranks: list | None = None        # EP ranks alive at end of serve
     stragglers_flagged: int = 0            # watchdog outlier ITL steps
     preempted: bool = False                # SIGTERM drain-and-checkpoint exit
@@ -101,13 +110,27 @@ class DecodeServer:
                  params=None, seed=0, pipeline_depth: int = 1,
                  rebalance_every: int = 0, num_redundant_experts: int = 0,
                  fault_injector=None, fault_detector: FaultDetector | None = None,
-                 miss_threshold: int = 2, ckpt_dir: str | None = None):
+                 miss_threshold: int = 2, ckpt_dir: str | None = None,
+                 min_replicas: int = 1, fault_domains=None,
+                 max_slots_per_rank: int | None = None):
         self.cfg, self.mesh, self.batch = cfg, mesh, batch
         self.pipeline_depth = max(int(pipeline_depth), 1)
         # EPLB: swap expert placements every `rebalance_every` decode steps,
         # driven by the tracked heat (requires MoESpec.track_expert_heat)
         self.rebalance_every = int(rebalance_every)
         self.num_redundant_experts = int(num_redundant_experts)
+        # fault-domain replica floor (docs/DESIGN.md §9): every adopted
+        # placement keeps >= min_replicas replicas of every expert on
+        # distinct ranks (and distinct fault domains when the topology
+        # permits), so ANY single correlated failure — up to a whole pod —
+        # recovers through the zero-data-loss masked rebind, never a
+        # checkpoint restore. fault_domains=None derives pod boundaries
+        # from the EP mesh geometry (core/plan.py rank_pod arithmetic).
+        self.min_replicas = int(min_replicas)
+        if self.min_replicas < 1:
+            raise ValueError(f"min_replicas={min_replicas} must be >= 1")
+        self.max_slots_per_rank = max_slots_per_rank
+        self.fault_domains = fault_domains
         if self.rebalance_every and not (cfg.moe and cfg.moe.track_expert_heat):
             raise ValueError("rebalance_every requires an MoE config with "
                              "track_expert_heat=True (the heat drives the "
@@ -128,6 +151,7 @@ class DecodeServer:
         self.recoveries: list[dict] = []    # shrink/expand transition records
         self._degraded_steps = 0
         self._recovery_wall_s = 0.0
+        self._ckpt_restores = 0
         self.preempted = False
         self.guard = PreemptionGuard()      # SIGTERM/SIGINT -> drain + ckpt
         self.watchdog = StragglerWatchdog()
@@ -158,10 +182,38 @@ class DecodeServer:
                         f"num_experts={cfg.moe.num_experts} must divide by "
                         f"the EP extent {n} for the contiguous initial "
                         "placement — pass an explicit MoESpec.placement")
+                if self.fault_domains is None and self.min_replicas > 1:
+                    self.fault_domains = self._derived_domains(n)
+                if self.min_replicas > 1:
+                    E = cfg.moe.num_experts
+                    if self.num_redundant_experts < E * (self.min_replicas - 1):
+                        raise ValueError(
+                            f"min_replicas={self.min_replicas} floor needs "
+                            f"num_redundant_experts >= E*(min_replicas-1) = "
+                            f"{E * (self.min_replicas - 1)}, got "
+                            f"{self.num_redundant_experts}")
+                    if cfg.moe.placement is not None:
+                        # gate at adoption: the INITIAL placement must already
+                        # satisfy the floor and survive any single correlated
+                        # failure — infeasibility surfaces here, not during a
+                        # recovery
+                        PL.validate_floor(cfg.moe.placement,
+                                          self.min_replicas,
+                                          self.fault_domains,
+                                          where="initial placement")
+                        PL.assert_shrink_feasible(
+                            E, cfg.moe.placement.num_redundant, n,
+                            domains=self.fault_domains,
+                            min_replicas=self.min_replicas,
+                            max_slots_per_rank=self.max_slots_per_rank,
+                            placement=cfg.moe.placement)
                 self._sched = PL.RebalanceScheduler(
                     cfg.moe.num_experts, n,
                     num_redundant=self.num_redundant_experts,
-                    initial=cfg.moe.placement)
+                    initial=cfg.moe.placement,
+                    min_replicas=self.min_replicas,
+                    domains=self.fault_domains,
+                    max_slots_per_rank=self.max_slots_per_rank)
         self.model = get_model(cfg)
         self.params_physical = bool(cfg.moe and cfg.moe.params_physical)
         # Caller-supplied ``params`` must already match the config's weight
@@ -254,6 +306,19 @@ class DecodeServer:
                  if a in self.mesh.shape]
         return math.prod(sizes) if sizes else 0
 
+    def _derived_domains(self, n: int):
+        """Fault domains from the EP mesh geometry — same derivation as
+        ``EpGroup.fault_domains()``: a hierarchical EP axis makes the pod
+        (``rank // inner_size``, `core/plan.py rank_pod`) the correlated-
+        failure unit; a flat axis leaves every rank its own domain."""
+        m = self.cfg.moe
+        sizes = [self.mesh.shape[a] for a in m.ep_axis
+                 if a in self.mesh.shape]
+        inner = sizes[-1] if sizes else n
+        if len(sizes) > 1 and n // inner > 1:
+            return PL.domains_from_geometry(n, inner)
+        return PL.trivial_domains(n)
+
     def _maybe_rebalance(self, step_idx: int):
         """Every ``rebalance_every`` steps: drain the device heat counter
         into the host-side float64 totals, fold it into the shared
@@ -304,7 +369,16 @@ class DecodeServer:
         newly died or rejoined, else None. Detection only — the caller
         drains any in-flight pipeline before handing the report to
         ``_recover`` (recovery re-jits the step; in-flight tokens must land
-        under the placement that issued them)."""
+        under the placement that issued them).
+
+        Coalescing: the detector is re-polled until a quiet poll, and every
+        report from this boundary merges into ONE (``FaultReport.merge`` —
+        dedup, died+rejoined cancels). However many ranks die at a boundary
+        — a whole pod at once, or stragglers declared across back-to-back
+        polls while the wall clock advances a ``timeout_s`` detector — the
+        caller sees a single report and takes a single degraded-placement
+        transition: one fingerprint bump, one handle rebuild, one weight
+        adoption, not one per dead rank."""
         if self._detector is None:
             return None
         if self._injector is not None:
@@ -313,7 +387,15 @@ class DecodeServer:
                 if self._injector.is_alive(r):
                     self._detector.heartbeat(r, step_idx)
         report = self._detector.poll(step_idx)
-        return report if report else None
+        if not report:
+            return None
+        merged = report
+        while True:
+            more = self._detector.poll(step_idx)
+            if not more:
+                break
+            merged = merged.merge(more)
+        return merged if merged else None
 
     def _recover(self, step_idx: int, report):
         """One shrink or expand transition (docs/DESIGN.md §9). Drains the
@@ -389,6 +471,7 @@ class DecodeServer:
                         self.ckpt_dir, ck, self.model.params_spec(new_cfg),
                         mesh=self.mesh, placement=pl)
                     event["restored_from"] = ck
+                    self._ckpt_restores += 1
                 else:
                     src = (PL.mask_placement(src_live, self._sched.alive)
                            if report.died else old)
@@ -566,6 +649,7 @@ class DecodeServer:
             recovery_count=len(self.recoveries),
             recovery_latency_s=self._recovery_wall_s or None,
             recovery_events=list(self.recoveries) or None,
+            checkpoint_restores=self._ckpt_restores,
             alive_ranks=(list(self._detector.alive)
                          if self._detector is not None else None),
             stragglers_flagged=self.watchdog.flagged,
