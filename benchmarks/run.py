@@ -11,7 +11,9 @@
   modes     — Table III LL/HT/baseline crossover by batch size
   placement — EPLB imbalance sweep: skewed routing, contiguous vs
               rebalanced vs redundant expert placement (per-rank recv load)
-  serving   — Table VII end-to-end serving metrics by EP backend
+  serving   — Table VII end-to-end serving metrics by EP backend, plus
+              continuous batching vs fixed batch under Poisson arrivals
+              (TTFT/ITL percentiles, paged-KV page accounting)
   fault     — elastic recovery under injected rank kill/rejoin:
               steps-to-detect, shrink/expand latency, degraded throughput
 
@@ -19,14 +21,17 @@ Each sub-benchmark needs its own fake-device count, so they run as separate
 processes; results land in results/benchmarks/*.json. After the ll and
 slotmap benchmarks run, their results are folded into ``BENCH_ll_kernels.json``
 at the repo root — the machine-readable perf trajectory (schema
-bench_ll_kernels/v5: handle-create / dispatch / combine phase times,
+bench_ll_kernels/v6: handle-create / dispatch / combine phase times,
 recv-unpack kernel timings, slot-map engine comparison, the decode-pipeline
 steady-state rows, the modes section — LL/HT/baseline crossover plus the
 prefill-pipeline steady-state rows: chunked vs monolithic hierarchical HT
 and hier vs flat through the staged driver — the placement section:
 the EPLB skewed-routing sweep, contiguous vs rebalanced vs redundant —
-and, new in v5, the fault section: elastic kill/rejoin recovery rows,
-validated in-bench) tracked across PRs.
+the fault section: elastic kill/rejoin recovery rows, validated in-bench —
+and, new in v6, the serving section's ``continuous`` rows: continuous
+batching vs gang-scheduled fixed batching under Poisson arrivals with
+per-request TTFT/ITL p50/p95/p99, plus the paged-KV page accounting in the
+memory payload) tracked across PRs.
 """
 import argparse
 import json
@@ -93,7 +98,7 @@ def emit_bench_ll_kernels() -> bool:
     if ft is not None:
         sources["fault"] = stamp(src_ft)
     payload = {
-        "schema": "bench_ll_kernels/v5",
+        "schema": "bench_ll_kernels/v6",
         "sources": sources,
         "config": ll.get("config", {}),
         "phases": ll.get("rows", []),       # handle/dispatch/combine per layout
@@ -115,6 +120,7 @@ def emit_bench_ll_kernels() -> bool:
     if sv is not None:
         # Table VII serving metrics, incl. the placed-serving steady-state
         # rows (per-step expansion vs MoESpec.params_physical adopt-once)
+        # and, v6, the continuous-batching vs fixed-batch percentile rows
         payload["serving"] = sv
     if ft is not None:
         # v5: elastic recovery under injected kill/rejoin — steps-to-detect,

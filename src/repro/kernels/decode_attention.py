@@ -1,0 +1,186 @@
+"""Pallas TPU kernel pair: split-KV paged decode attention (flash-decoding).
+
+The decode-side analogue of ``flash_attention.py`` for the paged KV pool
+(``models/kv_pages.py``): one query token per request, keys/values scattered
+across fixed-size pages addressed by a per-request page table. Shaped like
+aiter's ``mla_decode_fwd`` (SNIPPETS.md Snippet 1):
+
+  stage 1 — grid (B, num_kv_splits, pages_per_split), pages innermost. The
+    flattened page table is scalar-prefetched into SMEM and drives the K/V
+    BlockSpec index_map, so each grid step DMAs exactly one page from HBM
+    into VMEM (the recv_unpack gather idiom). Online softmax over the
+    split's pages accumulates in VMEM scratch (the flash_attention m/l/acc
+    idiom); the split's locally-normalized output and its log-sum-exp are
+    written at the last page.
+  stage 2 — grid (B,): LSE-weighted reduction across splits.
+
+Determinism contract (what makes page recycling safe): masked positions
+contribute an EXACT zero — ``p = where(pos < kv_len, exp(s - m), 0)``, never
+exp underflow — so garbage in recycled or pad pages cannot perturb a live
+request, and an empty split/request yields o == 0, lse == NEG_INF exactly.
+Page tables pad unused entries with the pool's zero pad page (index P), so
+the index_map stays branch-free.
+
+Absorbed-MLA decode shares one pool between K and V (``share_kv=True``): the
+page payload is [ckv | k_rope] with Hkv == 1, queries attend over the full
+row, and values are its first ``dv = r_kv`` columns — each page is read from
+HBM exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _stage1_kernel(tbl_ref, lens_ref, q_ref, k_ref, *rest,
+                   page, pps, Hkv, G, dv, scale, share_kv):
+    if share_kv:
+        v_ref = None
+        o_ref, lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = rest
+    j = pl.program_id(2)
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = lens_ref[b]
+    base = (s * pps + j) * page
+
+    # page-level skip: entirely past the request's live tokens (covers idle
+    # slots with kv_len == 0 — their whole walk is skipped and the store
+    # emits the exact empty values)
+    @pl.when(base < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(Hkv, G, -1)   # [Hkv, G, dk]
+        k = k_ref[0].astype(jnp.float32)                        # [page, Hkv, dk]
+        v = k[..., :dv] if share_kv else v_ref[0].astype(jnp.float32)
+        sc = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale         # [Hkv, G, page]
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (Hkv, G, page), 2)
+        valid = pos < kv_len
+        sc = jnp.where(valid, sc, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+        # exact zero for masked positions — recycled-page garbage and pad
+        # pages contribute nothing, not just "something tiny"
+        p = jnp.where(valid, jnp.exp(sc - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        ctx = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)                 # [Hkv, G, dv]
+        acc_ref[...] = acc_ref[...] * corr[..., None] + ctx
+        m_ref[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _store():
+        l = l_ref[...]
+        live = l > 0
+        safe = jnp.where(live, l, 1.0)
+        o = jnp.where(live[..., None], acc_ref[...] / safe[..., None], 0.0)
+        lse = jnp.where(live, m_ref[...] + jnp.log(safe), NEG_INF)
+        o_ref[0, 0] = o.reshape(Hkv * G, dv)
+        lse_ref[0, 0] = lse.reshape(Hkv * G)
+
+
+def _stage2_kernel(o_ref, lse_ref, out_ref):
+    o = o_ref[0]                                                # [S, Hq, dv]
+    lse = lse_ref[0]                                            # [S, Hq]
+    mx = lse.max(axis=0)                                        # [Hq]
+    w = jnp.where(lse > NEG_INF / 2, jnp.exp(lse - mx[None, :]), 0.0)
+    denom = w.sum(axis=0)                                       # [Hq]
+    out = (w[..., None] * o).sum(axis=0)                        # [Hq, dv]
+    safe = jnp.where(denom > 0, denom, 1.0)
+    out_ref[0] = jnp.where((denom > 0)[:, None], out / safe[:, None], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "num_kv_splits", "dv",
+                                             "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array | None,
+                           kv_indices: jax.Array, kv_lens: jax.Array, *,
+                           scale: float, num_kv_splits: int = 1,
+                           dv: int | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, dk]; k_pages: [P+1, page, Hkv, dk] (last row = zero pad
+    page); v_pages: same layout trailing dv, or None for the absorbed-MLA
+    shared pool (then ``dv`` selects the leading value columns of K);
+    kv_indices: [B, max_pages] int32 page table padded with P; kv_lens: [B]
+    int32 live tokens per request. Returns [B, Hq, dv] f32."""
+    B, max_pages = kv_indices.shape
+    page, Hkv, dk = k_pages.shape[1:]
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    S = num_kv_splits
+    assert max_pages % S == 0, (max_pages, S)
+    pps = max_pages // S
+    share_kv = v_pages is None
+    if share_kv:
+        assert dv is not None and Hkv == 1
+    else:
+        dv = v_pages.shape[-1]
+
+    flat_tbl = kv_indices.reshape(-1).astype(jnp.int32)
+    lens = kv_lens.astype(jnp.int32)
+
+    kern = functools.partial(_stage1_kernel, page=page, pps=pps, Hkv=Hkv,
+                             G=G, dv=dv, scale=scale, share_kv=share_kv)
+    k_spec = pl.BlockSpec(
+        (1, page, Hkv, dk),
+        lambda b, s, j, tbl, lens: (tbl[b * max_pages + s * pps + j], 0, 0, 0))
+    in_specs = [pl.BlockSpec((1, Hq, dk), lambda b, s, j, tbl, lens: (b, 0, 0)),
+                k_spec]
+    operands = [q, k_pages]
+    if not share_kv:
+        in_specs.append(pl.BlockSpec(
+            (1, page, Hkv, dv),
+            lambda b, s, j, tbl, lens: (tbl[b * max_pages + s * pps + j],
+                                        0, 0, 0)))
+        operands.append(v_pages)
+
+    o_parts, lse = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((B, S, Hq, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((B, S, Hq), jnp.float32)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(B, S, pps),
+            in_specs=in_specs,
+            out_specs=(
+                pl.BlockSpec((1, 1, Hq, dv),
+                             lambda b, s, j, tbl, lens: (b, s, 0, 0)),
+                pl.BlockSpec((1, 1, Hq),
+                             lambda b, s, j, tbl, lens: (b, s, 0)),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((Hkv, G), jnp.float32),
+                pltpu.VMEM((Hkv, G), jnp.float32),
+                pltpu.VMEM((Hkv, G, dv), jnp.float32),
+            ],
+        ),
+        interpret=interpret,
+    )(flat_tbl, lens, *operands)
+
+    return pl.pallas_call(
+        _stage2_kernel,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, dv), jnp.float32),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, Hq, dv), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, Hq), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, dv), lambda b: (b, 0, 0)),
+        interpret=interpret,
+    )(o_parts, lse)

@@ -129,6 +129,31 @@ def flash_attention_bshd(q, k, v, *, scale, window=None, causal=True):
     return _sdpa_chunked(q, k, v, None, scale, window)
 
 
+def paged_decode_attention(q, k_pages, v_pages, kv_indices, kv_lens, *,
+                           scale, num_kv_splits=1, dv=None):
+    """Split-KV paged decode attention over a page-table-indexed KV pool.
+
+    q: [B, Hq, dk]; k_pages: [P+1, page, Hkv, dk] (last row = zero pad
+    page); v_pages: same layout with trailing dv, or None for the
+    absorbed-MLA shared pool (values = leading ``dv`` key columns);
+    kv_indices: [B, max_pages] int32 padded with P; kv_lens: [B] int32.
+    Returns [B, Hq, dv] f32. Two-stage flash-decoding on TPU; jnp oracle
+    elsewhere (identical masking semantics — exact zeros off the live
+    prefix, so both backends are safe over recycled pages)."""
+    use, interp = _use_pallas()
+    page = k_pages.shape[1]
+    dk = k_pages.shape[-1]
+    dvv = dv if v_pages is None else v_pages.shape[-1]
+    if use and dk % 128 == 0 and dvv % 128 == 0 and page % 8 == 0:
+        from repro.kernels import decode_attention as _da
+        return _da.paged_decode_attention(
+            q, k_pages, v_pages, kv_indices, kv_lens, scale=scale,
+            num_kv_splits=num_kv_splits, dv=dv, interpret=interp)
+    return _ref.paged_decode_attention(
+        q, k_pages, v_pages, kv_indices, kv_lens, scale=scale,
+        num_kv_splits=num_kv_splits, dv=dv)
+
+
 def grouped_gemm(x: jax.Array, w: jax.Array, counts: jax.Array) -> jax.Array:
     use, interp = _use_pallas()
     L, A, H = x.shape

@@ -117,6 +117,83 @@ def recv_unpack(recv: jax.Array, gmap: jax.Array, scales: jax.Array | None = Non
     return dequantize_fp8(rows, sc, out_dtype or jnp.bfloat16)
 
 
+NEG_INF = -1e30
+
+
+def paged_decode_stage1(q, k_pages, v_pages, kv_indices, kv_lens, *,
+                        scale, num_kv_splits, dv=None):
+    """Stage 1 of split-KV paged decode attention: per-(request, split)
+    partial outputs + log-sum-exp (the aiter ``mla_stage1`` shape).
+
+    q: [B, Hq, dk] one decode query per request. k_pages: [P+1, page, Hkv,
+    dk] paged key pool whose LAST row is the zero pad page. v_pages: same
+    layout with trailing dv — or None for the absorbed-MLA shared pool,
+    where values are the first ``dv`` key columns (Hkv == 1, one pool read).
+    kv_indices: [B, max_pages] int32 per-request page table, padded with the
+    pad-page index P. kv_lens: [B] int32 valid tokens per request (0 for an
+    idle slot). max_pages must divide by num_kv_splits.
+
+    Returns (o [B, S, Hq, dv] f32 split-local softmax outputs, lse [B, S,
+    Hq] f32). Empty splits yield o == 0 and lse == NEG_INF exactly; masked
+    positions contribute an exact 0 (explicit ``where``, not exp underflow),
+    so recycled-page garbage can never leak into a live request."""
+    B, max_pages = kv_indices.shape
+    page, Hkv, dk = k_pages.shape[1:]
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    S = num_kv_splits
+    assert max_pages % S == 0, (max_pages, S)
+    if v_pages is None:
+        assert dv is not None and Hkv == 1
+        v_pages = k_pages[..., :dv]
+    dv = v_pages.shape[-1]
+    k = k_pages[kv_indices].reshape(B, max_pages * page, Hkv, dk)
+    v = v_pages[kv_indices].reshape(B, max_pages * page, Hkv, dv)
+    qg = q.reshape(B, Hkv, G, dk).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(max_pages * page)
+    valid = pos[None, :] < kv_lens[:, None]                 # [B, Stot]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    # split the KV axis: [B, Hkv, G, S, pps*page]
+    sc = s.reshape(B, Hkv, G, S, -1)
+    vc = v.reshape(B, S, -1, Hkv, dv).astype(jnp.float32)
+    mc = valid.reshape(B, 1, 1, S, -1)
+    m = sc.max(-1)                                          # [B, Hkv, G, S]
+    p = jnp.where(mc, jnp.exp(sc - m[..., None]), 0.0)
+    l = p.sum(-1)
+    acc = jnp.einsum("bhgsk,bskhv->bhgsv", p, vc)
+    o = jnp.where((l > 0)[..., None], acc / jnp.where(l > 0, l, 1.0)[..., None], 0.0)
+    lse = jnp.where(l > 0, m + jnp.log(jnp.where(l > 0, l, 1.0)), NEG_INF)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, dv)
+    lse = lse.transpose(0, 3, 1, 2).reshape(B, S, Hq)
+    return o, lse
+
+
+def paged_decode_stage2(o_parts, lse):
+    """Stage 2: LSE-weighted reduction across KV splits (the aiter
+    ``_fwd_kernel_stage2`` shape). o_parts: [B, S, Hq, dv] f32, lse: [B, S,
+    Hq] f32 -> [B, Hq, dv] f32. Splits with lse == NEG_INF (empty) get
+    exactly zero weight; a fully-empty request returns exactly zero."""
+    mx = lse.max(axis=1)                                    # [B, Hq]
+    live = lse > NEG_INF / 2
+    w = jnp.where(live, jnp.exp(lse - mx[:, None]), 0.0)    # [B, S, Hq]
+    denom = w.sum(axis=1)                                   # [B, Hq]
+    out = jnp.einsum("bsh,bshv->bhv", w, o_parts)
+    safe = jnp.where(denom > 0, denom, 1.0)
+    return jnp.where((denom > 0)[..., None], out / safe[..., None], 0.0)
+
+
+def paged_decode_attention(q, k_pages, v_pages, kv_indices, kv_lens, *,
+                           scale, num_kv_splits=1, dv=None):
+    """Two-stage split-KV paged decode attention over a page-table-indexed
+    KV pool — the jnp semantics of record for
+    ``kernels/decode_attention.py``. Returns [B, Hq, dv] f32."""
+    o, lse = paged_decode_stage1(q, k_pages, v_pages, kv_indices, kv_lens,
+                                 scale=scale, num_kv_splits=num_kv_splits,
+                                 dv=dv)
+    return paged_decode_stage2(o, lse)
+
+
 def grouped_gemm(x: jax.Array, w: jax.Array, counts: jax.Array) -> jax.Array:
     """Expert-major grouped GEMM over the LL 3D layout (§III-E, Fig. 3).
 

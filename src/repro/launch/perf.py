@@ -32,9 +32,8 @@ def _no_chunked_attn(cfg):
 
 def _chunk_size(n):
     def t(cfg):
-        from repro.models import attention as A
-        A._KV_CHUNK = n
-        return cfg
+        return dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn, kv_chunk=n))
     return t
 
 

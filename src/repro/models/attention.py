@@ -69,18 +69,24 @@ def _scores_mask(q_pos, k_pos, window):
 # registers/VMEM after fusion. Dropped the prefill memory roofline term ~9x
 # on the minicpm3 prefill_32k cell (docs/EXPERIMENTS.md §Perf M1).
 CHUNKED_ATTN_THRESHOLD = 2048
-_KV_CHUNK = 1024
 
 
-def _sdpa_chunked(q, k, v, softcap, scale, window, chunk=_KV_CHUNK):
-    """Causal grouped attention with online softmax over KV chunks."""
+def _sdpa_chunked(q, k, v, softcap, scale, window, chunk=1024):
+    """Causal grouped attention with online softmax over KV chunks.
+
+    The chunk width comes from ``AttnSpec.kv_chunk`` at model call sites
+    (page-size-aligned in the paged serving engine). Ragged tails
+    (Sk % chunk != 0) are zero-padded and masked out exactly."""
     B, Sq, Hq, hd = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
-    assert Sk % chunk == 0, (Sk, chunk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     qg = q.reshape(B, Sq, Hkv, G, hd)
     q_pos = jnp.arange(Sq)
-    n = Sk // chunk
+    n = (Sk + pad) // chunk
     kc = k.reshape(B, n, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(B, n, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
 
@@ -92,7 +98,7 @@ def _sdpa_chunked(q, k, v, softcap, scale, window, chunk=_KV_CHUNK):
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
         k_pos = ci * chunk + jnp.arange(chunk)
-        msk = k_pos[None, :] <= q_pos[:, None]
+        msk = (k_pos[None, :] <= q_pos[:, None]) & (k_pos < Sk)[None, :]
         if window is not None:
             msk &= (q_pos[:, None] - k_pos[None, :]) < window
         s = jnp.where(msk[None, None, None], s, -1e30)
@@ -138,6 +144,48 @@ def _sdpa(q, k, v, mask, softcap, scale):
     return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
 
 
+def paged_attention(p, x, cfg: ArchConfig, mesh, pool, page_tbl, kv_lens,
+                    active, *, num_kv_splits: int = 1,
+                    attn: AttnSpec | None = None):
+    """One-token decode attention against the paged KV pool.
+
+    x: [B, 1, D]; pool: {"k", "v"} [P+1, page, n_kv, hd] (models/kv_pages);
+    page_tbl: [B, max_pages] int32 (pad entries = P); kv_lens: [B] int32
+    tokens already held; active: [B] int32 0/1. Writes this token's K/V at
+    (tbl[b, len//page], len % page), then runs the split-KV paged decode
+    kernel over len + active positions (idle rows attend over nothing and
+    return exact zeros). Returns (y [B, 1, D], new_pool)."""
+    a = attn or cfg.attn
+    if a.window is not None:
+        raise NotImplementedError("paged decode attention does not support "
+                                  "sliding-window layers")
+    if a.logit_softcap is not None:
+        raise NotImplementedError("paged decode attention does not support "
+                                  "logit softcap")
+    from repro.kernels import ops as KOPS
+    from repro.models.kv_pages import write_token
+    positions = kv_lens[:, None]                           # [B, 1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if a.rope_fraction > 0:
+        q = apply_rope(q, positions, a.rope_base, a.rope_fraction)
+        k = apply_rope(k, positions, a.rope_base, a.rope_fraction)
+    q = constrain(q, mesh, "batch", None, "heads", None)
+    kp = write_token(pool["k"], k[:, 0], page_tbl, kv_lens)
+    vp = write_token(pool["v"], v[:, 0], page_tbl, kv_lens)
+    eff = kv_lens + active            # just-written token counts iff active
+    out = KOPS.paged_decode_attention(q[:, 0], kp, vp, page_tbl, eff,
+                                      scale=a.head_dim ** -0.5,
+                                      num_kv_splits=num_kv_splits)
+    out = out.astype(x.dtype)[:, None]                     # [B, 1, Hq, hd]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": kp, "v": vp}
+
+
 def attention(p, x, cfg: ArchConfig, mesh, *, positions=None,
               cache: KVCache | None = None, window: int | None = "cfg",
               attn: AttnSpec | None = None, kv_override=None,
@@ -168,13 +216,15 @@ def attention(p, x, cfg: ArchConfig, mesh, *, positions=None,
     scale = a.head_dim ** -0.5
 
     if cache is None and kv_override is None:
-        if causal and S >= CHUNKED_ATTN_THRESHOLD and S % _KV_CHUNK == 0:
-            if a.logit_softcap is None and jax.default_backend() == "tpu":
+        if causal and S >= CHUNKED_ATTN_THRESHOLD:
+            if (a.logit_softcap is None and jax.default_backend() == "tpu"
+                    and S % 128 == 0):
                 from repro.kernels import ops as KOPS
                 out = KOPS.flash_attention_bshd(q, k, v, scale=scale,
                                                 window=window)
             else:
-                out = _sdpa_chunked(q, k, v, a.logit_softcap, scale, window)
+                out = _sdpa_chunked(q, k, v, a.logit_softcap, scale, window,
+                                    chunk=a.kv_chunk)
         else:
             q_pos = jnp.arange(S)
             mask = (_scores_mask(q_pos, q_pos, window) if causal

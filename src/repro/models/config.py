@@ -18,6 +18,16 @@ class AttnSpec:
     window: int | None = None         # sliding-window width (local layers)
     qk_norm: bool = False
     logit_softcap: float | None = None
+    # KV tile width for chunked (online-softmax) prefill attention AND the
+    # tiling contract with the paged decode path: a paged serving engine
+    # requires kv_chunk % page_size == 0 so prefill chunking and decode
+    # paging agree on boundaries. Ragged tails (S % kv_chunk != 0) are
+    # handled by masked padding, not asserted away.
+    kv_chunk: int = 1024
+    # KV-split count for the two-stage paged decode attention kernel
+    # (flash-decoding parallelism); clamped to the page-table width at call
+    # sites so tiny configs stay valid.
+    decode_kv_splits: int = 4
 
 
 @dataclasses.dataclass(frozen=True)

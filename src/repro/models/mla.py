@@ -79,10 +79,17 @@ def _q_proj(p, x, cfg, positions):
 
 
 def _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, out_dtype, chunk=1024):
-    """Online-softmax MLA attention; K/V decompressed one chunk at a time."""
+    """Online-softmax MLA attention; K/V decompressed one chunk at a time.
+
+    Chunk width from ``AttnSpec.kv_chunk`` at call sites; ragged tails
+    (S % chunk != 0) are zero-padded and masked out exactly."""
     B, Sq, H, dn = q_nope.shape
     S = ckv.shape[1]
-    n = S // chunk
+    pad = (-S) % chunk
+    if pad:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    n = (S + pad) // chunk
     ckv_c = ckv.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
     kr_c = k_rope.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
     q_pos = jnp.arange(Sq)
@@ -98,7 +105,7 @@ def _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, out_dtype, chunk=1024):
              jnp.einsum("bqhk,bsk->bhqs", q_rope, kr,
                         preferred_element_type=jnp.float32)) * scale
         k_pos = ci * chunk + jnp.arange(chunk)
-        msk = k_pos[None, :] <= q_pos[:, None]
+        msk = (k_pos[None, :] <= q_pos[:, None]) & (k_pos < S)[None, :]
         s = jnp.where(msk[None, None], s, -1e30)
         m2 = jnp.maximum(m, s.max(-1))
         pb = jnp.exp(s - m2[..., None])
@@ -119,6 +126,38 @@ def _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, out_dtype, chunk=1024):
     return out.transpose(0, 2, 1, 3)                   # [B,Sq,H,dv]
 
 
+def paged_mla_attention(p, x, cfg: ArchConfig, mesh, pool, page_tbl, kv_lens,
+                        active, *, num_kv_splits: int = 1):
+    """One-token absorbed-MLA decode against the paged latent pool.
+
+    pool: {"kv"} [P+1, page, 1, r_kv+rope] holding [ckv | k_rope] — ONE
+    shared pool (models/kv_pages.paged_mla_pool_spec): the query is
+    [q_absorbed | q_rope] against the full row and values are the leading
+    r_kv columns, so each page is read from HBM exactly once
+    (share_kv mode of kernels/decode_attention). Returns (y, new_pool)."""
+    from repro.kernels import ops as KOPS
+    from repro.models.kv_pages import write_token
+    m = cfg.mla
+    positions = kv_lens[:, None]                           # [B, 1]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    kv = x @ p["wkv_a"]                                    # [B, 1, r_kv+rope]
+    ckv = rmsnorm(kv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions,
+                        cfg.attn.rope_base, 1.0)[:, :, 0]  # [B, 1, rope]
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    row = jnp.concatenate([ckv, k_rope], axis=-1)[:, 0][:, None]  # [B,1,width]
+    kvp = write_token(pool["kv"], row, page_tbl, kv_lens)
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])  # absorb W_uk
+    qcat = jnp.concatenate([q_abs, q_rope], axis=-1)[:, 0]   # [B, H, r+rope]
+    eff = kv_lens + active
+    ctx = KOPS.paged_decode_attention(qcat, kvp, None, page_tbl, eff,
+                                      scale=scale, num_kv_splits=num_kv_splits,
+                                      dv=m.kv_lora_rank)     # [B, H, r] f32
+    o = jnp.einsum("bhr,rhk->bhk", ctx.astype(x.dtype), p["wv_b"])  # absorb W_uv
+    y = jnp.einsum("bqhk,hkd->bqd", o[:, None], p["wo"])
+    return y, {"kv": kvp}
+
+
 def mla_attention(p, x, cfg: ArchConfig, mesh, *, positions=None,
                   cache: MLACache | None = None):
     m = cfg.mla
@@ -137,13 +176,14 @@ def mla_attention(p, x, cfg: ArchConfig, mesh, *, positions=None,
     q_nope, q_rope = _q_proj(p, x, cfg, positions)
 
     if cache is None:
-        from repro.models.attention import CHUNKED_ATTN_THRESHOLD, _KV_CHUNK
-        if S >= CHUNKED_ATTN_THRESHOLD and S % _KV_CHUNK == 0:
+        from repro.models.attention import CHUNKED_ATTN_THRESHOLD
+        if S >= CHUNKED_ATTN_THRESHOLD:
             # chunked online softmax WITH per-chunk latent decompression:
             # the full per-head K/V ([B,S,H,d]) never materializes — only the
             # compressed ckv ([B,S,r_kv]) is resident, the MLA memory win at
             # prefill (docs/EXPERIMENTS.md §Perf M1).
-            o = _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, x.dtype)
+            o = _mla_chunked(p, q_nope, q_rope, ckv, k_rope, scale, x.dtype,
+                             chunk=cfg.attn.kv_chunk)
         else:
             k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
             v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"])

@@ -17,11 +17,18 @@ class ModelFns:
     forward: Callable           # (params, batch, cfg, mesh) -> (loss, aux)
     decode_state_spec: Callable  # (cfg, batch, max_len, long=False) -> spec tree
     decode_step: Callable       # (params, state, batch, cfg, mesh) -> (logits, state)
+    # paged continuous-batching decode path (None = family not supported):
+    # state holds per-layer page pools; page_tbl/kv_lens/active ride the
+    # step's batch inputs (runtime/scheduler.py builds them host-side)
+    paged_decode_state_spec: Callable | None = None  # (cfg, num_pages, page_size)
+    paged_decode_step: Callable | None = None
 
 
 _REGISTRY = {
-    "lm": ModelFns(T.lm_spec, T.lm_forward, T.lm_decode_state_spec, T.lm_decode_step),
-    "vlm": ModelFns(T.lm_spec, T.lm_forward, T.lm_decode_state_spec, T.lm_decode_step),
+    "lm": ModelFns(T.lm_spec, T.lm_forward, T.lm_decode_state_spec, T.lm_decode_step,
+                   T.lm_paged_decode_state_spec, T.lm_paged_decode_step),
+    "vlm": ModelFns(T.lm_spec, T.lm_forward, T.lm_decode_state_spec, T.lm_decode_step,
+                    T.lm_paged_decode_state_spec, T.lm_paged_decode_step),
     "gemma3": ModelFns(T.gemma3_spec, T.gemma3_forward,
                        T.gemma3_decode_state_spec, T.gemma3_decode_step),
     "ssm": ModelFns(T.ssm_spec, T.ssm_forward, T.ssm_decode_state_spec,

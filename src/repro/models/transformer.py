@@ -83,6 +83,36 @@ def layer_apply(p, x, cfg: ArchConfig, mesh, *, cache=None, window="cfg",
     return x + f, new_cache, aux
 
 
+def paged_layer_apply(p, x, cfg: ArchConfig, mesh, pool, page_tbl, kv_lens,
+                      active, *, num_kv_splits: int, with_heat=False):
+    """layer_apply's paged-decode twin: attention runs against the paged KV
+    pool (kernels/decode_attention via ops); the FFN/MoE half is identical.
+    -> (x, new_pool, aux) with the same aux contract as layer_apply."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn and cfg.attn.kind == "mla":
+        a, new_pool = MLA.paged_mla_attention(
+            p["attn"], h, cfg, mesh, pool, page_tbl, kv_lens, active,
+            num_kv_splits=num_kv_splits)
+    else:
+        a, new_pool = ATT.paged_attention(
+            p["attn"], h, cfg, mesh, pool, page_tbl, kv_lens, active,
+            num_kv_splits=num_kv_splits)
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        if with_heat:
+            f, aux, heat = MOE.moe_block(p["moe"], h, cfg, mesh,
+                                         with_heat=True)
+            return x + f, new_pool, (aux, heat)
+        f, aux = MOE.moe_block(p["moe"], h, cfg, mesh)
+    else:
+        f, aux = ffn_apply(p["ffn"], h, cfg.act), jnp.float32(0)
+        if with_heat:
+            E = cfg.moe.num_experts if cfg.moe else 1
+            return x + f, new_pool, (aux, jnp.zeros((E,), jnp.float32))
+    return x + f, new_pool, aux
+
+
 def _stack(specs, n: int):
     """Stack a layer's ParamSpec tree n times along a leading 'stack' axis."""
     def one(s: ParamSpec):
@@ -228,6 +258,79 @@ def lm_decode_step(params, state, batch, cfg: ArchConfig, mesh):
         if "expert_heat" in state:
             def body_heat(x, p, c):
                 return layer_apply(p, x, cfg, mesh, cache=c, with_heat=True)
+            aux0 = (jnp.float32(0),
+                    jnp.zeros((cfg.moe.num_experts,), jnp.float32))
+            x, new_state["moe"], (_, heat) = _scan_stack(
+                body_heat, x, params["moe_stack"], state["moe"], cfg,
+                remat=False, aux0=aux0)
+            new_state["expert_heat"] = state["expert_heat"] + heat
+        else:
+            x, new_state["moe"], _ = _scan_stack(
+                body, x, params["moe_stack"], state["moe"], cfg, remat=False)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return logits_out(x, head), new_state
+
+
+def lm_paged_decode_state_spec(cfg: ArchConfig, num_pages: int,
+                               page_size: int):
+    """Paged twin of lm_decode_state_spec: per-layer page POOLS instead of
+    dense [B, S_max] caches. The page table / kv_lens / active mask are NOT
+    device state — they are host-built per-step batch inputs (jit-stable
+    shapes; runtime/scheduler.py owns them), so join/leave/recycle never
+    retraces the step."""
+    from repro.models import kv_pages as KVP
+    n_dense = cfg.moe.first_k_dense if cfg.moe else cfg.num_layers
+    n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+    mk = (KVP.paged_mla_pool_spec if (cfg.attn and cfg.attn.kind == "mla")
+          else KVP.paged_kv_pool_spec)
+    st = {}
+    if n_dense:
+        st["dense"] = _stack(mk(cfg, num_pages, page_size), n_dense)
+    if n_moe:
+        st["moe"] = _stack(mk(cfg, num_pages, page_size), n_moe)
+        if cfg.moe.track_expert_heat:
+            # same logical-[E] heat contract as the dense decode state
+            st["expert_heat"] = ParamSpec((cfg.moe.num_experts,), jnp.float32,
+                                          (None,), init="zeros")
+    return st
+
+
+def _decode_splits(cfg: ArchConfig, max_pages: int) -> int:
+    """Largest split count <= AttnSpec.decode_kv_splits dividing the page-
+    table width (static shapes only — resolved at trace time)."""
+    s = max(min(cfg.attn.decode_kv_splits, max_pages), 1)
+    while max_pages % s:
+        s -= 1
+    return s
+
+
+def lm_paged_decode_step(params, state, batch, cfg: ArchConfig, mesh):
+    """One paged decode step. batch: {tokens [B,1], page_tbl [B,max_pages],
+    kv_lens [B], active [B]}. -> (logits [B,1,V], state). Idle rows (active
+    == 0, all-pad tables) compute deterministic garbage that lands in the
+    pad page and zero attention context — the scheduler discards their
+    logits, and live rows provably can't see them (exact masking)."""
+    x = embed_lookup(params["embed"], batch["tokens"])
+    x = constrain(x, mesh, "batch", None, None)
+    tbl = batch["page_tbl"].astype(jnp.int32)
+    lens = batch["kv_lens"].astype(jnp.int32)
+    act = batch["active"].astype(jnp.int32)
+    splits = _decode_splits(cfg, tbl.shape[1])
+    new_state = dict(state)
+
+    def body(x, p, c):
+        return paged_layer_apply(p, x, cfg, mesh, c, tbl, lens, act,
+                                 num_kv_splits=splits)
+
+    if "dense" in state:
+        x, new_state["dense"], _ = _scan_stack(
+            body, x, params["dense_stack"], state["dense"], cfg, remat=False)
+    if "moe" in state:
+        if "expert_heat" in state:
+            def body_heat(x, p, c):
+                return paged_layer_apply(p, x, cfg, mesh, c, tbl, lens, act,
+                                         num_kv_splits=splits, with_heat=True)
             aux0 = (jnp.float32(0),
                     jnp.zeros((cfg.moe.num_experts,), jnp.float32))
             x, new_state["moe"], (_, heat) = _scan_stack(

@@ -75,7 +75,8 @@ from repro.models.config import ArchConfig
 from repro.parallel.sharding import init_from_specs
 from repro.runtime.fault import (DegradedRecovery, FaultDetector,
                                  PreemptionGuard, StragglerWatchdog)
-from repro.runtime.steps import make_serve_step, serve_state_specs
+from repro.runtime.steps import (make_paged_serve_step, make_serve_step,
+                                 paged_serve_state_specs, serve_state_specs)
 
 
 @dataclasses.dataclass
@@ -85,6 +86,20 @@ class ServeMetrics:
     itl_p99_s: float
     output_tok_s: float
     total_tokens: int
+    # --- continuous-batching percentiles (ContinuousDecodeServer only;
+    # per-REQUEST distributions under real admission, not batch means) ---
+    ttft_p50_s: float | None = None
+    ttft_p95_s: float | None = None
+    ttft_p99_s: float | None = None
+    itl_p50_s: float | None = None
+    itl_p95_s: float | None = None
+    requests_completed: int | None = None
+    serve_steps: int | None = None
+    # paged-KV accounting: allocator high-water vs the dense B x S_max
+    # reservation the fixed-batch engine would have pinned (both in pages)
+    pages_peak: int | None = None
+    pages_dense_equiv: int | None = None
+    per_request: list | None = None        # per-request ttft/itl records
     # --- EPLB load counters (None when the config doesn't track heat) ---
     expert_heat: list | None = None        # per-logical-expert routed tokens
     heat_max_mean: float | None = None     # max/mean per-expert load ratio
@@ -242,13 +257,26 @@ class DecodeServer:
                     params, self.model.params_spec(init_cfg),
                     None, cfg.moe.placement)
         self.params = params
-        st_spec, _ = serve_state_specs(cfg, batch, max_len)
-        self.state = jax.tree.map(
-            jnp.zeros_like, init_from_specs(jax.random.PRNGKey(1), st_spec, mesh))
+        self.state = self._init_state(batch, max_len)
         # compiled serve steps, keyed by placement, bounded to
         # {current, previous} — see _compiled_step
         self._step_cache: collections.OrderedDict = collections.OrderedDict()
         self.step = self._compiled_step()
+
+    # ---- engine hooks (ContinuousDecodeServer overrides both) ----
+
+    def _init_state(self, batch: int, max_len: int):
+        """Zeroed decode state for this engine's layout (dense KV caches)."""
+        st_spec, _ = serve_state_specs(self.cfg, batch, max_len)
+        return jax.tree.map(
+            jnp.zeros_like,
+            init_from_specs(jax.random.PRNGKey(1), st_spec, self.mesh))
+
+    def _step_factory(self):
+        """Uncompiled serve step for this engine's layout. _compiled_step
+        jits THIS — so placement re-jits, fault recoveries, and the bounded
+        step cache work identically for the dense and paged engines."""
+        return make_serve_step(self.cfg, self.mesh)
 
     def _logical_cfg(self) -> ArchConfig:
         """This server's config with the expert-weight layout forced logical
@@ -274,7 +302,7 @@ class DecodeServer:
             self._step_cache.move_to_end(key)
         else:
             self._step_cache[key] = jax.jit(
-                make_serve_step(self.cfg, self.mesh), donate_argnums=(1,))
+                self._step_factory(), donate_argnums=(1,))
             while len(self._step_cache) > 2:
                 self._step_cache.popitem(last=False)
         return self._step_cache[key]
@@ -643,6 +671,171 @@ class DecodeServer:
             itl_p99_s=float(np.percentile(itls, 99)),
             output_tok_s=total / (ttft + decode_wall),
             total_tokens=total,
+            expert_heat=None if heat is None else heat.tolist(),
+            heat_max_mean=heat_mm, rank_heat_max_mean=rank_mm,
+            degraded_steps=self._degraded_steps,
+            recovery_count=len(self.recoveries),
+            recovery_latency_s=self._recovery_wall_s or None,
+            recovery_events=list(self.recoveries) or None,
+            checkpoint_restores=self._ckpt_restores,
+            alive_ranks=(list(self._detector.alive)
+                         if self._detector is not None else None),
+            stragglers_flagged=self.watchdog.flagged,
+            preempted=self.preempted)
+
+
+class ContinuousDecodeServer(DecodeServer):
+    """Continuous-batching serving engine over the paged KV pool.
+
+    Same fault/rebalance/preemption machinery as DecodeServer — the engine
+    hooks swap the decode state for per-layer page pools
+    (models/kv_pages.py) and the step for the paged split-KV decode
+    (runtime/steps.make_paged_serve_step) — plus ``serve_requests``: a
+    request-level loop where admission, slot recycling, and page alloc/free
+    all happen at the same step boundaries placement swaps and fault
+    recoveries already use. ``batch`` is the fixed max concurrency (slot
+    count); the page table / kv_lens / active mask are host-built per-step
+    inputs with fixed shapes, so join/leave never retraces the step.
+
+    Per-request token streams are bitwise identical to running each request
+    alone through this same engine (and across placement swaps / rank-kill
+    transitions): rows are batch-independent end to end given zero-drop MoE
+    capacity — a capacity_factor would let co-residents compete for expert
+    slots and break that, so it is rejected here.
+
+    Pipelining stays depth-1: continuous batching feeds each request's
+    PREVIOUS output token back in, so the host readback the fixed-batch
+    pipelined path avoids is inherent here.
+    """
+
+    def __init__(self, cfg: ArchConfig, batch: int, max_len: int, mesh=None,
+                 *, page_size: int = 8, num_pages: int | None = None,
+                 **kwargs):
+        from repro.models import kv_pages as KVP
+        from repro.models.registry import get_model as _gm
+        if _gm(cfg).paged_decode_step is None:
+            raise NotImplementedError(
+                f"family {cfg.family!r} has no paged decode path")
+        a = cfg.attn
+        if a is None or a.window is not None:
+            raise NotImplementedError(
+                "continuous batching requires non-windowed attention "
+                "(sliding-window paged decode is not implemented)")
+        if a.kv_chunk % page_size:
+            raise ValueError(
+                f"kv_chunk={a.kv_chunk} must be a multiple of "
+                f"page_size={page_size} — chunked prefill attention and the "
+                "paged decode kernel must agree on tiling")
+        if cfg.moe and cfg.moe.capacity_factor is not None:
+            raise ValueError(
+                "continuous batching requires zero-drop MoE routing "
+                "(capacity_factor=None): capacity competition couples "
+                "co-resident requests and breaks solo-parity")
+        if int(kwargs.get("pipeline_depth", 1)) > 1:
+            raise ValueError("continuous batching is depth-1: the next step "
+                             "consumes this step's tokens host-side")
+        self.page_size = int(page_size)
+        # page-table width: enough pages for max_len, rounded up so the
+        # configured split count divides it (padding entries are pad pages)
+        mp = KVP.pages_for_tokens(max_len, self.page_size)
+        s = max(int(a.decode_kv_splits), 1)
+        self.max_pages = -(-mp // s) * s
+        # default pool = the dense-equivalent reservation (batch x max_len):
+        # never exhausts; pass a smaller pool to realize the memory win
+        self.num_pages = (int(num_pages) if num_pages is not None
+                          else batch * self.max_pages)
+        self.max_len = max_len
+        self.reqsched = None
+        super().__init__(cfg, batch, max_len, mesh, **kwargs)
+
+    def _init_state(self, batch: int, max_len: int):
+        st_spec, _ = paged_serve_state_specs(
+            self.cfg, batch, self.num_pages, self.page_size, self.max_pages)
+        return jax.tree.map(
+            jnp.zeros_like,
+            init_from_specs(jax.random.PRNGKey(1), st_spec, self.mesh))
+
+    def _step_factory(self):
+        return make_paged_serve_step(self.cfg, self.mesh)
+
+    def serve_requests(self, requests, max_steps: int | None = None
+                       ) -> ServeMetrics:
+        """Run the continuous-batching loop until every request completes
+        (or ``max_steps``). Placement swaps, fault recoveries, and
+        preemption run at the same boundaries as admission/retirement —
+        page tables are host state, so a transition can never corrupt them
+        (pinned by tests/test_elastic.py)."""
+        from repro.models.kv_pages import PageAllocator, pages_for_tokens
+        from repro.runtime.scheduler import ContinuousScheduler
+        allocator = PageAllocator(self.num_pages, self.page_size)
+        sched = ContinuousScheduler(requests, self.batch, self.max_pages,
+                                    allocator)
+        self.reqsched = sched
+        t0 = time.perf_counter()
+        step_idx = 0
+        marks = []
+        while not sched.done:
+            if max_steps is not None and step_idx >= max_steps:
+                break
+            feed = sched.advance(step_idx)
+            tok, self.state = self.step(self.params, self.state, feed)
+            jax.block_until_ready(tok)
+            now = time.perf_counter()
+            sched.observe(np.asarray(tok), now)
+            marks.append(now)
+            report = self._poll_faults(step_idx)
+            if report is not None:
+                self._recover(step_idx, report)
+            else:
+                self._maybe_rebalance(step_idx)
+            if self._detector is not None and self._detector.dead:
+                self._degraded_steps += 1
+            if self.guard.should_stop:
+                self._preempt(step_idx)
+                break
+            step_idx += 1
+        wall = time.perf_counter() - t0
+        step_itls = np.diff(np.asarray(marks)) if len(marks) > 1 else np.asarray([0.0])
+        for t in step_itls:
+            self.watchdog.observe(float(t))
+        recs = [sched.request_metrics(rid) for rid in sorted(sched.finished)]
+        ttfts = np.asarray([r["ttft_s"] for r in recs]) if recs else np.asarray([0.0])
+        itls = np.concatenate([np.asarray(r["itl_s"]) for r in recs
+                               if r["itl_s"]] or [np.zeros(1)])
+        total = int(sum(r["tokens"] for r in recs))
+        heat = self._tracked_heat()
+        heat_mm = rank_mm = None
+        if heat is not None:
+            heat_mm = PL.imbalance(heat)
+            n = self._ep_size()
+            phys = (self.cfg.moe.placement.num_slots
+                    if self.cfg.moe.placement is not None
+                    else self.cfg.moe.num_experts)
+            if n > 1 and phys % n == 0:
+                rl = PL.rank_loads(self._device_heat(),
+                                   self.cfg.moe.placement, n)
+                if self._rank_loads is not None:
+                    rl = self._rank_loads + rl
+                rank_mm = PL.imbalance(rl)
+        return ServeMetrics(
+            ttft_s=float(ttfts.mean()),
+            itl_mean_s=float(itls.mean()),
+            itl_p99_s=float(np.percentile(itls, 99)),
+            output_tok_s=total / wall if wall > 0 else 0.0,
+            total_tokens=total,
+            ttft_p50_s=float(np.percentile(ttfts, 50)),
+            ttft_p95_s=float(np.percentile(ttfts, 95)),
+            ttft_p99_s=float(np.percentile(ttfts, 99)),
+            itl_p50_s=float(np.percentile(itls, 50)),
+            itl_p95_s=float(np.percentile(itls, 95)),
+            requests_completed=len(recs),
+            serve_steps=step_idx,
+            pages_peak=allocator.peak_live,
+            # dense baseline = un-rounded B x ceil(S_max/page): what a dense
+            # [B, S_max] cache would pin regardless of live occupancy
+            pages_dense_equiv=self.batch * pages_for_tokens(self.max_len,
+                                                            self.page_size),
+            per_request=recs,
             expert_heat=None if heat is None else heat.tolist(),
             heat_max_mean=heat_mm, rank_heat_max_mean=rank_mm,
             degraded_steps=self._degraded_steps,

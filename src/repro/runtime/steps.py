@@ -50,6 +50,25 @@ def serve_state_specs(cfg: ArchConfig, batch: int, kv_len: int, *, long=False):
     return state, dict(tokens=tokens)
 
 
+def paged_serve_state_specs(cfg: ArchConfig, batch: int, num_pages: int,
+                            page_size: int, max_pages: int):
+    """Specs for the continuous-batching paged decode step: state = per-layer
+    page pools; batch inputs = tokens + host-built page table / kv_lens /
+    active mask (fixed shapes — join/leave/recycle never retraces)."""
+    m = get_model(cfg)
+    if m.paged_decode_state_spec is None:
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no paged decode path")
+    state = m.paged_decode_state_spec(cfg, num_pages, page_size)
+    batch_specs = dict(
+        tokens=ParamSpec((batch, 1), jnp.int32, ("batch", None)),
+        page_tbl=ParamSpec((batch, max_pages), jnp.int32, ("batch", None)),
+        kv_lens=ParamSpec((batch,), jnp.int32, ("batch",)),
+        active=ParamSpec((batch,), jnp.int32, ("batch",)),
+    )
+    return state, batch_specs
+
+
 # --------------------------------------------------------------------------
 # step functions
 # --------------------------------------------------------------------------
@@ -89,6 +108,24 @@ def make_serve_step(cfg: ArchConfig, mesh):
 
     def serve_step(params, state, batch):
         logits, state = model.decode_step(params, state, batch, cfg, mesh)
+        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], state
+
+    return serve_step
+
+
+def make_paged_serve_step(cfg: ArchConfig, mesh):
+    """Greedy serve step over the paged decode path — same (params, state,
+    batch) -> (tokens, state) signature as make_serve_step, so the server's
+    compiled-step cache, placement re-jits, and fault recovery treat both
+    identically."""
+    model = get_model(cfg)
+    if model.paged_decode_step is None:
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no paged decode path")
+
+    def serve_step(params, state, batch):
+        logits, state = model.paged_decode_step(params, state, batch, cfg, mesh)
         next_tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1).astype(jnp.int32)
         return next_tok[:, None], state
 

@@ -201,6 +201,57 @@ def test_preemption_drains_and_checkpoints_decode_server(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+def test_continuous_batching_survives_kill_and_rejoin():
+    """PR 8 composition: rank 2 dies mid-CONTINUOUS-serve (every expert
+    replicated, so the shrink is zero-data-loss) and rejoins later. The
+    drain-free recovery happens at the same step boundary admission and page
+    alloc/free use, so (a) every per-request token stream is bitwise equal
+    to the fault-free run, and (b) the page tables come out uncorrupted —
+    all pages freed, reservations zero, every slot reset to the pad page."""
+    from repro.runtime.scheduler import Request
+    from repro.runtime.server import ContinuousDecodeServer
+
+    def reqs():
+        return [Request(0, np.array([3, 5, 7], np.int32), 6),
+                Request(1, np.array([11, 2], np.int32), 8),
+                Request(2, np.array([9, 9, 9, 9, 1], np.int32), 5,
+                        arrival_step=4),
+                Request(3, np.array([4], np.int32), 7, arrival_step=6)]
+
+    E = 8
+    cfg = _cfg_physical(PL.redundant_placement(E, 8, E))
+    mesh = _mesh8()
+    srv_a = ContinuousDecodeServer(cfg, batch=8, max_len=32, mesh=mesh,
+                                   page_size=4, num_redundant_experts=E)
+    srv_a.serve_requests(reqs())
+    base = {i: srv_a.reqsched.tokens_for(i) for i in range(4)}
+    srv_a.close()
+
+    inj = FaultInjector(8, kill={3: 2}, rejoin={8: 2})
+    srv_b = ContinuousDecodeServer(cfg, batch=8, max_len=32, mesh=mesh,
+                                   page_size=4, num_redundant_experts=E,
+                                   fault_injector=inj, miss_threshold=1)
+    m = srv_b.serve_requests(reqs())
+    sched = srv_b.reqsched
+    srv_b.close()
+
+    # (a) bitwise parity across the kill + rejoin transitions
+    for i in range(4):
+        np.testing.assert_array_equal(base[i], sched.tokens_for(i))
+    assert [e["kind"] for e in srv_b.recoveries] == ["shrink", "expand"]
+    assert all(e["lost_experts"] == [] and e["restored_from"] is None
+               for e in srv_b.recoveries)
+    assert m.recovery_count == 2 and m.degraded_steps > 0
+    assert m.requests_completed == 4
+
+    # (b) page-table integrity through both transitions
+    assert sched.done
+    assert sched.alloc.live_count == 0 and sched._reserved == 0
+    assert sched.alloc.free_count == sched.alloc.num_pages
+    assert np.all(sched._tbl == sched.alloc.pad_page)
+    assert np.all(sched._active == 0)
+
+
 # --------------------------------------------------------------------------
 # driver-level fault path: run_rebalancing / rebalancing_decode_loop
 # --------------------------------------------------------------------------
