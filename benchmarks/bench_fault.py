@@ -29,7 +29,8 @@ the full-width table. Wall-clock ratios are tracked, never asserted (CPU-
 host noise). Results land in results/benchmarks/fault.json and feed the
 ``fault`` section of BENCH_ll_kernels.json (schema v5) via
 benchmarks/run.py."""
-from benchmarks.common import ensure_devices, write_result, table
+from benchmarks.common import (ensure_devices, steady_mean, table,
+                               write_result)
 
 ensure_devices(8)
 
@@ -82,13 +83,6 @@ def _serve(fault_injector=None, miss_threshold=1, floor=False):
     return srv, toks, np.asarray(itls)
 
 
-def _steady(itls, lo, hi, skip_first=1):
-    """Mean ITL over [lo, hi), excluding the first ``skip_first`` steps
-    (they carry the post-transition recompile)."""
-    window = itls[lo + skip_first:hi]
-    return float(window.mean()) if window.size else float("nan")
-
-
 def _pod_kill_rows():
     """Correlated whole-pod kill under the min_replicas=2 fault-domain
     floor: ranks 4..7 die at ONE boundary, coalescing into a single shrink
@@ -118,9 +112,9 @@ def _pod_kill_rows():
     PL.validate_floor(degraded, 2, POD_DOMAINS)
     PL.validate_floor(expanded, 2, POD_DOMAINS)
 
-    healthy = _steady(itls, 1, KILL)
-    degraded_itl = _steady(itls, shrink["step"] + 1, expand["step"] + 1)
-    post = _steady(itls, expand["step"] + 1, STEPS)
+    healthy = steady_mean(itls, 1, KILL)
+    degraded_itl = steady_mean(itls, shrink["step"] + 1, expand["step"] + 1)
+    post = steady_mean(itls, expand["step"] + 1, STEPS)
     return [dict(
         scenario=f"pod{DEAD_POD}_kill",
         killed_ranks=dead_pod_ranks,
@@ -158,10 +152,10 @@ def main():
         steps_to_detect = shrink["step"] - KILL
         assert steps_to_detect == mt - 1, (shrink["step"], KILL, mt)
 
-        healthy = _steady(itls, 1, KILL)
+        healthy = steady_mean(itls, 1, KILL)
         deg_lo, deg_hi = shrink["step"] + 1, expand["step"] + 1
-        degraded_itl = _steady(itls, deg_lo, deg_hi)
-        post = _steady(itls, expand["step"] + 1, STEPS)
+        degraded_itl = steady_mean(itls, deg_lo, deg_hi)
+        post = steady_mean(itls, expand["step"] + 1, STEPS)
         rows.append(dict(
             miss_threshold=mt,
             steps_to_detect=steps_to_detect,
@@ -198,7 +192,7 @@ def main():
         config=dict(ranks=8, steps=STEPS, kill_step=KILL,
                     rejoin_step=REJOIN, dead_rank=DEAD_RANK,
                     replication="R=E (every expert on 2 ranks)",
-                    baseline_itl_ms=round(_steady(itls_ref, 1, STEPS) * 1e3,
+                    baseline_itl_ms=round(steady_mean(itls_ref, 1, STEPS) * 1e3,
                                           2)),
         rows=rows,
         pod_kill=dict(

@@ -28,7 +28,7 @@ gap x its own measured mean ITL), so the comparison is host-noise-free in
 structure. The paged-vs-dense page accounting (peak pages <= dense B x
 S_max equivalent) is asserted in-bench; latency ratios are tracked, not
 asserted."""
-from benchmarks.common import ensure_devices, write_result, table
+from benchmarks.common import ensure_devices, pct_ms, table, write_result
 
 ensure_devices(8)
 
@@ -118,22 +118,19 @@ def bench_continuous(n_req=16, rate=0.4, max_new=16, seed=0):
     wait_steps = arrivals.max() - arrivals
     ttfts_fix = wait_steps * step_s + ttft_fix
 
-    def pct(a, q):
-        return round(float(np.percentile(np.asarray(a), q)) * 1e3, 2)
-
     ttfts_cont = [r["ttft_s"] for r in m.per_request]
     itls_cont = np.concatenate(
         [r["itl_s"] for r in m.per_request if r["itl_s"]])
     rows = [
         dict(engine="continuous (paged KV)",
-             ttft_p50_ms=pct(ttfts_cont, 50), ttft_p95_ms=pct(ttfts_cont, 95),
-             ttft_p99_ms=pct(ttfts_cont, 99), itl_p50_ms=pct(itls_cont, 50),
-             itl_p95_ms=pct(itls_cont, 95), itl_p99_ms=pct(itls_cont, 99),
+             ttft_p50_ms=pct_ms(ttfts_cont, 50), ttft_p95_ms=pct_ms(ttfts_cont, 95),
+             ttft_p99_ms=pct_ms(ttfts_cont, 99), itl_p50_ms=pct_ms(itls_cont, 50),
+             itl_p95_ms=pct_ms(itls_cont, 95), itl_p99_ms=pct_ms(itls_cont, 99),
              output_tok_s=round(m.output_tok_s, 1), steps=m.serve_steps),
         dict(engine="fixed batch (dense KV)",
-             ttft_p50_ms=pct(ttfts_fix, 50), ttft_p95_ms=pct(ttfts_fix, 95),
-             ttft_p99_ms=pct(ttfts_fix, 99), itl_p50_ms=pct(itls_fix, 50),
-             itl_p95_ms=pct(itls_fix, 95), itl_p99_ms=pct(itls_fix, 99),
+             ttft_p50_ms=pct_ms(ttfts_fix, 50), ttft_p95_ms=pct_ms(ttfts_fix, 95),
+             ttft_p99_ms=pct_ms(ttfts_fix, 99), itl_p50_ms=pct_ms(itls_fix, 50),
+             itl_p95_ms=pct_ms(itls_fix, 95), itl_p99_ms=pct_ms(itls_fix, 99),
              output_tok_s=round(n_req * max_new
                                 / (ttft_fix + float(np.sum(itls_fix))), 1),
              steps=max_new),

@@ -56,6 +56,26 @@ def interleaved_best(fns, args, iters=5):
     return [float(np.min(t)) for t in times]
 
 
+def pct_ms(a, q) -> float:
+    """q-th percentile of a seconds array, in ms (2 decimals) — the serving
+    benches' shared percentile convention."""
+    import numpy as np
+    return round(float(np.percentile(np.asarray(a), q)) * 1e3, 2)
+
+
+def pctiles_ms(a, qs=(50, 95, 99)) -> dict:
+    """{'p50_ms': ..., ...} percentile summary of a seconds array."""
+    return {f"p{q}_ms": pct_ms(a, q) for q in qs}
+
+
+def steady_mean(itls, lo, hi, skip_first=1) -> float:
+    """Mean ITL over [lo, hi), excluding the first ``skip_first`` steps
+    (they carry the post-transition recompile)."""
+    import numpy as np
+    window = np.asarray(itls)[lo + skip_first:hi]
+    return float(window.mean()) if window.size else float("nan")
+
+
 def write_result(name: str, payload: dict):
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))

@@ -16,22 +16,27 @@
               (TTFT/ITL percentiles, paged-KV page accounting)
   fault     — elastic recovery under injected rank kill/rejoin:
               steps-to-detect, shrink/expand latency, degraded throughput
+  scenarios — scenario harness (telemetry on): Poisson/bursty arrivals,
+              drifting Zipf skew vs the EPLB rebalancer, context-length
+              sweep to the page-pool cliff, concurrency ramp — acceptance
+              asserted in-bench, Chrome-trace/JSONL artifacts emitted
 
 Each sub-benchmark needs its own fake-device count, so they run as separate
 processes; results land in results/benchmarks/*.json. After the ll and
 slotmap benchmarks run, their results are folded into ``BENCH_ll_kernels.json``
 at the repo root — the machine-readable perf trajectory (schema
-bench_ll_kernels/v6: handle-create / dispatch / combine phase times,
+bench_ll_kernels/v7: handle-create / dispatch / combine phase times,
 recv-unpack kernel timings, slot-map engine comparison, the decode-pipeline
 steady-state rows, the modes section — LL/HT/baseline crossover plus the
 prefill-pipeline steady-state rows: chunked vs monolithic hierarchical HT
 and hier vs flat through the staged driver — the placement section:
 the EPLB skewed-routing sweep, contiguous vs rebalanced vs redundant —
 the fault section: elastic kill/rejoin recovery rows, validated in-bench —
-and, new in v6, the serving section's ``continuous`` rows: continuous
-batching vs gang-scheduled fixed batching under Poisson arrivals with
-per-request TTFT/ITL p50/p95/p99, plus the paged-KV page accounting in the
-memory payload) tracked across PRs.
+the serving section's ``continuous`` rows (v6): continuous batching vs
+gang-scheduled fixed batching under Poisson arrivals with per-request
+TTFT/ITL p50/p95/p99 — and, new in v7, the ``scenarios`` section: the
+scenario-harness rows with their in-bench acceptance bars and pointers to
+the emitted trace/time-series artifacts) tracked across PRs.
 """
 import argparse
 import json
@@ -40,7 +45,7 @@ import subprocess
 import sys
 
 BENCHES = ["memory", "ll", "slotmap", "decode", "modes", "placement",
-           "serving", "fault"]
+           "serving", "fault", "scenarios"]
 MODULES = {
     "memory": "benchmarks.bench_memory",
     "ll": "benchmarks.bench_ll_kernels",
@@ -50,6 +55,7 @@ MODULES = {
     "placement": "benchmarks.bench_imbalance",
     "serving": "benchmarks.bench_serving",
     "fault": "benchmarks.bench_fault",
+    "scenarios": "benchmarks.scenarios",
 }
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -72,6 +78,7 @@ def emit_bench_ll_kernels() -> bool:
     src_pl = RESULTS / "imbalance.json"
     src_sv = RESULTS / "serving.json"
     src_ft = RESULTS / "fault.json"
+    src_sc = RESULTS / "scenarios.json"
     if not (src_ll.exists() and src_sm.exists()):
         return False
     ll = json.loads(src_ll.read_text())
@@ -81,6 +88,7 @@ def emit_bench_ll_kernels() -> bool:
     pl = json.loads(src_pl.read_text()) if src_pl.exists() else None
     sv = json.loads(src_sv.read_text()) if src_sv.exists() else None
     ft = json.loads(src_ft.read_text()) if src_ft.exists() else None
+    sc = json.loads(src_sc.read_text()) if src_sc.exists() else None
 
     def stamp(p):
         return datetime.datetime.fromtimestamp(p.stat().st_mtime).isoformat(
@@ -97,8 +105,10 @@ def emit_bench_ll_kernels() -> bool:
         sources["serving"] = stamp(src_sv)
     if ft is not None:
         sources["fault"] = stamp(src_ft)
+    if sc is not None:
+        sources["scenarios"] = stamp(src_sc)
     payload = {
-        "schema": "bench_ll_kernels/v6",
+        "schema": "bench_ll_kernels/v7",
         "sources": sources,
         "config": ll.get("config", {}),
         "phases": ll.get("rows", []),       # handle/dispatch/combine per layout
@@ -127,6 +137,12 @@ def emit_bench_ll_kernels() -> bool:
         # shrink/expand latency, degraded-mode throughput (token parity and
         # the zero-slot degraded placement are ASSERTED inside the bench)
         payload["fault"] = ft
+    if sc is not None:
+        # v7: scenario-harness rows — Poisson/bursty/drifting-skew/cliff/
+        # ramp through the real engines with telemetry on; the acceptance
+        # bars (imbalance drop after rebalance, loud cliff rejection,
+        # bitwise ramp parity) are ASSERTED inside the bench
+        payload["scenarios"] = sc
     (ROOT / "BENCH_ll_kernels.json").write_text(json.dumps(payload, indent=1))
     print(f"wrote {ROOT / 'BENCH_ll_kernels.json'}")
     return True

@@ -1,0 +1,16 @@
+"""Scenario-based serving harness (PR 9): drives the continuous-batching
+engine and the EPLB serving loop through realistic traffic shapes — Poisson
+and bursty arrivals, Zipf routing skew that DRIFTS over time, context-length
+sweeps toward the page-pool cliff, and concurrency ramps — with telemetry on
+(runtime/telemetry.py), emitting machine-readable rows plus Chrome-trace /
+JSONL time-series artifacts into the BENCH schema-v7 ``scenarios`` section.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only scenarios`` (or
+``python -m benchmarks.scenarios`` directly). Acceptance bars live INSIDE
+each scenario (e.g. drifting skew: the post-rebalance imbalance ratio must
+drop; cliff sweep: pool exhaustion raises loudly before any corruption), so
+the CI smoke leg trips on regression.
+
+This package's ``__init__`` stays jax-free: the entrypoint must call
+``ensure_devices`` BEFORE anything imports jax.
+"""

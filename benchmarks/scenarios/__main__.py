@@ -1,0 +1,8 @@
+from benchmarks.common import ensure_devices
+
+ensure_devices(8)
+
+from benchmarks.scenarios.core import main   # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Arrival-process generators for the scenario harness. Numpy-only (no jax)
+so schedules can be built — and unit-tested — before device bootstrap."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """[n] int step indices of a Poisson process with ``rate`` arrivals per
+    decode step, shifted so the first request lands at step 0."""
+    rng = np.random.RandomState(seed)
+    arr = np.floor(np.cumsum(rng.exponential(1.0 / rate, n))).astype(int)
+    return arr - arr[0]
+
+
+def bursty_arrivals(n_bursts: int, burst_size: int, gap: int) -> np.ndarray:
+    """[n_bursts * burst_size] step indices: every ``gap`` steps, a burst of
+    ``burst_size`` simultaneous arrivals — the backlog-forming antithesis of
+    the Poisson stream."""
+    return np.repeat(np.arange(n_bursts) * gap, burst_size)
+
+
+def zipf_prompt_lengths(n: int, lo: int, hi: int, a: float = 1.3,
+                        seed: int = 0) -> np.ndarray:
+    """[n] prompt lengths in [lo, hi], Zipf-skewed toward ``lo`` (most
+    requests short, a heavy tail of long ones — the serving-trace shape)."""
+    rng = np.random.RandomState(seed)
+    raw = rng.zipf(a, n)
+    return np.clip(lo + (raw - 1), lo, hi).astype(int)

@@ -23,7 +23,8 @@ from repro.runtime.server import DecodeServer
 BATCH, PROMPT, GEN = 16, 8, 48
 
 
-def run(mode: str, layout: str = "nccl_ep", adopt_once: bool = False):
+def run(mode: str, layout: str = "nccl_ep", adopt_once: bool = False,
+        trace: bool = False):
     cfg = get_smoke("dbrx-132b")
     moe = dataclasses.replace(cfg.moe, ep_mode=mode, ll_layout=layout)
     kw = {}
@@ -35,6 +36,12 @@ def run(mode: str, layout: str = "nccl_ep", adopt_once: bool = False):
         moe = dataclasses.replace(moe, track_expert_heat=True,
                                   params_physical=True)
         kw = dict(rebalance_every=16, num_redundant_experts=8)
+    if trace:
+        # telemetry (docs/DESIGN.md §11): spans at the existing host-side
+        # step boundaries, exported as Chrome-trace JSON — open the printed
+        # file in Perfetto (ui.perfetto.dev) or chrome://tracing
+        from repro.runtime.telemetry import TimeSeries, Tracer
+        kw.update(tracer=Tracer(), series=TimeSeries())
     cfg = dataclasses.replace(cfg, moe=moe)
     mesh = jax.make_mesh((8,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
@@ -48,6 +55,12 @@ def run(mode: str, layout: str = "nccl_ep", adopt_once: bool = False):
     print(f"  backend={tag:22s} out_tok/s={m.output_tok_s:8.1f} "
           f"ttft={m.ttft_s*1e3:6.1f}ms itl={m.itl_mean_s*1e3:5.2f}ms "
           f"p99={m.itl_p99_s*1e3:5.2f}ms{extra}")
+    if trace:
+        import pathlib
+        out = pathlib.Path("results") / "serve_decode_trace.json"
+        srv.tracer.write_chrome_trace(out)
+        spans = sum(r["count"] for r in m.timeline.values())
+        print(f"  wrote {out} ({spans} events; open in ui.perfetto.dev)")
     return m
 
 
@@ -57,4 +70,5 @@ if __name__ == "__main__":
     run("ll", "nccl_ep")     # the paper's optimized LL layout
     run("ll", "deepep")      # the DeepEP layout it improves on
     run("baseline")          # Megatron-style AllToAll dispatcher
-    run("ll", "nccl_ep", adopt_once=True)   # EPLB adopt-once rebalancing
+    # EPLB adopt-once rebalancing, telemetry on -> Perfetto-readable trace
+    run("ll", "nccl_ep", adopt_once=True, trace=True)

@@ -41,6 +41,7 @@ wire heat -> policy -> live re-plan on top of this module.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import zlib
@@ -1016,7 +1017,8 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
                     donate_params: bool = True, fault_injector=None,
                     min_replicas: int = 1,
                     fault_domains: FaultDomains | None = None,
-                    max_slots_per_rank: int | None = None):
+                    max_slots_per_rank: int | None = None,
+                    tracer=None, series=None):
     """Shared skeleton of the host-level EPLB drivers (`runtime/decode.py`,
     `runtime/prefill.py`): run each item through a per-placement compiled
     fn, fold its heat, and advance the placement at every ``advance_every``
@@ -1058,7 +1060,14 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
     every adopted full-width placement then satisfies the floor and the
     shrink-feasibility precheck, which is what makes the injector path
     recover from ANY single correlated failure without hitting the
-    lost-experts raise above."""
+    lost-experts raise above.
+
+    Telemetry (``tracer`` / ``series``, runtime/telemetry.py): each advance
+    boundary lands as a ``rebalance`` span (params rebind nested as
+    ``adopt``), injected faults as instants, and — with ``series`` — a
+    per-window row carrying the imbalance ratio under the placement the
+    window RAN under vs under the newly adopted one. Host-side only: the
+    heat is already on the host at every boundary."""
     import dataclasses as _dc
 
     from repro.core.group import ep_create_group
@@ -1085,43 +1094,63 @@ def run_rebalancing(base_cfg, make_fn, items, *, advance_every: int,
         out, heat = fns[pl](item)
         outs.append(out)
         placements.append(pl)
+        window = np.asarray(heat, np.float64)
         sched.observe(heat)
         fault = (fault_injector.advance(i) if fault_injector is not None
                  else None)
         if fault:
+            if tracer is not None:
+                tracer.instant("fault_detected", step=i,
+                               died=list(fault.died),
+                               rejoined=list(fault.rejoined))
             sched.set_alive(tuple(r for r in range(ep_size)
                                   if fault_injector.is_alive(r)))
         if (fault or (i + 1) % advance_every == 0) and i + 1 < len(items):
-            new_pl = sched.advance()
-            if new_pl is not pl and params is not None:
-                from repro.checkpoint.store import rebind_expert_leaves
-                src = pl
-                if fault and fault.died:
-                    # shrink: collapse only through surviving replicas — a
-                    # dead rank's slot rows are gone on a real pod
-                    src_live = (pl if pl is not None else
-                                identity_placement(base_cfg.num_experts,
-                                                   ep_size))
-                    lost = lost_experts(src_live, sched.alive)
-                    if lost:
-                        import warnings
+            with (tracer.span("rebalance", step=i) if tracer is not None
+                  else contextlib.nullcontext()):
+                new_pl = sched.advance()
+                if series is not None:
+                    # the window's imbalance as experienced (old placement)
+                    # vs what the freshly adopted table would have given it
+                    series.record(
+                        kind="rebalance", step=i,
+                        window_tokens=float(window.sum()),
+                        imbalance=imbalance(rank_loads(window, pl, ep_size)),
+                        imbalance_after=imbalance(
+                            rank_loads(window, new_pl, ep_size)),
+                        placement_changed=new_pl is not pl)
+                if new_pl is not pl and params is not None:
+                    from repro.checkpoint.store import rebind_expert_leaves
+                    src = pl
+                    if fault and fault.died:
+                        # shrink: collapse only through surviving replicas —
+                        # a dead rank's slot rows are gone on a real pod
+                        src_live = (pl if pl is not None else
+                                    identity_placement(base_cfg.num_experts,
+                                                       ep_size))
+                        lost = lost_experts(src_live, sched.alive)
+                        if lost:
+                            import warnings
 
-                        from repro.runtime.fault import DegradedRecovery
-                        warnings.warn(DegradedRecovery(
-                            f"rank death {list(fault.died)} lost every "
-                            f"replica of experts {list(lost)[:8]} — "
-                            "zero-data-loss shrink impossible; restore from "
-                            "checkpoint"))
-                        raise ValueError(
-                            f"experts {list(lost)[:8]} unrecoverable from "
-                            "surviving ranks and run_rebalancing has no "
-                            "checkpoint fallback — use DecodeServer "
-                            "(ckpt_dir=...) or re-init the lost weights")
-                    src = mask_placement(src_live, sched.alive)
-                params = rebind_expert_leaves(
-                    params, expert_keys, src_placement=src,
-                    dst_placement=new_pl, donate=donate_params)
-            pl = new_pl
+                            from repro.runtime.fault import DegradedRecovery
+                            warnings.warn(DegradedRecovery(
+                                f"rank death {list(fault.died)} lost every "
+                                f"replica of experts {list(lost)[:8]} — "
+                                "zero-data-loss shrink impossible; restore "
+                                "from checkpoint"))
+                            raise ValueError(
+                                f"experts {list(lost)[:8]} unrecoverable "
+                                "from surviving ranks and run_rebalancing "
+                                "has no checkpoint fallback — use "
+                                "DecodeServer (ckpt_dir=...) or re-init the "
+                                "lost weights")
+                        src = mask_placement(src_live, sched.alive)
+                    with (tracer.span("adopt", step=i) if tracer is not None
+                          else contextlib.nullcontext()):
+                        params = rebind_expert_leaves(
+                            params, expert_keys, src_placement=src,
+                            dst_placement=new_pl, donate=donate_params)
+                pl = new_pl
     return outs, placements
 
 

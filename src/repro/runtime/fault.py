@@ -84,7 +84,10 @@ class StragglerWatchdog:
     (thermal throttling, a degraded link), so the EMA re-bases to the mean
     of that outlier run and the flag clears instead of firing forever.
     ``flagged``/``rebased`` are the counters drivers surface
-    (``ServeMetrics.stragglers_flagged``, Trainer metrics log)."""
+    (``ServeMetrics.stragglers_flagged``, Trainer metrics log); with a
+    ``tracer`` attached, each flag/rebase additionally lands on the step
+    timeline as an instant event (``straggler`` / ``watchdog_rebase``) so
+    the trace shows *when* the outlier run happened, not just the total."""
     factor: float = 2.5
     decay: float = 0.9
     rebase_after: int = 5
@@ -93,6 +96,7 @@ class StragglerWatchdog:
     rebased: int = 0
     consecutive: int = 0
     _outlier_sum: float = 0.0
+    tracer: object | None = None
 
     def observe(self, step_time: float) -> bool:
         if self.ema is None:
@@ -103,12 +107,18 @@ class StragglerWatchdog:
             self.flagged += 1
             self.consecutive += 1
             self._outlier_sum += step_time
+            if self.tracer is not None:
+                self.tracer.instant("straggler", step_time_s=step_time,
+                                    ema_s=self.ema, consecutive=self.consecutive)
             if self.consecutive >= self.rebase_after:
                 # persistent new steady state: re-base on the outlier run
                 self.ema = self._outlier_sum / self.consecutive
                 self.rebased += 1
                 self.consecutive = 0
                 self._outlier_sum = 0.0
+                if self.tracer is not None:
+                    self.tracer.instant("watchdog_rebase", new_ema_s=self.ema,
+                                        rebased=self.rebased)
         else:
             self.consecutive = 0
             self._outlier_sum = 0.0

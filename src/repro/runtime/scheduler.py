@@ -76,10 +76,11 @@ class ContinuousScheduler:
     run at the step boundary — never mid-step."""
 
     def __init__(self, requests, max_concurrency: int, max_pages: int,
-                 allocator: PageAllocator):
+                 allocator: PageAllocator, tracer=None):
         self.B = int(max_concurrency)
         self.max_pages = int(max_pages)
         self.alloc = allocator
+        self.tracer = tracer
         page = allocator.page_size
         for r in requests:
             need = pages_for_tokens(r.total_tokens, page)
@@ -143,6 +144,9 @@ class ContinuousScheduler:
             self._reserved += need
             self._tbl[i, :] = self.alloc.pad_page
             self._lens[i] = 0
+            if self.tracer is not None:
+                self.tracer.instant("admit", rid=r.rid, step=step, slot=i,
+                                    queued=len(self.queue))
         for i, s in enumerate(self.slots):
             if s is None:
                 self._active[i] = 0
@@ -191,6 +195,9 @@ class ContinuousScheduler:
                 self._reserved -= self._outstanding(s)
                 self.finished[s.req.rid] = s
                 completed.append(s.req.rid)
+                if self.tracer is not None:
+                    self.tracer.instant("complete", rid=s.req.rid,
+                                        tokens=len(s.generated))
                 self.slots[i] = None
                 self._tbl[i, :] = self.alloc.pad_page
                 self._lens[i] = 0

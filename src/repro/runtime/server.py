@@ -77,6 +77,7 @@ from repro.runtime.fault import (DegradedRecovery, FaultDetector,
                                  PreemptionGuard, StragglerWatchdog)
 from repro.runtime.steps import (make_paged_serve_step, make_serve_step,
                                  paged_serve_state_specs, serve_state_specs)
+from repro.runtime.telemetry import NULL_SERIES, NULL_TRACER, json_safe
 
 
 @dataclasses.dataclass
@@ -115,9 +116,16 @@ class ServeMetrics:
     alive_ranks: list | None = None        # EP ranks alive at end of serve
     stragglers_flagged: int = 0            # watchdog outlier ITL steps
     preempted: bool = False                # SIGTERM drain-and-checkpoint exit
+    # --- telemetry (runtime/telemetry.py; None when tracing is off) ---
+    timeline: dict | None = None           # Tracer.summary(): per-span count
+    #                                        + total seconds aggregates
+    series: list | None = None             # TimeSeries rows (per-window and,
+    #                                        continuous engine, per-step)
 
     def as_dict(self):
-        return dataclasses.asdict(self)
+        # json_safe: the telemetry rows (and any caller-added fields) may
+        # carry numpy scalars — as_dict feeds json.dumps in benches/CI
+        return json_safe(dataclasses.asdict(self))
 
 
 class DecodeServer:
@@ -127,9 +135,20 @@ class DecodeServer:
                  fault_injector=None, fault_detector: FaultDetector | None = None,
                  miss_threshold: int = 2, ckpt_dir: str | None = None,
                  min_replicas: int = 1, fault_domains=None,
-                 max_slots_per_rank: int | None = None):
+                 max_slots_per_rank: int | None = None,
+                 tracer=None, series=None, heat_decay: float = 0.0):
         self.cfg, self.mesh, self.batch = cfg, mesh, batch
         self.pipeline_depth = max(int(pipeline_depth), 1)
+        # telemetry (runtime/telemetry.py): host-side, boundary-scoped only —
+        # spans/rows wrap code that ALREADY runs at step boundaries, so
+        # tracing on vs off is bitwise-identical on the token stream (pinned
+        # by tests/test_telemetry.py). None -> shared no-op singletons.
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.series = NULL_SERIES if series is None else series
+        self._win_itls: list[float] = []    # ITLs since the last window row
+        # heat decay for the rebalancer's tracker: >0 fades old windows so
+        # the placement tracks DRIFTING load instead of the all-time sum
+        self.heat_decay = float(heat_decay)
         # EPLB: swap expert placements every `rebalance_every` decode steps,
         # driven by the tracked heat (requires MoESpec.track_expert_heat)
         self.rebalance_every = int(rebalance_every)
@@ -169,7 +188,8 @@ class DecodeServer:
         self._ckpt_restores = 0
         self.preempted = False
         self.guard = PreemptionGuard()      # SIGTERM/SIGINT -> drain + ckpt
-        self.watchdog = StragglerWatchdog()
+        self.watchdog = StragglerWatchdog(
+            tracer=self.tracer if self.tracer.enabled else None)
         n = self._ep_size()
         if (fault_injector is not None or fault_detector is not None):
             if not (cfg.moe and n > 1):
@@ -225,6 +245,7 @@ class DecodeServer:
                 self._sched = PL.RebalanceScheduler(
                     cfg.moe.num_experts, n,
                     num_redundant=self.num_redundant_experts,
+                    decay=self.heat_decay,
                     initial=cfg.moe.placement,
                     min_replicas=self.min_replicas,
                     domains=self.fault_domains,
@@ -347,6 +368,31 @@ class DecodeServer:
             return PL.domains_from_geometry(n, inner)
         return PL.trivial_domains(n)
 
+    def _record_window(self, step_idx: int, kind: str, dev, rl):
+        """One time-series row for a heat window that just ended (rebalance
+        or recovery boundary). Strictly host-side: ``dev``/``rl`` are the
+        host arrays the boundary ALREADY drained — recording never adds a
+        device sync. Drains the per-window ITL buffer either way."""
+        imb = None if rl is None else PL.imbalance(rl)
+        if self.tracer.enabled and imb is not None:
+            self.tracer.counter("rank_imbalance", float(imb))
+        itls = self._win_itls
+        self._win_itls = []
+        if not self.series.enabled:
+            return
+        self.series.record(
+            kind=kind, step=step_idx,
+            window_tokens=None if dev is None else float(dev.sum()),
+            heat_max_mean=None if dev is None else PL.imbalance(dev),
+            imbalance=imb,
+            rank_loads=None if rl is None else [float(x) for x in rl],
+            itl_mean_s=float(np.mean(itls)) if itls else None,
+            alive=(len(self._detector.alive)
+                   if self._detector is not None else None),
+            stragglers_flagged=self.watchdog.flagged,
+            watchdog_rebased=self.watchdog.rebased,
+            placements_adopted=len(self.placements))
+
     def _maybe_rebalance(self, step_idx: int):
         """Every ``rebalance_every`` steps: drain the device heat counter
         into the host-side float64 totals, fold it into the shared
@@ -362,32 +408,42 @@ class DecodeServer:
         dev = self._device_heat()
         if dev is None:
             return
-        self._sched.observe(dev)
-        self._heat_drained = (dev if self._heat_drained is None
-                              else self._heat_drained + dev)
-        # attribute this window's per-rank load to the placement it actually
-        # ran under, BEFORE any swap — rank_heat_max_mean then reports the
-        # imbalance experienced, not what the final placement would have had
-        rl = PL.rank_loads(dev, self.cfg.moe.placement, self._sched.num_ranks)
-        self._rank_loads = rl if self._rank_loads is None else self._rank_loads + rl
-        self.state["expert_heat"] = jnp.zeros_like(self.state["expert_heat"])
-        pl = self._sched.advance()
-        old = self.cfg.moe.placement
-        if pl is old:
-            return                  # unchanged table: keep the compiled step
-        self.cfg = dataclasses.replace(
-            self.cfg, moe=dataclasses.replace(self.cfg.moe, placement=pl))
-        self.placements.append(pl)
-        if self.params_physical:
-            # adopt-once: rebind the physical expert weights from the old
-            # placement's slot order to the new one, HOST-LEVEL and exactly
-            # once per adoption (old buffers donated — peak memory ~one set
-            # of expert weights). The re-jitted step then runs with zero
-            # per-step expansion cost.
-            self.params = adopt_expert_params(
-                self.params, self.model.params_spec(self._logical_cfg()),
-                old, pl)
-        self.step = self._compiled_step()
+        with self.tracer.span("rebalance", step=step_idx):
+            self._sched.observe(dev)
+            self._heat_drained = (dev if self._heat_drained is None
+                                  else self._heat_drained + dev)
+            # attribute this window's per-rank load to the placement it
+            # actually ran under, BEFORE any swap — rank_heat_max_mean then
+            # reports the imbalance experienced, not what the final
+            # placement would have had
+            rl = PL.rank_loads(dev, self.cfg.moe.placement,
+                               self._sched.num_ranks)
+            self._rank_loads = (rl if self._rank_loads is None
+                                else self._rank_loads + rl)
+            self._record_window(step_idx, "rebalance", dev, rl)
+            self.state["expert_heat"] = jnp.zeros_like(
+                self.state["expert_heat"])
+            pl = self._sched.advance()
+            old = self.cfg.moe.placement
+            if pl is old:
+                return              # unchanged table: keep the compiled step
+            self.cfg = dataclasses.replace(
+                self.cfg, moe=dataclasses.replace(self.cfg.moe, placement=pl))
+            self.placements.append(pl)
+            self.tracer.instant("placement_swap", step=step_idx,
+                                version=len(self.placements))
+            if self.params_physical:
+                # adopt-once: rebind the physical expert weights from the
+                # old placement's slot order to the new one, HOST-LEVEL and
+                # exactly once per adoption (old buffers donated — peak
+                # memory ~one set of expert weights). The re-jitted step
+                # then runs with zero per-step expansion cost.
+                with self.tracer.span("adopt", step=step_idx):
+                    self.params = adopt_expert_params(
+                        self.params,
+                        self.model.params_spec(self._logical_cfg()),
+                        old, pl)
+            self.step = self._compiled_step()
 
     # ---- elastic fault tolerance: detect -> shrink/expand -> re-adopt ----
 
@@ -409,21 +465,24 @@ class DecodeServer:
         adoption, not one per dead rank."""
         if self._detector is None:
             return None
-        if self._injector is not None:
-            self._injector.advance(step_idx)
-            for r in range(self._detector.num_ranks):
-                if self._injector.is_alive(r):
-                    self._detector.heartbeat(r, step_idx)
-        report = self._detector.poll(step_idx)
-        if not report:
+        with self.tracer.span("fault_poll"):
+            if self._injector is not None:
+                self._injector.advance(step_idx)
+                for r in range(self._detector.num_ranks):
+                    if self._injector.is_alive(r):
+                        self._detector.heartbeat(r, step_idx)
+            merged = self._detector.poll(step_idx)
+            while merged:
+                more = self._detector.poll(step_idx)
+                if not more:
+                    break
+                merged = merged.merge(more)
+        if not merged:
             return None
-        merged = report
-        while True:
-            more = self._detector.poll(step_idx)
-            if not more:
-                break
-            merged = merged.merge(more)
-        return merged if merged else None
+        self.tracer.instant("fault_detected", step=step_idx,
+                            died=list(merged.died),
+                            rejoined=list(merged.rejoined))
+        return merged
 
     def _recover(self, step_idx: int, report):
         """One shrink or expand transition (docs/DESIGN.md §9). Drains the
@@ -439,78 +498,104 @@ class DecodeServer:
         only the placement swap happens. The placement-salted routing hash
         force-rebuilds handles exactly once per transition."""
         t0 = time.perf_counter()
-        dev = self._device_heat()
-        if dev is not None:
-            self._sched.observe(dev)
-            self._heat_drained = (dev if self._heat_drained is None
-                                  else self._heat_drained + dev)
-            rl = PL.rank_loads(dev, self.cfg.moe.placement,
-                               self._sched.num_ranks)
-            self._rank_loads = (rl if self._rank_loads is None
-                                else self._rank_loads + rl)
-            self.state["expert_heat"] = jnp.zeros_like(
-                self.state["expert_heat"])
-        self._sched.set_alive(self._detector.alive)
-        old = self.cfg.moe.placement
-        pl = self._sched.advance()
-        event = dict(step=step_idx,
-                     kind="shrink" if report.died else "expand",
-                     died=list(report.died), rejoined=list(report.rejoined),
-                     alive=list(self._detector.alive),
-                     lost_experts=[], restored_from=None,
-                     placement_changed=pl is not old)
-        if pl is not old:
-            if self.params_physical:
-                src_live = (old if old is not None else
-                            PL.identity_placement(self.cfg.moe.num_experts,
-                                                  self._sched.num_ranks))
-                lost = (PL.lost_experts(src_live, self._sched.alive)
-                        if report.died else ())
-                if lost:
-                    # the dead ranks held every replica of these experts:
-                    # their physical slot rows are unavailable on a real
-                    # pod, so zero-data-loss recovery is impossible
-                    event["lost_experts"] = list(lost)
-                    ck = (latest_step(self.ckpt_dir)
-                          if self.ckpt_dir is not None else None)
-                    warnings.warn(DegradedRecovery(
-                        f"rank death {list(report.died)} lost every replica "
-                        f"of experts {list(lost)[:8]} — zero-data-loss "
-                        "shrink impossible; "
-                        + (f"restoring from checkpoint step {ck}"
-                           if ck is not None else
-                           f"no checkpoint available (ckpt_dir="
-                           f"{self.ckpt_dir!r})")))
-                    if ck is None:
-                        # record the failed transition before bailing so
-                        # post-mortems see what died and what was lost
-                        event["latency_s"] = time.perf_counter() - t0
-                        self.recoveries.append(event)
-                        raise RuntimeError(
-                            f"experts {list(lost)[:8]} unrecoverable from "
-                            "surviving ranks and no checkpoint to restore "
-                            f"from (ckpt_dir={self.ckpt_dir!r}) — pass "
-                            "ckpt_dir= with a saved checkpoint or add "
-                            "redundant replicas (num_redundant_experts)")
-                    new_cfg = dataclasses.replace(
-                        self.cfg, moe=dataclasses.replace(self.cfg.moe,
-                                                          placement=pl))
-                    self.params, _ = restore_checkpoint(
-                        self.ckpt_dir, ck, self.model.params_spec(new_cfg),
-                        mesh=self.mesh, placement=pl)
-                    event["restored_from"] = ck
-                    self._ckpt_restores += 1
-                else:
-                    src = (PL.mask_placement(src_live, self._sched.alive)
-                           if report.died else old)
-                    self.params = adopt_expert_params(
-                        self.params,
-                        self.model.params_spec(self._logical_cfg()),
-                        src, pl)
-            self.cfg = dataclasses.replace(
-                self.cfg, moe=dataclasses.replace(self.cfg.moe, placement=pl))
-            self.placements.append(pl)
-            self.step = self._compiled_step()
+        kind = "shrink" if report.died else "expand"
+        # per-transition phase durations (satellite of the opaque
+        # recovery_latency_s total): repack = scheduler narrow/widen +
+        # placement build; adopt = masked weight rebind; restore = the
+        # checkpoint fallback. Each also lands as a nested tracer span.
+        phases: dict[str, float] = {}
+        with self.tracer.span(f"recover:{kind}", step=step_idx,
+                              died=list(report.died),
+                              rejoined=list(report.rejoined)):
+            dev = self._device_heat()
+            if dev is not None:
+                self._sched.observe(dev)
+                self._heat_drained = (dev if self._heat_drained is None
+                                      else self._heat_drained + dev)
+                rl = PL.rank_loads(dev, self.cfg.moe.placement,
+                                   self._sched.num_ranks)
+                self._rank_loads = (rl if self._rank_loads is None
+                                    else self._rank_loads + rl)
+                self._record_window(step_idx, f"recover:{kind}", dev, rl)
+                self.state["expert_heat"] = jnp.zeros_like(
+                    self.state["expert_heat"])
+            tp = time.perf_counter()
+            with self.tracer.span("recover:repack"):
+                self._sched.set_alive(self._detector.alive)
+                old = self.cfg.moe.placement
+                pl = self._sched.advance()
+            phases["repack_s"] = time.perf_counter() - tp
+            event = dict(step=step_idx, kind=kind,
+                         died=list(report.died),
+                         rejoined=list(report.rejoined),
+                         alive=list(self._detector.alive),
+                         lost_experts=[], restored_from=None,
+                         placement_changed=pl is not old, phases=phases)
+            if pl is not old:
+                if self.params_physical:
+                    src_live = (old if old is not None else
+                                PL.identity_placement(
+                                    self.cfg.moe.num_experts,
+                                    self._sched.num_ranks))
+                    lost = (PL.lost_experts(src_live, self._sched.alive)
+                            if report.died else ())
+                    if lost:
+                        # the dead ranks held every replica of these experts:
+                        # their physical slot rows are unavailable on a real
+                        # pod, so zero-data-loss recovery is impossible
+                        event["lost_experts"] = list(lost)
+                        ck = (latest_step(self.ckpt_dir)
+                              if self.ckpt_dir is not None else None)
+                        warnings.warn(DegradedRecovery(
+                            f"rank death {list(report.died)} lost every "
+                            f"replica of experts {list(lost)[:8]} — "
+                            "zero-data-loss shrink impossible; "
+                            + (f"restoring from checkpoint step {ck}"
+                               if ck is not None else
+                               f"no checkpoint available (ckpt_dir="
+                               f"{self.ckpt_dir!r})")))
+                        if ck is None:
+                            # record the failed transition before bailing so
+                            # post-mortems see what died and what was lost
+                            event["latency_s"] = time.perf_counter() - t0
+                            self.recoveries.append(event)
+                            raise RuntimeError(
+                                f"experts {list(lost)[:8]} unrecoverable "
+                                "from surviving ranks and no checkpoint to "
+                                f"restore from (ckpt_dir={self.ckpt_dir!r}) "
+                                "— pass ckpt_dir= with a saved checkpoint "
+                                "or add redundant replicas "
+                                "(num_redundant_experts)")
+                        new_cfg = dataclasses.replace(
+                            self.cfg, moe=dataclasses.replace(self.cfg.moe,
+                                                              placement=pl))
+                        tp = time.perf_counter()
+                        with self.tracer.span("checkpoint", restore=True,
+                                              ckpt_step=ck):
+                            self.params, _ = restore_checkpoint(
+                                self.ckpt_dir, ck,
+                                self.model.params_spec(new_cfg),
+                                mesh=self.mesh, placement=pl)
+                        phases["restore_s"] = time.perf_counter() - tp
+                        event["restored_from"] = ck
+                        self._ckpt_restores += 1
+                    else:
+                        src = (PL.mask_placement(src_live, self._sched.alive)
+                               if report.died else old)
+                        tp = time.perf_counter()
+                        with self.tracer.span("recover:adopt"):
+                            self.params = adopt_expert_params(
+                                self.params,
+                                self.model.params_spec(self._logical_cfg()),
+                                src, pl)
+                        phases["adopt_s"] = time.perf_counter() - tp
+                self.cfg = dataclasses.replace(
+                    self.cfg, moe=dataclasses.replace(self.cfg.moe,
+                                                      placement=pl))
+                self.placements.append(pl)
+                self.tracer.instant("placement_swap", step=step_idx,
+                                    version=len(self.placements))
+                self.step = self._compiled_step()
         dt = time.perf_counter() - t0
         event["latency_s"] = dt
         self._recovery_wall_s += dt
@@ -526,12 +611,14 @@ class DecodeServer:
         if self.ckpt_dir is None:
             return
         pl = self.cfg.moe.placement if self.cfg.moe else None
-        save_checkpoint(
-            self.ckpt_dir, step_idx + 1, self.params,
-            placement=pl if self.params_physical else None,
-            extra=dict(preempted=True,
-                       alive_ranks=(list(self._detector.alive)
-                                    if self._detector is not None else None)))
+        with self.tracer.span("checkpoint", step=step_idx, preempt=True):
+            save_checkpoint(
+                self.ckpt_dir, step_idx + 1, self.params,
+                placement=pl if self.params_physical else None,
+                extra=dict(preempted=True,
+                           alive_ranks=(list(self._detector.alive)
+                                        if self._detector is not None
+                                        else None)))
 
     def close(self):
         """Uninstall the preemption signal handlers (restores whatever was
@@ -544,10 +631,11 @@ class DecodeServer:
         family-agnostic; a production server runs a fused prefill)."""
         t0 = time.perf_counter()
         tok = None
-        for i in range(prompts.shape[1]):
-            tok, self.state = self.step(self.params, self.state,
-                                        {"tokens": prompts[:, i:i + 1]})
-        jax.block_until_ready(tok)
+        with self.tracer.span("prefill", tokens=int(prompts.shape[1])):
+            for i in range(prompts.shape[1]):
+                tok, self.state = self.step(self.params, self.state,
+                                            {"tokens": prompts[:, i:i + 1]})
+            jax.block_until_ready(tok)
         return tok, time.perf_counter() - t0
 
     def decode(self, first_tok: jax.Array, steps: int):
@@ -556,12 +644,16 @@ class DecodeServer:
         tok = first_tok
         itls = []
         outs = [np.asarray(tok)]
+        record_itls = self.series.enabled
         for i in range(steps):
             t0 = time.perf_counter()
-            tok, self.state = self.step(self.params, self.state,
-                                        {"tokens": tok})
-            jax.block_until_ready(tok)
+            with self.tracer.span("serve_step"):
+                tok, self.state = self.step(self.params, self.state,
+                                            {"tokens": tok})
+                jax.block_until_ready(tok)
             itls.append(time.perf_counter() - t0)
+            if record_itls:
+                self._win_itls.append(itls[-1])
             outs.append(np.asarray(tok))
             report = self._poll_faults(i)
             if report is not None:
@@ -610,11 +702,12 @@ class DecodeServer:
                 # The drain and any post-swap recompile are charged to the
                 # ITL stream on purpose — swaps and recoveries cost real
                 # latency, and the serving metrics should show it.
-                while pending:
-                    d = pending.popleft()
-                    jax.block_until_ready(d)
-                    marks.append(time.perf_counter())
-                    done.append(d)
+                with self.tracer.span("drain", pending=len(pending)):
+                    while pending:
+                        d = pending.popleft()
+                        jax.block_until_ready(d)
+                        marks.append(time.perf_counter())
+                        done.append(d)
                 if report is not None:
                     self._recover(i, report)
                 elif boundary:
@@ -681,7 +774,9 @@ class DecodeServer:
             alive_ranks=(list(self._detector.alive)
                          if self._detector is not None else None),
             stragglers_flagged=self.watchdog.flagged,
-            preempted=self.preempted)
+            preempted=self.preempted,
+            timeline=self.tracer.summary() or None,
+            series=list(self.series.rows) or None)
 
 
 class ContinuousDecodeServer(DecodeServer):
@@ -769,19 +864,33 @@ class ContinuousDecodeServer(DecodeServer):
         from repro.runtime.scheduler import ContinuousScheduler
         allocator = PageAllocator(self.num_pages, self.page_size)
         sched = ContinuousScheduler(requests, self.batch, self.max_pages,
-                                    allocator)
+                                    allocator,
+                                    tracer=(self.tracer if self.tracer.enabled
+                                            else None))
         self.reqsched = sched
+        record = self.series.enabled
         t0 = time.perf_counter()
         step_idx = 0
         marks = []
         while not sched.done:
             if max_steps is not None and step_idx >= max_steps:
                 break
-            feed = sched.advance(step_idx)
-            tok, self.state = self.step(self.params, self.state, feed)
-            jax.block_until_ready(tok)
+            with self.tracer.span("admission"):
+                feed = sched.advance(step_idx)
+            with self.tracer.span("serve_step"):
+                tok, self.state = self.step(self.params, self.state, feed)
+                jax.block_until_ready(tok)
             now = time.perf_counter()
             sched.observe(np.asarray(tok), now)
+            if record:
+                # pure host state — engine occupancy at this boundary
+                itl = now - (marks[-1] if marks else t0)
+                self._win_itls.append(itl)
+                self.series.record(
+                    kind="step", step=step_idx, itl_s=itl,
+                    queue_depth=len(sched.queue), active=sched.live_count,
+                    pages_live=allocator.live_count,
+                    pages_peak=allocator.peak_live)
             marks.append(now)
             report = self._poll_faults(step_idx)
             if report is not None:
@@ -846,4 +955,6 @@ class ContinuousDecodeServer(DecodeServer):
             alive_ranks=(list(self._detector.alive)
                          if self._detector is not None else None),
             stragglers_flagged=self.watchdog.flagged,
-            preempted=self.preempted)
+            preempted=self.preempted,
+            timeline=self.tracer.summary() or None,
+            series=list(self.series.rows) or None)

@@ -1,0 +1,314 @@
+"""Serving telemetry (docs/DESIGN.md §11): the tracer/time-series subsystem
+is host-side and boundary-scoped — tracing ON must leave every token stream
+BITWISE identical to tracing OFF (GQA and MLA continuous serve, including
+across an EPLB placement swap and a kill/rejoin recovery), the disabled
+tracer must be a true no-op (shared span singleton, zero events), exported
+Chrome traces must be well-formed (spans nest, durations >= 0, every
+recovery transition has a matching complete-event), and
+``ServeMetrics.as_dict()`` must stay ``json.dumps``-able with the new
+``timeline``/``series`` fields carrying numpy scalars."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+# CI seed matrix: the interpret-parity job re-runs this file under several
+# seeds (REPRO_TEST_SEED) — data/routing vary, every invariant must hold
+SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+from repro.configs import get_smoke
+from repro.core import placement as PL
+from repro.runtime.fault import FaultInjector
+from repro.runtime.scheduler import Request
+from repro.runtime.server import ContinuousDecodeServer, ServeMetrics
+from repro.runtime.telemetry import (NULL_SERIES, NULL_TRACER, NullTracer,
+                                     NullTimeSeries, TimeSeries, Tracer,
+                                     json_safe, load_chrome_trace, span_names,
+                                     validate_chrome_trace)
+
+
+class FakeClock:
+    """Injectable monotonic clock: advances only when told to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self, dt: float) -> None:
+        self.t += dt
+
+
+# --------------------------------------------------------------------------
+# tracer unit tests (fake clock: timings are exact, not approximate)
+# --------------------------------------------------------------------------
+
+def test_tracer_fake_clock_deterministic(tmp_path):
+    clk = FakeClock()
+    tr = Tracer(clock=clk, pid=7, tid=3)
+    with tr.span("outer", step=0):
+        clk.tick(0.002)
+        with tr.span("inner"):
+            clk.tick(0.001)
+        tr.instant("mark", rid=np.int64(5))
+        tr.counter("queue_depth", 4)
+        clk.tick(0.0005)
+    assert len(tr) == 4
+    doc = tr.to_chrome_trace()
+    ev = validate_chrome_trace(doc)
+    by_name = {e["name"]: e for e in ev}
+    # inner: opened at t=2ms for 1ms; outer: t=0 for 3.5ms — exact, in µs
+    assert by_name["inner"]["ts"] == 2000.0 and by_name["inner"]["dur"] == 1000.0
+    assert by_name["outer"]["ts"] == 0.0 and by_name["outer"]["dur"] == 3500.0
+    assert by_name["mark"]["ph"] == "i" and by_name["mark"]["s"] == "t"
+    assert by_name["mark"]["args"] == {"rid": 5}          # numpy coerced
+    assert by_name["queue_depth"]["ph"] == "C"
+    assert all(e["pid"] == 7 and e["tid"] == 3 for e in ev)
+    # summary folds span time per name
+    s = tr.summary()
+    assert s["outer"]["count"] == 1 and s["outer"]["total_s"] == 0.0035
+    assert s["mark"]["ph"] == "i" and s["mark"]["total_s"] == 0.0
+    # round-trips through the file exporter
+    p = tr.write_chrome_trace(tmp_path / "trace.json")
+    assert span_names(validate_chrome_trace(load_chrome_trace(p))) == [
+        "inner", "outer"]
+
+
+def test_trace_validation_rejects_partial_overlap():
+    """Two X-events on one track that overlap without nesting are malformed
+    (a span closed after its parent) — the validator must trip."""
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 0, "tid": 0, "ts": 0.0, "dur": 10.0},
+        {"name": "b", "ph": "X", "pid": 0, "tid": 0, "ts": 5.0, "dur": 10.0},
+    ]}
+    with pytest.raises(AssertionError):
+        validate_chrome_trace(bad)
+    with pytest.raises(AssertionError):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "a", "ph": "X", "pid": 0, "tid": 0, "ts": 0.0,
+             "dur": -1.0}]})
+
+
+def test_span_survives_exception_and_still_validates():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    with pytest.raises(RuntimeError):
+        with tr.span("boundary"):
+            clk.tick(0.001)
+            raise RuntimeError("mid-boundary failure")
+    ev = validate_chrome_trace(tr.to_chrome_trace())
+    assert span_names(ev) == ["boundary"] and ev[0]["dur"] == 1000.0
+
+
+def test_null_tracer_and_series_are_noops():
+    tr = NullTracer()
+    assert not tr.enabled and not NULL_TRACER.enabled
+    # the disabled tracer hands out ONE shared span object: no per-step
+    # allocation on the serve hot path
+    s1, s2 = tr.span("serve_step", step=0), tr.span("rebalance")
+    assert s1 is s2
+    with s1:
+        pass
+    tr.instant("x")
+    tr.counter("y", 1.0)
+    assert len(tr) == 0 and tr.summary() == {}
+    assert tr.to_chrome_trace()["traceEvents"] == []
+    ns = NullTimeSeries()
+    ns.record(kind="step", itl_s=1.0)
+    assert ns.rows == () and not ns.enabled and not NULL_SERIES.enabled
+
+
+def test_serve_metrics_as_dict_json_serializable():
+    """timeline/series land in as_dict() with numpy leaves coerced."""
+    m = ServeMetrics(
+        ttft_s=np.float64(0.1), itl_mean_s=0.01, itl_p99_s=0.02,
+        output_tok_s=np.float32(123.0), total_tokens=np.int64(64),
+        timeline={"serve_step": {"count": np.int64(8),
+                                 "total_s": np.float64(0.08), "ph": "X"}},
+        series=[{"kind": "step", "itl_s": np.float32(0.01),
+                 "rank_loads": np.arange(4)}])
+    d = m.as_dict()
+    out = json.loads(json.dumps(d))
+    assert out["timeline"]["serve_step"]["count"] == 8
+    assert out["series"][0]["rank_loads"] == [0, 1, 2, 3]
+    assert json_safe(np.bool_(True)) in (True, 1)
+
+
+# --------------------------------------------------------------------------
+# bitwise parity: tracing on vs off through the continuous engine
+# --------------------------------------------------------------------------
+
+def _requests():
+    return [Request(0, np.array([3, 5, 7], np.int32), 6),
+            Request(1, np.array([11, 2], np.int32), 8),
+            Request(2, np.array([9, 9, 9, 9, 1], np.int32), 5,
+                    arrival_step=4),
+            Request(3, np.array([4], np.int32), 7, arrival_step=6)]
+
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "minicpm3-4b"])
+def test_continuous_tracing_on_off_bitwise(arch, tmp_path):
+    """GQA (dbrx) and absorbed-MLA (minicpm3) continuous serve: turning the
+    tracer + time series on must not move a single token — telemetry reads
+    host state the boundaries already materialize."""
+    cfg = get_smoke(arch)
+
+    off = ContinuousDecodeServer(cfg, batch=3, max_len=32, page_size=4)
+    m_off = off.serve_requests(_requests())
+    base = {r.rid: off.reqsched.tokens_for(r.rid) for r in _requests()}
+    off.close()
+    assert m_off.timeline is None and m_off.series is None
+
+    tr, se = Tracer(), TimeSeries()
+    on = ContinuousDecodeServer(cfg, batch=3, max_len=32, page_size=4,
+                                tracer=tr, series=se)
+    m_on = on.serve_requests(_requests())
+    got = {r.rid: on.reqsched.tokens_for(r.rid) for r in _requests()}
+    on.close()
+
+    for rid, toks in base.items():
+        np.testing.assert_array_equal(toks, got[rid])
+    assert m_on.requests_completed == m_off.requests_completed == 4
+    assert m_on.serve_steps == m_off.serve_steps
+
+    ev = validate_chrome_trace(tr.to_chrome_trace())
+    names = set(span_names(ev))
+    assert {"serve_step", "admission"} <= names
+    inst = [e["name"] for e in ev if e["ph"] == "i"]
+    assert inst.count("admit") == 4 and inst.count("complete") == 4
+    assert m_on.timeline["serve_step"]["count"] == m_on.serve_steps
+    # per-step series rows carry queue/slot/page occupancy
+    steps = [r for r in m_on.series if r["kind"] == "step"]
+    assert len(steps) == m_on.serve_steps
+    assert all(r["pages_live"] >= 0 and r["queue_depth"] >= 0 for r in steps)
+    assert max(r["pages_live"] for r in steps) <= m_on.pages_peak
+    json.dumps(m_on.as_dict())
+
+
+# --------------------------------------------------------------------------
+# parity + well-formedness across a placement swap AND a kill/rejoin
+# --------------------------------------------------------------------------
+
+def _cfg_physical(placement):
+    cfg = get_smoke("dbrx-132b")
+    moe = dataclasses.replace(cfg.moe, ep_mode="ll", ep_axis=("data",),
+                              track_expert_heat=True, params_physical=True,
+                              placement=placement)
+    return dataclasses.replace(cfg, moe=moe)
+
+
+def _mesh8():
+    import jax
+    return jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def test_traced_swap_and_kill_rejoin_bitwise_and_wellformed(tmp_path):
+    """The acceptance scenario: continuous serve over the 8-rank mesh with
+    EPLB swaps every 4 steps AND rank 2 killed then rejoined. Tracing on
+    must stay bitwise-equal to tracing off, and the trace must contain the
+    rebalance span plus BOTH recovery spans with phase timings."""
+    E = 8
+    cfg = _cfg_physical(PL.redundant_placement(E, 8, E))
+    mesh = _mesh8()
+    kw = dict(batch=8, max_len=32, page_size=4, num_redundant_experts=E,
+              rebalance_every=4, miss_threshold=1)
+
+    srv_a = ContinuousDecodeServer(cfg, mesh=mesh,
+                                   fault_injector=FaultInjector(
+                                       8, kill={3: 2}, rejoin={8: 2}), **kw)
+    srv_a.serve_requests(_requests())
+    base = {i: srv_a.reqsched.tokens_for(i) for i in range(4)}
+    srv_a.close()
+
+    tr, se = Tracer(), TimeSeries()
+    srv_b = ContinuousDecodeServer(cfg, mesh=mesh,
+                                   fault_injector=FaultInjector(
+                                       8, kill={3: 2}, rejoin={8: 2}),
+                                   tracer=tr, series=se, **kw)
+    m = srv_b.serve_requests(_requests())
+    sched = srv_b.reqsched
+    srv_b.close()
+
+    # (a) bitwise parity across swap + shrink + expand, telemetry on
+    for i in range(4):
+        np.testing.assert_array_equal(base[i], sched.tokens_for(i))
+    assert [e["kind"] for e in srv_b.recoveries] == ["shrink", "expand"]
+    assert m.recovery_count == 2
+
+    # (b) trace well-formedness: spans nest, durations >= 0 (validator),
+    # every recovery transition has exactly one complete-event
+    ev = validate_chrome_trace(tr.to_chrome_trace())
+    names = span_names(ev)
+    assert names.count("recover:shrink") == 1
+    assert names.count("recover:expand") == 1
+    assert names.count("rebalance") >= 1
+    assert {"fault_poll", "serve_step", "admission"} <= set(names)
+    inst = [e["name"] for e in ev if e["ph"] == "i"]
+    assert inst.count("fault_detected") == 2
+    assert inst.count("placement_swap") >= 2    # shrink + expand at least
+    # per-transition phase timings (detect lands as the fault_detected
+    # instant; repack/adopt/restore are timed inside the recovery span)
+    for e in srv_b.recoveries:
+        assert e["phases"]["repack_s"] >= 0.0
+        assert "adopt_s" in e["phases"] or "restore_s" in e["phases"]
+    # top-level recovery spans carry the transition args (the nested
+    # recover:repack / recover:adopt phase spans are unannotated timings)
+    rec = [e for e in ev if e["name"] in ("recover:shrink", "recover:expand")]
+    assert all("step" in e["args"] and "died" in e["args"] for e in rec)
+
+    # (c) windowed series rows from the boundaries the engine already syncs
+    kinds = {r["kind"] for r in m.series}
+    assert "rebalance" in kinds and {"recover:shrink", "recover:expand"} <= kinds
+    for r in m.series:
+        if r["kind"] != "step":
+            assert r["imbalance"] >= 1.0 and len(r["rank_loads"]) == 8
+    json.dumps(m.as_dict())
+    # exported file round-trips through the validator
+    p = tr.write_chrome_trace(tmp_path / "serve_trace.json")
+    validate_chrome_trace(load_chrome_trace(p))
+
+
+# --------------------------------------------------------------------------
+# driver-level: run_rebalancing with telemetry
+# --------------------------------------------------------------------------
+
+def test_run_rebalancing_traced_host_skeleton():
+    """The EPLB driver skeleton with a pure-host fn: rebalance spans at
+    every advance boundary, series rows showing the adopted table improving
+    the skewed window's imbalance, and zero telemetry overhead on the
+    placement schedule itself (same placements as the untraced run)."""
+    from repro.core import EpGroupConfig
+    from repro.core.placement import run_rebalancing
+
+    E, N = 8, 4
+    heat = np.zeros(E)
+    heat[:2] = 100.0                      # two hot experts
+    base_cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=16, hidden=8,
+                             top_k=2, mode="ll")
+
+    def make(group):
+        return lambda item: (item, heat)
+
+    items = list(range(6))
+    _, pls_off = run_rebalancing(base_cfg, make, items, advance_every=2,
+                                 ep_size=N, num_redundant=2)
+    clk = FakeClock()
+    tr, se = Tracer(clock=clk), TimeSeries()
+    _, pls_on = run_rebalancing(base_cfg, make, items, advance_every=2,
+                                ep_size=N, num_redundant=2,
+                                tracer=tr, series=se)
+    assert [p.fingerprint() if p else None for p in pls_on] == \
+           [p.fingerprint() if p else None for p in pls_off]
+    ev = validate_chrome_trace(tr.to_chrome_trace())
+    # boundaries at items 1 and 3 (never after the last item)
+    assert span_names(ev).count("rebalance") == 2
+    rows = [r for r in se.rows if r["kind"] == "rebalance"]
+    assert len(rows) == 2
+    # the redundant rebalance spreads the two hot experts' replicas
+    assert rows[0]["placement_changed"]
+    assert rows[0]["imbalance_after"] <= rows[0]["imbalance"]
+    assert all(r["window_tokens"] == 200.0 for r in rows)
