@@ -38,6 +38,8 @@ import jax                     # noqa: E402
 import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
 
+from repro.analysis import (RetraceAuditor,      # noqa: E402
+                            guard_serve_steps)
 from repro.configs import get_smoke              # noqa: E402
 from repro.core import placement as PL           # noqa: E402
 from repro.runtime.scheduler import Request      # noqa: E402
@@ -97,8 +99,15 @@ def bench_continuous(n_req=16, rate=0.4, max_new=16, seed=0):
 
     srv = ContinuousDecodeServer(cfg, batch=8, max_len=64, mesh=mesh,
                                  page_size=8)
-    m = srv.serve_requests(reqs())
+    # audited run (docs/DESIGN.md §12): no placement changes here, so the
+    # jit-stability claim is exact — request join/leave across the whole
+    # stream must cause ZERO retraces/recompiles — and every step runs
+    # under the d2h transfer guard (arms on accelerators)
+    aud = RetraceAuditor(srv)
+    with guard_serve_steps(srv):
+        m = srv.serve_requests(reqs())
     srv.close()
+    aud.assert_retrace_economy()
     assert m.requests_completed == n_req, m
     assert m.pages_peak <= m.pages_dense_equiv, m     # the paged-KV claim
 
@@ -138,7 +147,8 @@ def bench_continuous(n_req=16, rate=0.4, max_new=16, seed=0):
     acct = dict(n_req=n_req, poisson_rate_per_step=rate, max_new=max_new,
                 max_concurrency=8, page_size=8,
                 pages_peak=m.pages_peak, pages_dense_equiv=m.pages_dense_equiv,
-                pages_ratio=round(m.pages_peak / m.pages_dense_equiv, 3))
+                pages_ratio=round(m.pages_peak / m.pages_dense_equiv, 3),
+                retraces=aud.traces, step_cache_peak=aud.max_cache_seen)
     return rows, acct
 
 

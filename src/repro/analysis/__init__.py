@@ -1,0 +1,28 @@
+"""Static-analysis subsystem: the standing contracts as first-class checks.
+
+Three layers (ISSUE 10 / docs/DESIGN.md §12):
+
+- ``contracts``   — AST invariant linter: the named rules that used to live
+  as ``inspect.getsource`` string greps scattered across tests (one-pass-
+  per-phase, placement-never-in-phase-bodies, registry-only API layer,
+  staged-primitive backends, recv one-pass) plus the step-path host-sync
+  rule. Tests and CI call the same rule objects.
+- ``trace_audit`` — runtime auditors: retrace/compiled-cache-bound counter,
+  ``adopt_expert_params`` donation auditor, and the device->host transfer
+  guard for serve steps.
+- ``plan_verify`` — slot-map/write-set verifier over modes x geometries x
+  chunking x placements: in-capacity, write-disjoint, EMPTY-safe, and
+  round-trip bijective where the plan claims zero-drop.
+
+CLI: ``python -m repro.analysis`` (see ``__main__``).
+"""
+from repro.analysis.contracts import (Finding, RULES, run_all_contracts,
+                                      run_rule, check_source)
+from repro.analysis.trace_audit import (RetraceAuditor, DonationAuditor,
+                                        transfer_guard, guard_serve_steps)
+
+__all__ = [
+    "Finding", "RULES", "run_all_contracts", "run_rule", "check_source",
+    "RetraceAuditor", "DonationAuditor", "transfer_guard",
+    "guard_serve_steps",
+]

@@ -1,0 +1,88 @@
+"""``python -m repro.analysis`` — run the full static-analysis suite.
+
+Exit 0 when the tree is clean, 1 on any finding. Layers:
+
+- AST contract linter (``contracts.RULES``) over the configured targets
+- slot-map / write-set verification matrix (``plan_verify.PLAN_CASES``),
+  which needs 8 host devices — XLA_FLAGS is set below, before jax loads
+
+``--mutation-smoke`` instead seeds a known violation into a real module's
+source and asserts the linter still flags it (CI's guard against the
+analyzer rotting into a no-op): exit 0 when caught, 1 when missed.
+"""
+import os
+
+# must precede any (transitive) jax import: the plan verifier shard_maps
+# over an 8-device host platform, exactly like tests/conftest.py
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import ast
+import sys
+
+
+def _mutation_smoke() -> int:
+    """Seed slot arithmetic into a real phase body and a host sync into a
+    real step body; the linter must flag both."""
+    from repro.analysis.contracts import check_source, repo_root
+
+    failures = []
+
+    def seed(rel, fn_name, line, rule):
+        src = (repo_root() / rel).read_text()
+        tree = ast.parse(src)
+        fn = next(n for n in ast.walk(tree)
+                  if isinstance(n, ast.FunctionDef) and n.name == fn_name)
+        first = fn.body[0]
+        lines = src.splitlines()
+        lines.insert(first.lineno - 1, " " * first.col_offset + line)
+        mutated = "\n".join(lines)
+        found = check_source(rule, mutated, path=f"<mutated {rel}>")
+        tag = f"{rule} @ {rel}:{fn_name}"
+        if any(f.rule == rule for f in found):
+            print(f"mutation-smoke: {tag}: caught ({len(found)} finding(s))")
+        else:
+            failures.append(tag)
+            print(f"mutation-smoke: {tag}: MISSED")
+
+    seed("src/repro/core/ll.py", "ll_dispatch_send",
+         "_pos = S.positions_by_dest(handle.topk_idx, 8, None)",
+         "phase-one-pass")
+    seed("src/repro/runtime/steps.py", "make_serve_step",
+         "_host = float(jnp.zeros(()))",
+         "step-no-host-sync")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--only", choices=["contracts", "plans"],
+                    help="run a single layer")
+    ap.add_argument("--mutation-smoke", action="store_true",
+                    help="verify the linter catches seeded violations")
+    args = ap.parse_args(argv)
+
+    if args.mutation_smoke:
+        return _mutation_smoke()
+
+    rc = 0
+    if args.only in (None, "contracts"):
+        from repro.analysis.contracts import run_all_contracts
+        findings = run_all_contracts()
+        print(f"contracts: {len(findings)} finding(s)")
+        for f in findings:
+            print(f"  {f}")
+        rc |= bool(findings)
+    if args.only in (None, "plans"):
+        from repro.analysis.plan_verify import run_plan_checks
+        print("plan verification matrix:")
+        violations = run_plan_checks(log=print)
+        print(f"plans: {len(violations)} violation(s)")
+        for v in violations:
+            print(f"  {v}")
+        rc |= bool(violations)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

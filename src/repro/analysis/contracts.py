@@ -1,0 +1,440 @@
+"""AST invariant linter: the repo's standing contracts as named rules.
+
+Each rule is a real AST check over the module(s) it governs — the single
+source of truth that tests/test_plan.py, tests/test_placement.py,
+tests/test_backends.py, and the CI ``analysis`` job all call (they used to
+each carry their own ``inspect.getsource`` string grep; docs/DESIGN.md §12
+has the catalog).
+
+Rule model: a ``Rule`` names the files it governs (repo-relative), an
+optional function scope (only those function bodies are scanned; ``None`` =
+whole module), and a ``scan(tree, ctx)`` that yields findings. Running a
+rule against arbitrary source (``check_source``) scans ALL functions — that
+is what the known-bad fixture tests use, and it keeps fixtures honest: a
+fixture violates the rule by containing the construct, not by matching a
+magic function name.
+
+Suppressions are loud, never silent: a finding on line *n* is suppressed
+only by a ``# contract: allow(<rule>): <justification>`` comment on line
+*n* or *n-1*, and an empty justification is itself a finding. There are no
+out-of-file allowlists.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Callable, Iterable
+
+# --------------------------------------------------------------------------
+# findings + suppression
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str            # repo-relative (or "<fixture>" for check_source)
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+_ALLOW_RE = re.compile(r"#\s*contract:\s*allow\(([\w\-., ]+)\)\s*:?\s*(.*)")
+
+
+def _suppressions(src: str) -> dict[int, tuple[set[str], str]]:
+    """line -> (rule names allowed, justification). A comment on line n
+    covers findings on lines n and n+1."""
+    out: dict[int, tuple[set[str], str]] = {}
+    for i, text in enumerate(src.splitlines(), start=1):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        just = m.group(2).strip()
+        out[i] = (rules, just)
+        out[i + 1] = (rules, just)
+    return out
+
+
+def _apply_suppressions(findings: list[Finding], src: str) -> list[Finding]:
+    sup = _suppressions(src)
+    out = []
+    for f in findings:
+        hit = sup.get(f.line)
+        if hit is None or f.rule not in hit[0]:
+            out.append(f)
+        elif not hit[1]:
+            out.append(dataclasses.replace(
+                f, message=(f.message + " (suppression present but has no "
+                            "justification — write the why after the colon)")))
+    return out
+
+
+# --------------------------------------------------------------------------
+# AST helpers
+# --------------------------------------------------------------------------
+
+_FN_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _functions(tree: ast.Module, names: set[str] | None
+               ) -> Iterable[ast.FunctionDef]:
+    """Module-level and class-level function defs, filtered by name.
+    ``names=None`` selects every function (the fixture/check_source mode)."""
+    for node in ast.walk(tree):
+        if isinstance(node, _FN_NODES):
+            if names is None or node.name in names:
+                yield node
+
+
+def _is_name_or_attr(node: ast.AST, name: str) -> bool:
+    return ((isinstance(node, ast.Name) and node.id == name)
+            or (isinstance(node, ast.Attribute) and node.attr == name))
+
+
+def _mentions(node: ast.AST, names: set[str]) -> ast.AST | None:
+    """First sub-node that is a Name/Attribute matching any of ``names``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in names:
+            return sub
+        if isinstance(sub, ast.Attribute) and sub.attr in names:
+            return sub
+    return None
+
+
+# --------------------------------------------------------------------------
+# rule engine
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RuleCtx:
+    path: str
+    src: str
+    fn_names: set[str] | None    # None = scan all functions
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    description: str
+    # repo-relative file -> function-name scope (None = whole module)
+    targets: dict[str, frozenset[str] | None]
+    scan: Callable[[ast.Module, RuleCtx], list[Finding]]
+
+
+def _f(rule: str, ctx: RuleCtx, node: ast.AST, msg: str) -> Finding:
+    return Finding(rule, ctx.path, getattr(node, "lineno", 0), msg)
+
+
+# ---- rule: api-registry-only ---------------------------------------------
+
+_API_FILE = "src/repro/core/api.py"
+_MODE_ALIASES = {"_ll", "_ht", "_bl"}
+
+
+def _scan_api_registry_only(tree: ast.Module, ctx: RuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    mode_lines: set[int] = set()
+    for fn in _functions(tree, ctx.fn_names):
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and _is_name_or_attr(node.func, "isinstance")):
+                out.append(_f("api-registry-only", ctx, node,
+                              f"{fn.name}: isinstance dispatch — route "
+                              "pending types through the backend registry"))
+            if isinstance(node, (ast.Compare, ast.If, ast.IfExp, ast.Match)):
+                if isinstance(node, (ast.If, ast.IfExp)):
+                    probe: ast.AST = node.test
+                elif isinstance(node, ast.Match):
+                    probe = node.subject
+                else:
+                    probe = node
+                hit = _mentions(probe, {"mode"})
+                if hit is not None and hit.lineno not in mode_lines:
+                    mode_lines.add(hit.lineno)
+                    out.append(_f("api-registry-only", ctx, hit,
+                                  f"{fn.name}: branches on `mode` — the API "
+                                  "layer must route through "
+                                  "get_backend(group.mode) only"))
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in _MODE_ALIASES):
+                out.append(_f("api-registry-only", ctx, node,
+                              f"{fn.name}: direct mode-module call "
+                              f"`{node.value.id}.{node.attr}` — use the "
+                              "registry"))
+    return out
+
+
+# ---- rule: phase-one-pass ------------------------------------------------
+
+_PHASE_FNS = frozenset({
+    # ll.py
+    "_ncclep_dispatch_send", "_ncclep_dispatch_recv",
+    "_ncclep_combine_send", "_ncclep_combine_recv",
+    "_deepep_dispatch_send", "_deepep_dispatch_recv",
+    "_deepep_combine_send", "_deepep_combine_recv",
+    # ht.py
+    "_flat_dispatch_send", "_flat_combine_send", "_flat_combine_complete",
+    "_hier_dispatch_send", "_hier_combine_send", "_hier_combine_complete",
+    "ht_dispatch_complete",
+    # baseline.py
+    "baseline_dispatch_send", "baseline_dispatch_complete",
+    "baseline_combine_send", "baseline_combine_complete",
+})
+
+_SLOT_ARITH = {"positions_by_dest", "cumsum", "argsort", "build_gather_map"}
+
+_MODE_FILES = ("src/repro/core/ll.py", "src/repro/core/ht.py",
+               "src/repro/core/baseline.py")
+
+
+def _scan_phase_one_pass(tree: ast.Module, ctx: RuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for fn in _functions(tree, ctx.fn_names):
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                name = node.id if isinstance(node, ast.Name) else node.attr
+                if name in _SLOT_ARITH:
+                    out.append(_f("phase-one-pass", ctx, node,
+                                  f"{fn.name}: slot arithmetic `{name}` in a "
+                                  "phase body — maps are computed once in "
+                                  "plan.build_plan"))
+    return out
+
+
+# ---- rule: phase-no-placement --------------------------------------------
+
+_PLACEMENT_NAMES = {"assign", "dest_of", "slot_expert"}
+
+
+def _scan_phase_no_placement(tree: ast.Module, ctx: RuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    scope = (_functions(tree, ctx.fn_names) if ctx.fn_names is not None
+             else [tree])
+    for top in scope:
+        for node in ast.walk(top):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                name = node.id if isinstance(node, ast.Name) else node.attr
+                if name in _PLACEMENT_NAMES:
+                    out.append(_f(
+                        "phase-no-placement", ctx, node,
+                        f"placement resolution `{name}` in a mode module — "
+                        "plan construction (core/plan.py dest_of) is the one "
+                        "resolution site (docs/DESIGN.md §8)"))
+    return out
+
+
+# ---- rule: recv-one-pass -------------------------------------------------
+
+_RECV_PHASE_FNS = frozenset({
+    "_ncclep_dispatch_recv", "_deepep_dispatch_recv",
+    "_flat_dispatch_send", "_hier_dispatch_send", "ht_dispatch_complete",
+})
+_RECV_FILE = "src/repro/core/recv.py"
+
+
+def _scan_recv_one_pass(tree: ast.Module, ctx: RuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    if ctx.path == _RECV_FILE:
+        # the helper itself must be the fused kernel wrapper: it must call
+        # recv_unpack and must not two-pass via gather_rows
+        has_unpack = _mentions(tree, {"recv_unpack"}) is not None
+        if not has_unpack:
+            out.append(Finding("recv-one-pass", ctx.path, 1,
+                               "core/recv.py no longer routes through the "
+                               "fused recv_unpack kernel"))
+        hit = _mentions(tree, {"gather_rows"})
+        if hit is not None:
+            out.append(_f("recv-one-pass", ctx, hit,
+                          "two-pass gather in core/recv.py — unpack must be "
+                          "the fused recv_unpack kernel"))
+        return out
+    # mode modules: no separate dequant anywhere; no gather in recv phases
+    for node in ast.walk(tree):
+        if (isinstance(node, (ast.Name, ast.Attribute))
+                and _is_name_or_attr(node, "dequantize_fp8")):
+            out.append(_f("recv-one-pass", ctx, node,
+                          "dequantize_fp8 outside kernels/core.recv — recv "
+                          "unpack must be one fused pass"))
+    for fn in _functions(tree, ctx.fn_names):
+        for node in ast.walk(fn):
+            if (isinstance(node, (ast.Name, ast.Attribute))
+                    and _is_name_or_attr(node, "gather_rows")):
+                out.append(_f("recv-one-pass", ctx, node,
+                              f"{fn.name}: gather_rows in a dispatch-recv "
+                              "phase — use core.recv.unpack_recv (fused "
+                              "gather + dequant)"))
+    return out
+
+
+# ---- rule: backend-staged-primitive --------------------------------------
+
+_EAGER_SURFACE = {"dispatch", "combine", "complete"}
+
+
+def _scan_backend_staged(tree: ast.Module, ctx: RuleCtx) -> list[Finding]:
+    """Backends define ONLY the staged halves; BaseBackend derives the eager
+    surface from them. An override of dispatch/combine/complete is how a
+    backend could accept send_only and silently run eager — forbidden."""
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        is_backend = any(_is_name_or_attr(b, "BaseBackend")
+                         for b in node.bases)
+        if not is_backend:
+            continue
+        for item in node.body:
+            if isinstance(item, _FN_NODES) and item.name in _EAGER_SURFACE:
+                out.append(_f(
+                    "backend-staged-primitive", ctx, item,
+                    f"{node.name}.{item.name}: overrides the derived eager "
+                    "surface — backends implement staged halves only "
+                    "(dispatch_send/dispatch_complete/combine_send/"
+                    "combine_complete); the no-silent-ignore contract lives "
+                    "in BaseBackend"))
+    return out
+
+
+# ---- rule: step-no-host-sync ---------------------------------------------
+
+# Step-path registry: functions (including everything they define inside —
+# the factories' returned closures) that are traced into jit on the serve/
+# train step path. Host synchronization belongs at step BOUNDARIES
+# (runtime/server.py drains/rebalance/recovery), never inside these.
+_STEP_PATH: dict[str, frozenset[str]] = {
+    "src/repro/runtime/steps.py": frozenset({
+        "make_train_step", "make_serve_step", "make_paged_serve_step"}),
+    "src/repro/runtime/decode.py": frozenset({
+        "naive_decode_step", "_staged_pair", "pipelined_decode_step",
+        "decode_loop"}),
+    "src/repro/runtime/prefill.py": frozenset({
+        "sequential_prefill", "prefill_moe"}),
+}
+
+_NP_ALIASES = {"np", "numpy", "onp"}
+_SYNC_ATTRS = {"device_get", "block_until_ready"}
+
+
+def _scan_step_no_host_sync(tree: ast.Module, ctx: RuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for fn in _functions(tree, ctx.fn_names):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "item" \
+                    and not node.args and not node.keywords:
+                out.append(_f("step-no-host-sync", ctx, node,
+                              f"{fn.name}: .item() forces a device->host "
+                              "sync inside a step-path function"))
+            elif isinstance(f, (ast.Name, ast.Attribute)) and (
+                    (f.id if isinstance(f, ast.Name) else f.attr)
+                    in _SYNC_ATTRS):
+                name = f.id if isinstance(f, ast.Name) else f.attr
+                out.append(_f("step-no-host-sync", ctx, node,
+                              f"{fn.name}: {name}() inside a step-path "
+                              "function — host sync belongs at step "
+                              "boundaries"))
+            elif (isinstance(f, ast.Attribute) and f.attr == "asarray"
+                  and isinstance(f.value, ast.Name)
+                  and f.value.id in _NP_ALIASES):
+                out.append(_f("step-no-host-sync", ctx, node,
+                              f"{fn.name}: {f.value.id}.asarray() on a "
+                              "traced value reads the device buffer back — "
+                              "keep numpy at step boundaries"))
+            elif (isinstance(f, ast.Name) and f.id in {"float", "int"}
+                  and node.args
+                  and not isinstance(node.args[0], ast.Constant)):
+                out.append(_f("step-no-host-sync", ctx, node,
+                              f"{fn.name}: {f.id}(...) on a non-literal "
+                              "concretizes (and in eager mode silently "
+                              "syncs) a traced array"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# registry + runners
+# --------------------------------------------------------------------------
+
+RULES: dict[str, Rule] = {r.name: r for r in [
+    Rule("api-registry-only",
+         "core/api.py routes exclusively through the backend registry: no "
+         "per-mode branching, no isinstance pending dispatch, no direct "
+         "mode-module calls",
+         {_API_FILE: None},
+         _scan_api_registry_only),
+    Rule("phase-one-pass",
+         "no slot arithmetic (positions_by_dest/cumsum/argsort/"
+         "build_gather_map) inside dispatch/combine phase bodies — maps are "
+         "built once in plan.build_plan",
+         {p: _PHASE_FNS for p in _MODE_FILES},
+         _scan_phase_one_pass),
+    Rule("phase-no-placement",
+         "placement/replica resolution (assign/dest_of/slot_expert) never "
+         "appears in a mode module — plan construction is the one site",
+         {p: None for p in _MODE_FILES},
+         _scan_phase_no_placement),
+    Rule("recv-one-pass",
+         "recv unpack is one fused pass: no gather_rows in dispatch-recv "
+         "phases, no dequantize_fp8 outside kernels/core.recv, and "
+         "core/recv.py stays a recv_unpack kernel wrapper",
+         {**{p: _RECV_PHASE_FNS for p in _MODE_FILES}, _RECV_FILE: None},
+         _scan_recv_one_pass),
+    Rule("backend-staged-primitive",
+         "EpBackend subclasses implement staged halves only — overriding "
+         "the derived dispatch/combine/complete could silently drop "
+         "send_only",
+         {p: None for p in _MODE_FILES},
+         _scan_backend_staged),
+    Rule("step-no-host-sync",
+         "no host-sync calls (.item(), device_get, block_until_ready, "
+         "np.asarray, float/int on arrays) inside step-path functions in "
+         "runtime/",
+         {p: fns for p, fns in _STEP_PATH.items()},
+         _scan_step_no_host_sync),
+]}
+
+
+def repo_root() -> pathlib.Path:
+    # src/repro/analysis/contracts.py -> repo root is three levels above src
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def run_rule(name: str, root: pathlib.Path | None = None) -> list[Finding]:
+    """Run one named rule over its configured targets in the repo tree."""
+    rule = RULES[name]
+    root = root or repo_root()
+    out: list[Finding] = []
+    for rel, fns in rule.targets.items():
+        path = root / rel
+        src = path.read_text()
+        tree = ast.parse(src, filename=rel)
+        ctx = RuleCtx(path=rel, src=src,
+                      fn_names=set(fns) if fns is not None else None)
+        out.extend(_apply_suppressions(rule.scan(tree, ctx), src))
+    return out
+
+
+def run_all_contracts(root: pathlib.Path | None = None) -> list[Finding]:
+    out: list[Finding] = []
+    for name in RULES:
+        out.extend(run_rule(name, root))
+    return out
+
+
+def check_source(rule_name: str, source: str,
+                 path: str = "<fixture>") -> list[Finding]:
+    """Run one rule against arbitrary source, scanning ALL functions (no
+    name scope) — the fixture/mutation-smoke entry point. Suppression
+    comments in the source are honored, same as the tree run."""
+    rule = RULES[rule_name]
+    tree = ast.parse(source, filename=path)
+    ctx = RuleCtx(path=path, src=source, fn_names=None)
+    return _apply_suppressions(rule.scan(tree, ctx), source)

@@ -1,0 +1,474 @@
+"""Slot-map / write-set verifier — layer 3 of the analysis suite.
+
+Every EP transfer in this repo is a gather/scatter through maps the plan
+builder (``core/plan.py``) precomputes at handle creation. The Pallas/XLA
+chain *assumes* properties of those maps it cannot itself express or check:
+
+- **in-capacity**: every map value lies in ``[0, sentinel]`` for its buffer
+  (an out-of-range index silently clamps on device — data corruption, not
+  an error);
+- **write-disjoint**: scatter targets (``h_entry_slot``, ``h_slot_tgt``,
+  per-pod rail rows, combine recv rows) are unique per destination buffer —
+  duplicate ``.at[].set`` targets have *unspecified order* in XLA, i.e.
+  run-to-run nondeterminism, and duplicate ``.at[].add`` targets double-
+  count;
+- **EMPTY-safe**: a degraded placement's dead ranks receive exactly nothing
+  (send blocks all-sentinel, counts zero, expert region empty);
+- **round-trip**: pushing token ids through the full dispatch + combine
+  map chain reproduces every token exactly where the plan claims zero-drop,
+  and where a capacity factor is configured a dropped entry only ever
+  yields the zero row — never another token's data.
+
+This module extracts the per-rank plans (jit + shard_map over the 8-device
+host platform, exactly how production builds them) and checks all of the
+above in numpy, over every mode x layout x geometry x chunking x placement
+(contiguous / redundant / degraded EMPTY-row tables / padding / dropping).
+
+Run via ``python -m repro.analysis`` (CI) or call :func:`run_plan_checks`.
+``extract_plans`` / ``check_plans`` are exposed separately so tests can
+corrupt a map between the two and assert the verifier catches it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# NOTE: importing this module imports jax. The CLI (``__main__``) sets
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 BEFORE this import
+# (conftest.py does the same under pytest); a bare interpreter that imported
+# jax first will fail the device-count check below with a hint.
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ep_create_handle
+from repro.core import placement as PL
+from repro.core.group import EpGroupConfig, ep_create_group
+from repro.core.plan import dest_of
+
+N_RANKS = 8
+E, T, K, H = 16, 8, 2, 16
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCase:
+    """One point of the verification matrix."""
+    name: str
+    kind: str                        # "flat" | "transpose" | "hier"
+    cfg_kw: dict
+    num_tokens: int | None = None    # < T exercises the padding sentinel
+    zero_drop: bool = True           # False: capacity factor drops allowed
+    seed: int = 0
+
+
+def _redundant():
+    return PL.redundant_placement(E, N_RANKS, 8)
+
+
+def _degraded():
+    # rank 3 dead: table keeps 8 rows, row 3 all EMPTY, 16 + 5 = 21
+    # replicas packed 3-per-rank onto the 7 survivors
+    return PL.rebalance(np.ones(E), N_RANKS, num_redundant=5,
+                        alive_ranks=tuple(r for r in range(N_RANKS)
+                                          if r != 3))
+
+
+def _cases() -> list[PlanCase]:
+    hier = dict(mode="ht", ep_axis=("pod", "data"), ht_hierarchical=True)
+    return [
+        PlanCase("ll-nccl/contig", "flat", dict(mode="ll")),
+        PlanCase("ll-nccl/redundant", "flat",
+                 dict(mode="ll", placement=_redundant())),
+        PlanCase("ll-nccl/degraded", "flat",
+                 dict(mode="ll", placement=_degraded())),
+        PlanCase("ll-nccl/padding", "flat", dict(mode="ll"), num_tokens=5),
+        PlanCase("ll-nccl/dropping", "flat",
+                 dict(mode="ll", capacity_factor=1.0, slot_align=1),
+                 zero_drop=False),
+        PlanCase("ll-deepep/contig", "transpose",
+                 dict(mode="ll", ll_layout="deepep")),
+        PlanCase("ll-deepep/redundant", "transpose",
+                 dict(mode="ll", ll_layout="deepep", placement=_redundant())),
+        PlanCase("ht-flat/contig", "flat", dict(mode="ht")),
+        PlanCase("ht-flat/degraded", "flat",
+                 dict(mode="ht", placement=_degraded())),
+        PlanCase("ht-hier/nc1", "hier", dict(**hier)),
+        PlanCase("ht-hier/nc2", "hier", dict(ht_num_chunks=2, **hier)),
+        PlanCase("ht-hier/nc2-redundant", "hier",
+                 dict(ht_num_chunks=2, placement=_redundant(), **hier)),
+        PlanCase("ht-hier/nc2-degraded", "hier",
+                 dict(ht_num_chunks=2, placement=_degraded(), **hier)),
+        PlanCase("baseline/contig", "transpose", dict(mode="baseline")),
+        PlanCase("baseline/redundant", "transpose",
+                 dict(mode="baseline", placement=_redundant())),
+    ]
+
+
+PLAN_CASES: dict[str, PlanCase] = {c.name: c for c in _cases()}
+
+
+# --------------------------------------------------------------------------
+# extraction: build the handle exactly like production and ship the maps out
+# --------------------------------------------------------------------------
+
+def _build(case: PlanCase):
+    if len(jax.devices()) < N_RANKS:
+        raise RuntimeError(
+            f"plan verification needs {N_RANKS} devices; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+            "importing jax (python -m repro.analysis does this for you)")
+    cfg = EpGroupConfig(num_experts=E, max_tokens_per_rank=T, hidden=H,
+                        top_k=K, payload_dtype=jnp.float32, **case.cfg_kw)
+    is_hier = len(cfg.ep_axis) > 1
+    group = ep_create_group(cfg, ep_size=N_RANKS,
+                            inner_size=4 if is_hier else None)
+    if is_hier:
+        mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = jax.make_mesh((N_RANKS,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(case.seed)
+    topk = np.stack([np.stack([rng.choice(E, K, replace=False)
+                               for _ in range(T)])
+                     for _ in range(N_RANKS)]).astype(np.int32)
+    w = rng.rand(N_RANKS, T, K).astype(np.float32)
+    return group, mesh, topk, w
+
+
+def extract_plans(case: PlanCase):
+    """Build the case's handle under jit + shard_map (the production path)
+    and return ``(group, topk [N,T,K], plans)`` with every non-None plan
+    field stacked across ranks as a numpy array ``[N, ...]``."""
+    group, mesh, topk, w = _build(case)
+
+    def step(tk, wt):
+        h = ep_create_handle(group, tk[0], wt[0], case.num_tokens)
+        return {f.name: getattr(h.plan, f.name)[None]
+                for f in dataclasses.fields(h.plan)
+                if getattr(h.plan, f.name) is not None}
+
+    lead = (P(tuple(mesh.axis_names)) if len(mesh.axis_names) > 1
+            else P(mesh.axis_names[0]))
+    fn = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(lead, lead),
+                               out_specs=lead))
+    plans = fn(jnp.asarray(topk), jnp.asarray(w))
+    return group, topk, {k: np.asarray(v) for k, v in plans.items()}
+
+
+def _oracle(case: PlanCase, group, topk):
+    """Host-side routing ground truth: per global entry (r, t, k) the
+    physical (dest_rank, dest_slot) and validity — ``dest_of`` evaluated
+    eagerly with the same padding masking handle creation applies."""
+    nt = T if case.num_tokens is None else case.num_tokens
+    tk = topk.copy()
+    tk[:, nt:, :] = E
+    src = jnp.arange(N_RANKS, dtype=jnp.int32)[:, None, None]
+    dst, slot = dest_of(group, jnp.asarray(tk), src)
+    dst, slot = np.asarray(dst), np.asarray(slot)
+    valid = (np.arange(T)[None, :, None] < nt) & (dst < N_RANKS)
+    return dst, slot, valid
+
+
+# --------------------------------------------------------------------------
+# numpy map-chain simulators
+# --------------------------------------------------------------------------
+
+def _gather(buf, idx, fill=0):
+    """Mirror of kernels' sentinel gather: ``idx == len(buf)`` -> fill."""
+    flat = np.concatenate([np.asarray(buf), [fill]])
+    return flat[np.minimum(idx, len(buf))]
+
+
+def _dead_ranks(group):
+    pl = group.placement
+    return () if pl is None else pl.dead_ranks()
+
+
+class _Checker:
+    def __init__(self, case):
+        self.case = case
+        self.violations: list[str] = []
+
+    def expect(self, cond, msg):
+        if not cond:
+            self.violations.append(f"{self.case.name}: {msg}")
+
+    def in_range(self, name, arr, sentinel):
+        self.expect(arr.min(initial=0) >= 0 and arr.max(initial=0) <= sentinel,
+                    f"{name} out of range [0, {sentinel}]: "
+                    f"min={arr.min()} max={arr.max()}")
+
+    def unique(self, name, vals, sentinel):
+        live = vals[vals != sentinel]
+        self.expect(len(np.unique(live)) == len(live),
+                    f"{name}: duplicate scatter/consume targets "
+                    "(write-set not disjoint)")
+
+
+def _expected_counts(group, dst, slot, valid):
+    """[N, L] oracle receive counts per physical slot."""
+    L = group.local_experts
+    cnt = np.zeros((N_RANKS, L), np.int64)
+    d, s = dst[valid], slot[valid]
+    np.add.at(cnt, (d, s), 1)
+    return cnt
+
+
+def _check_flat(ck, case, group, plans, ids, dst, slot, valid):
+    """ll/nccl_ep and ht/flat: 4-map chain through mirrored [N, C] blocks."""
+    sg = plans["disp_send_gmap"]           # [N, N, Cd] -> token, sentinel T
+    rg = plans["disp_recv_gmap"]           # [N, L, A]  -> recv row
+    cg = plans["comb_send_gmap"]           # [N, N, Cc] -> y3d row
+    rows = plans["comb_recv_rows"]         # [N, T, K]  -> comb recv row
+    counts = plans["disp_counts"]          # [N, L]
+    Cd, Cc = sg.shape[-1], cg.shape[-1]
+    L, A = rg.shape[1], rg.shape[2]
+
+    ck.in_range("disp_send_gmap", sg, T)
+    ck.in_range("disp_recv_gmap", rg, N_RANKS * Cd)
+    ck.in_range("comb_send_gmap", cg, L * A)
+    ck.in_range("comb_recv_rows", rows, N_RANKS * Cc)
+    for r in range(N_RANKS):
+        ck.unique(f"comb_recv_rows[rank {r}]", rows[r].reshape(-1),
+                  N_RANKS * Cc)
+        if group.mode == "ll":             # rank-dedup layout: one slot per
+            for d in range(N_RANKS):       # (token, dest rank) pair
+                ck.unique(f"disp_send_gmap[rank {r} -> {d}]", sg[r, d], T)
+
+    # EMPTY safety: dead ranks send/receive/host nothing
+    for d in _dead_ranks(group):
+        ck.expect((sg[:, d, :] == T).all(),
+                  f"dispatch send block to dead rank {d} not all-sentinel")
+        ck.expect((counts[d] == 0).all(), f"dead rank {d} has recv counts")
+        ck.expect((rg[d] == N_RANKS * Cd).all(),
+                  f"dead rank {d} expert region not empty")
+        ck.expect((cg[d] == L * A).all(),
+                  f"dead rank {d} combine send block not empty")
+        landed = rows[rows != N_RANKS * Cc]
+        ck.expect((landed // Cc != d).all(),
+                  f"combine recv rows land in dead rank {d}'s block")
+
+    # round-trip: ids through dispatch a2a -> expert region -> combine a2a
+    sv = np.stack([_gather(ids[r], sg[r]) for r in range(N_RANKS)])
+    recv = sv.transpose(1, 0, 2).reshape(N_RANKS, N_RANKS * Cd)
+    y = np.stack([_gather(recv[d], rg[d].reshape(-1))
+                  for d in range(N_RANKS)])                 # [N, L*A]
+    cb = np.stack([_gather(y[d], cg[d]) for d in range(N_RANKS)])
+    crecv = cb.transpose(1, 0, 2).reshape(N_RANKS, N_RANKS * Cc)
+    fin = np.stack([_gather(crecv[r], rows[r]) for r in range(N_RANKS)])
+
+    exp = np.where(valid, ids[:, :, None], 0)
+    if case.zero_drop:
+        ck.expect((fin == exp).all(),
+                  "round-trip mismatch at zero-drop capacities: "
+                  f"{int((fin != exp).sum())} entries wrong")
+        ck.expect((counts == _expected_counts(group, dst, slot, valid)).all(),
+                  "disp_counts disagree with the routing oracle")
+        per_slot = (rg != N_RANKS * Cd).sum(axis=2)         # [N, L]
+        ck.expect((per_slot == counts).all(),
+                  "expert-region occupancy disagrees with disp_counts")
+    else:
+        ok = (fin == exp) | (fin == 0)
+        ck.expect(ok.all(),
+                  "capacity drop corrupted data: an entry returned another "
+                  f"token's payload ({int((~ok).sum())} entries)")
+
+
+def _check_transpose(ck, case, group, plans, ids, dst, slot, valid):
+    """ll/deepep and baseline: positional slots; recv/combine are pure
+    transposes, so the whole chain is send map + combine recv rows."""
+    sg = plans["disp_send_gmap"]           # [N, N, S] -> token, sentinel T
+    rows = plans["comb_recv_rows"]         # [N, T, K]
+    counts = plans["disp_counts"]
+    S_ = sg.shape[-1]
+
+    ck.in_range("disp_send_gmap", sg, T)
+    ck.in_range("comb_recv_rows", rows, N_RANKS * S_)
+    for r in range(N_RANKS):
+        ck.unique(f"comb_recv_rows[rank {r}]", rows[r].reshape(-1),
+                  N_RANKS * S_)
+
+    for d in _dead_ranks(group):
+        ck.expect((sg[:, d, :] == T).all(),
+                  f"dispatch send block to dead rank {d} not all-sentinel")
+        ck.expect((counts[d] == 0).all(), f"dead rank {d} has recv counts")
+        landed = rows[rows != N_RANKS * S_]
+        ck.expect((landed // S_ != d).all(),
+                  f"combine recv rows land in dead rank {d}'s block")
+
+    sv = np.stack([_gather(ids[r], sg[r]) for r in range(N_RANKS)])
+    # combine mirror: expert rank d returns its recv block to each source,
+    # so source r reads back exactly its own send matrix, flattened
+    back = sv.reshape(N_RANKS, N_RANKS * S_)
+    fin = np.stack([_gather(back[r], rows[r]) for r in range(N_RANKS)])
+    exp = np.where(valid, ids[:, :, None], 0)
+    ck.expect((fin == exp).all(),
+              f"round-trip mismatch: {int((fin != exp).sum())} entries wrong")
+    ck.expect((counts == _expected_counts(group, dst, slot, valid)).all(),
+              "disp_counts disagree with the routing oracle")
+
+
+def _check_hier(ck, case, group, plans, ids, dst, slot, valid):
+    """ht/hier: two-stage chunked chain, forward (dispatch) by id transport
+    and reverse (combine) by value-sum through the scatter-add maps."""
+    Ni, No = group.inner_size, group.outer_size
+    C1, C2 = group.ht_stage1_cap, group.ht_stage2_cap
+    L, A = group.local_experts, group.ht_expert_cap
+    g1 = plans["h_gmap1"]                  # [N, nc, Ni, C1] -> token
+    g2 = plans["h_gmap2"]                  # [N, nc, No, C2] -> recv1 row
+    rg = plans["disp_recv_gmap"]           # [N, L, A] -> concat row
+    st = plans["h_slot_tgt"]               # [N, L*A] -> stage-2 concat row
+    es = plans["h_entry_slot"]             # [N, N*T*K] -> y3d slot
+    rd = plans["h_rail_dst_rows"]          # [N, nc, No, Ni*Tc]
+    rs = plans["h_rail_src_rows"]          # [N, nc, No, Ni*Tc]
+    sr = plans["h_src_rows"]               # [N, T, Ni] -> concat1 row
+    counts = plans["disp_counts"]
+    nc = g1.shape[1]
+
+    ck.in_range("h_gmap1", g1, T)
+    ck.in_range("h_gmap2", g2, Ni * C1)
+    ck.in_range("disp_recv_gmap", rg, nc * No * C2)
+    ck.in_range("h_slot_tgt", st, nc * No * C2)
+    ck.in_range("h_entry_slot", es, L * A)
+    ck.in_range("h_rail_dst_rows", rd, Ni * C1)
+    ck.in_range("h_rail_src_rows", rs, No * C2)
+    ck.in_range("h_src_rows", sr, nc * Ni * C1)
+    for r in range(N_RANKS):
+        # scatter write-sets: .at[].set targets must be unique
+        ck.unique(f"h_entry_slot[rank {r}]", es[r], L * A)
+        # h_slot_tgt is a scatter-ADD (the per-token partial sum at the
+        # stage-2 slot), so duplicates are legal — but only among slots of
+        # ONE token; two tokens adding into one row would corrupt both
+        placed = es[r] < L * A
+        tok = np.nonzero(placed)[0] // K        # entry order is (r_src,t,k)
+        tgt = st[r][es[r][placed]]
+        order = np.argsort(tgt, kind="stable")
+        tgt_s, tok_s = tgt[order], tok[order]
+        same_row = tgt_s[1:] == tgt_s[:-1]
+        ck.expect((~same_row | (tok_s[1:] == tok_s[:-1])).all(),
+                  f"h_slot_tgt[rank {r}]: a stage-2 row accumulates "
+                  "contributions from more than one token")
+        for c in range(nc):
+            for o in range(No):
+                # within one pod block the rail accumulates distinct slots
+                ck.unique(f"h_rail_dst_rows[rank {r}, chunk {c}, pod {o}]",
+                          rd[r, c, o], Ni * C1)
+                ck.unique(f"h_rail_src_rows[rank {r}, chunk {c}, pod {o}]",
+                          rs[r, c, o], No * C2)
+
+    for d in _dead_ranks(group):
+        ck.expect((counts[d] == 0).all(), f"dead rank {d} has recv counts")
+        ck.expect((rg[d] == nc * No * C2).all(),
+                  f"dead rank {d} expert region not empty")
+        ck.expect((es[d] == L * A).all(),
+                  f"dead rank {d} owns combine entry slots")
+
+    # ---- dispatch: ids through stage-1 (intra-pod) + stage-2 (inter-pod)
+    concat = np.zeros((N_RANKS, nc * No * C2), ids.dtype)
+    for c in range(nc):
+        s1 = np.stack([_gather(ids[r], g1[r, c]) for r in range(N_RANKS)])
+        recv1 = s1.reshape(No, Ni, Ni, C1).transpose(0, 2, 1, 3)
+        flat1 = recv1.reshape(N_RANKS, Ni * C1)
+        s2 = np.stack([_gather(flat1[r], g2[r, c]) for r in range(N_RANKS)])
+        recv2 = s2.reshape(No, Ni, No, C2).transpose(2, 1, 0, 3)
+        concat[:, c * No * C2:(c + 1) * No * C2] = recv2.reshape(
+            N_RANKS, No * C2)
+    y = np.stack([_gather(concat[r], rg[r].reshape(-1))
+                  for r in range(N_RANKS)])                 # [N, L*A]
+
+    # every valid entry's payload sits where h_entry_slot says it does
+    ent_dst = dst.reshape(-1)              # entry order (r_src, t, k) ==
+    ent_ids = np.broadcast_to(ids[:, :, None],
+                              (N_RANKS, T, K)).reshape(-1)  # plan's (o,i,t,k)
+    ent_valid = valid.reshape(-1)
+    for d in range(N_RANKS):
+        mine = ent_valid & (ent_dst == d)
+        sl = es[d]
+        if case.zero_drop:
+            ck.expect((sl[mine] < L * A).all(),
+                      f"rank {d}: valid entries without a y3d slot "
+                      "at zero-drop capacities")
+            ck.expect((sl[~mine] == L * A).all(),
+                      f"rank {d}: entry slots assigned to foreign entries")
+        placed = mine & (sl < L * A)
+        ck.expect((y[d][sl[placed]] == ent_ids[placed]).all(),
+                  f"rank {d}: dispatched payload does not match "
+                  "h_entry_slot's claim")
+    if case.zero_drop:
+        ck.expect((counts == _expected_counts(group, dst, slot, valid)).all(),
+                  "disp_counts disagree with the routing oracle")
+        per_slot = (rg != nc * No * C2).sum(axis=2)
+        ck.expect((per_slot == counts).all(),
+                  "expert-region occupancy disagrees with disp_counts")
+
+    # ---- combine: unique per-entry values, summed back through the
+    # slot-domain scatter + rail reduction + source gather
+    rng = np.random.RandomState(7)
+    vals = rng.rand(N_RANKS * T * K) + 1.0                  # float64, > 0
+    vslot = np.zeros((N_RANKS, L * A + 1))
+    for d in range(N_RANKS):
+        live = es[d] < L * A
+        vslot[d][es[d][live]] = vals[live]                  # unique (checked)
+    buf2 = np.zeros((N_RANKS, nc * No * C2 + 1))
+    for r in range(N_RANKS):
+        np.add.at(buf2[r], st[r], vslot[r][:L * A])
+    buf2 = buf2[:, :nc * No * C2]
+    out = np.zeros((N_RANKS, nc * Ni * C1))
+    for c in range(nc):
+        chunk = buf2[:, c * No * C2:(c + 1) * No * C2]
+        back2 = chunk.reshape(No, Ni, No, C2).transpose(2, 1, 0, 3)
+        back2f = back2.reshape(N_RANKS, No * C2)
+        rail = np.zeros((N_RANKS, Ni * C1 + 1))
+        for r in range(N_RANKS):
+            v = _gather(back2f[r], rs[r, c].reshape(-1), fill=0.0)
+            np.add.at(rail[r], rd[r, c].reshape(-1), v)
+        back1 = rail[:, :Ni * C1].reshape(No, Ni, Ni, C1).transpose(0, 2, 1, 3)
+        out[:, c * Ni * C1:(c + 1) * Ni * C1] = back1.reshape(
+            N_RANKS, Ni * C1)
+    fin = np.stack([
+        _gather(out[r], sr[r].reshape(-1), fill=0.0).reshape(T, Ni).sum(1)
+        for r in range(N_RANKS)])                           # [N, T]
+    exp = (np.where(valid, vals.reshape(N_RANKS, T, K), 0.0)).sum(-1)
+    ck.expect(np.allclose(fin, exp, rtol=1e-9, atol=1e-9),
+              "combine value-sum mismatch: the reverse chain does not "
+              f"reduce every entry exactly once (max err "
+              f"{np.abs(fin - exp).max():.3e})")
+
+
+_CHECKERS = {"flat": _check_flat, "transpose": _check_transpose,
+             "hier": _check_hier}
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def check_plans(case: PlanCase, group, topk, plans) -> list[str]:
+    """Check extracted ``plans`` for ``case``; returns violation strings
+    (empty == clean). Split from :func:`extract_plans` so tests can corrupt
+    a map in between and assert detection."""
+    ck = _Checker(case)
+    dst, slot, valid = _oracle(case, group, topk)
+    ids = (np.arange(N_RANKS * T, dtype=np.int64) + 1).reshape(N_RANKS, T)
+    _CHECKERS[case.kind](ck, case, group, plans, ids, dst, slot, valid)
+    return ck.violations
+
+
+def verify_case(case: PlanCase) -> list[str]:
+    group, topk, plans = extract_plans(case)
+    return check_plans(case, group, topk, plans)
+
+
+def run_plan_checks(names=None, log=None) -> list[str]:
+    """Run the whole matrix (or the named subset); returns all violations."""
+    out: list[str] = []
+    for name, case in PLAN_CASES.items():
+        if names is not None and name not in names:
+            continue
+        v = verify_case(case)
+        if log is not None:
+            log(f"  {name:24s} {'FAIL (' + str(len(v)) + ')' if v else 'ok'}")
+        out.extend(v)
+    return out

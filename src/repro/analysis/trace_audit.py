@@ -1,0 +1,247 @@
+"""Runtime auditors for the serving determinism contracts.
+
+Three tools, usable from tests and benches (docs/DESIGN.md §12):
+
+- ``RetraceAuditor``: counts serve-step traces and compile-cache activity on
+  a ``DecodeServer`` and asserts the ``{current, previous}`` compiled-cache
+  bound — the property that makes a long-lived rebalancing server's memory
+  O(1) in the number of placement swaps, and that a shape/dtype drift would
+  silently break (every extra trace is a latency spike AND a pinned buffer
+  set).
+- ``DonationAuditor``: patches ``adopt_expert_params`` at every import site
+  and verifies that each adoption boundary which CAN donate (device leaves,
+  layout actually changing, slot count preserved) really deleted the old
+  expert buffers — the adopt-once peak-memory contract.
+- ``transfer_guard`` / ``guard_serve_steps``: make an unexpected
+  device->host sync inside ``serve_step`` a hard error.  Host->device stays
+  allowed: continuous batching feeds host-built numpy inputs (tokens /
+  page_tbl / kv_lens / active) every step by design; it is the *readback*
+  direction that must only happen at step boundaries
+  (``jax.block_until_ready`` + explicit ``np.asarray`` after the step).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+
+_ADOPT_SITES = ("repro.checkpoint.store", "repro.checkpoint",
+                "repro.runtime.server")
+
+
+class RetraceAuditor:
+    """Attach to a (running) DecodeServer; every compile and every trace of
+    the serve step from then on is counted, and the compiled-step cache is
+    bound-checked on every ``_compiled_step`` call.
+
+    Attach AFTER construction: the initial compile is the baseline, and the
+    counters then measure exactly the swap/recovery traffic — on a healthy
+    server ``compiles == traces == placements adopted since attach``.
+    """
+
+    def __init__(self, server, max_cache: int = 2):
+        self.server = server
+        self.max_cache = max_cache
+        self.traces = 0          # serve-step function bodies executed (trace time)
+        self.compiles = 0        # new entries admitted to the step cache
+        self.cache_calls = 0     # _compiled_step invocations (incl. hits)
+        self.max_cache_seen = len(server._step_cache)
+        self._placements_at_attach = len(server.placements)
+
+        orig_factory = server._step_factory
+        orig_compiled = server._compiled_step
+
+        def counting_factory():
+            fn = orig_factory()
+
+            @functools.wraps(fn)
+            def traced(*args, **kwargs):
+                # executes once per jit trace (the step is always jitted)
+                self.traces += 1
+                return fn(*args, **kwargs)
+            return traced
+
+        def checking_compiled():
+            self.cache_calls += 1
+            before = set(map(id, server._step_cache.values()))
+            step = orig_compiled()
+            if any(id(v) not in before for v in server._step_cache.values()):
+                self.compiles += 1
+            self.max_cache_seen = max(self.max_cache_seen,
+                                      len(server._step_cache))
+            if len(server._step_cache) > self.max_cache:
+                raise AssertionError(
+                    f"compiled-step cache grew to "
+                    f"{len(server._step_cache)} entries — the "
+                    f"{{current, previous}} bound is {self.max_cache}")
+            return step
+
+        server._step_factory = counting_factory
+        server._compiled_step = checking_compiled
+
+    @property
+    def placements_adopted(self) -> int:
+        """Placements adopted since this auditor attached."""
+        return len(self.server.placements) - self._placements_at_attach
+
+    def assert_cache_bounded(self):
+        if self.max_cache_seen > self.max_cache:
+            raise AssertionError(
+                f"compiled-step cache peaked at {self.max_cache_seen} "
+                f"(bound {self.max_cache})")
+
+    def assert_retrace_economy(self):
+        """Exactly one compile and one trace per adopted placement — no
+        hidden retraces (shape/dtype drift, cache-key churn) and no
+        compile that failed to trace."""
+        self.assert_cache_bounded()
+        want = self.placements_adopted
+        if not (self.compiles == self.traces == want):
+            raise AssertionError(
+                f"retrace economy violated: {self.compiles} compiles / "
+                f"{self.traces} traces for {want} placement adoptions "
+                "(expected exactly one of each per adoption)")
+
+
+class DonationAuditor:
+    """Context manager verifying every ``adopt_expert_params`` call inside
+    the block donates what it can: expert device leaves whose layout
+    actually changes with the slot count preserved must come out deleted
+    (``jax.Array.is_deleted``), or the adoption held two full weight sets.
+
+    ``checked`` counts rebind-eligible leaves observed; ``donated`` the ones
+    verified deleted. Violations raise on exit (or immediately via
+    ``assert_clean``). Patches every import site of ``adopt_expert_params``
+    and restores them on exit.
+    """
+
+    def __init__(self):
+        self.checked = 0
+        self.donated = 0
+        self.calls = 0
+        self.violations: list[str] = []
+        self._saved: list[tuple[object, object]] = []
+
+    # -- donation eligibility mirrors checkpoint.store._donating_rebind --
+
+    @staticmethod
+    def _rows(src_pl, dst_pl):
+        any_pl = src_pl or dst_pl
+        in_rows = (src_pl.num_slots if src_pl
+                   else any_pl.num_experts if any_pl else None)
+        out_rows = (dst_pl.num_slots if dst_pl
+                    else any_pl.num_experts if any_pl else None)
+        return in_rows, out_rows
+
+    def _wrap(self, orig):
+        from repro.checkpoint.store import _same_layout
+        from repro.parallel.sharding import ParamSpec
+
+        @functools.wraps(orig)
+        def audited(params, specs, src_placement=None, dst_placement=None,
+                    *, donate=True):
+            self.calls += 1
+            in_rows, out_rows = self._rows(src_placement, dst_placement)
+            eligible = (donate
+                        and not _same_layout(src_placement, dst_placement)
+                        and in_rows is not None and in_rows == out_rows)
+            watched: list[jax.Array] = []
+            if eligible:
+                def collect(spec, leaf):
+                    if (isinstance(spec, ParamSpec)
+                            and "expert" in (spec.axes or ())
+                            and isinstance(leaf, jax.Array)):
+                        watched.append(leaf)
+                    return leaf
+                jax.tree.map(collect, specs, params,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+            out = orig(params, specs, src_placement, dst_placement,
+                       donate=donate)
+            for leaf in watched:
+                self.checked += 1
+                if leaf.is_deleted():
+                    self.donated += 1
+                else:
+                    self.violations.append(
+                        f"adopt_expert_params(src={src_placement!r:.40s}, "
+                        f"dst={dst_placement!r:.40s}): expert leaf shape "
+                        f"{tuple(leaf.shape)} was rebind-eligible for "
+                        "donation but the old buffer survived — the "
+                        "adoption held two weight sets")
+            return out
+        return audited
+
+    def __enter__(self):
+        import importlib
+        for name in _ADOPT_SITES:
+            mod = importlib.import_module(name)
+            orig = getattr(mod, "adopt_expert_params", None)
+            if orig is None:
+                continue
+            self._saved.append((mod, orig))
+            setattr(mod, "adopt_expert_params", self._wrap(orig))
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        for mod, orig in self._saved:
+            setattr(mod, "adopt_expert_params", orig)
+        self._saved.clear()
+        if exc_type is None:
+            self.assert_clean()
+        return False
+
+    def assert_clean(self):
+        if self.violations:
+            raise AssertionError("undonated adoption rebind(s):\n"
+                                 + "\n".join(self.violations))
+
+
+@contextlib.contextmanager
+def transfer_guard(level: str = "disallow"):
+    """Any device->host transfer inside the block is a hard error (the JAX
+    transfer guard, scoped to the d2h direction only — see module
+    docstring for why h2d stays allowed). Arms on accelerators; on the CPU
+    host platform d2h is zero-copy and the guard never fires, so the linter's
+    static ``step-no-host-sync`` rule is the CPU-side line of defense."""
+    with jax.transfer_guard_device_to_host(level):
+        yield
+
+
+@contextlib.contextmanager
+def guard_serve_steps(server, level: str = "disallow"):
+    """Run a DecodeServer with every ``serve_step`` invocation under the
+    device->host transfer guard: a stray ``.item()`` / ``np.asarray`` /
+    implicit readback inside the step becomes a hard error, while the
+    boundary-scoped host work the server does between steps (heat drain,
+    scheduler observe, token readback after ``block_until_ready``) stays
+    legal. Wraps the current compiled step AND the compile path, so steps
+    re-jitted at placement swaps / recoveries inside the block are guarded
+    too."""
+    def wrap(fn):
+        if getattr(fn, "_d2h_guarded", False):
+            return fn
+
+        @functools.wraps(fn)
+        def guarded(*args, **kwargs):
+            with jax.transfer_guard_device_to_host(level):
+                return fn(*args, **kwargs)
+        guarded._d2h_guarded = True
+        return guarded
+
+    prev_compiled = server._compiled_step
+    prev_step = server.step
+
+    def guarded_compiled():
+        return wrap(prev_compiled())
+
+    server._compiled_step = guarded_compiled
+    server.step = wrap(prev_step)
+    try:
+        yield server
+    finally:
+        server._compiled_step = prev_compiled
+        # leave a functional (unguarded) step bound: recompute from the
+        # cache rather than restoring prev_step, which may be stale after
+        # an in-block placement swap
+        server.step = prev_compiled()

@@ -9,8 +9,6 @@ silently run eager (the seed's HT/baseline behavior). The API layer must
 contain no per-mode if/elif chains and no pending-type isinstance dispatch:
 ``ep_complete`` routes through the registry for all modes.
 """
-import inspect
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -80,14 +78,18 @@ def test_all_modes_registered():
 
 def test_api_layer_has_no_mode_chains():
     """core/api.py must route exclusively through the backend registry: no
-    per-mode if/elif chains, no pending-type isinstance dispatch."""
-    fns = (api_mod.ep_create_handle, api_mod.ep_dispatch, api_mod.ep_combine,
-           api_mod.ep_complete)
-    for fn in fns:
-        assert "isinstance" not in fn.__code__.co_names, fn.__name__
-        body = inspect.getsource(fn).replace(fn.__doc__ or "", "")
-        for banned in ("if mode", "mode ==", "_ll.", "_ht.", "_bl."):
-            assert banned not in body, (fn.__name__, banned)
+    per-mode if/elif chains, no pending-type isinstance dispatch. Shared
+    rule: analysis.contracts 'api-registry-only' (docs/DESIGN.md §12)."""
+    from repro.analysis.contracts import run_rule
+    assert run_rule("api-registry-only") == []
+
+
+def test_backends_define_staged_halves_only():
+    """No EpBackend subclass may override the derived eager surface
+    (dispatch/combine/complete) — that is how send_only could silently be
+    dropped. Shared rule: analysis.contracts 'backend-staged-primitive'."""
+    from repro.analysis.contracts import run_rule
+    assert run_rule("backend-staged-primitive") == []
 
 
 # --------------------------------------------------------------------------

@@ -558,17 +558,13 @@ def test_rebalancing_prefill_matches_sequential():
 
 
 # --------------------------------------------------------------------------
-# placement resolved at plan time, never in phase bodies (grep contract)
+# placement resolved at plan time, never in phase bodies (AST contract)
 # --------------------------------------------------------------------------
 
 def test_no_placement_resolution_in_phase_bodies():
     """The standing contract (docs/DESIGN.md §8): placement/replica lookup
     happens in plan construction only — phase bodies stay single-pass data
-    movement, so no mode module may touch the placement tables."""
-    import inspect
-    from repro.core import ll, ht, baseline
-    for mod in (ll, ht, baseline):
-        src = inspect.getsource(mod)
-        for banned in ("placement.assign", "PL.assign", "dest_of(",
-                       "slot_expert"):
-            assert banned not in src, (mod.__name__, banned)
+    movement, so no mode module may touch the placement tables. Shared rule:
+    analysis.contracts 'phase-no-placement' (docs/DESIGN.md §12)."""
+    from repro.analysis.contracts import run_rule
+    assert run_rule("phase-no-placement") == []

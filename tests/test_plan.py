@@ -4,8 +4,6 @@ no slot arithmetic in phase bodies, no two-pass gather+dequant unpack),
 and plan-driven dispatch/combine round-trips under padding and capacity
 drops. Handle refresh / plan reuse lives in tests/test_refresh.py.
 """
-import inspect
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -59,47 +57,23 @@ def test_positions_by_dest_property_hypothesis():
 # one-pass-per-phase invariant: no slot arithmetic in phase bodies
 # --------------------------------------------------------------------------
 
-PHASE_FNS = [
-    ll._ncclep_dispatch_send, ll._ncclep_dispatch_recv,
-    ll._ncclep_combine_send, ll._ncclep_combine_recv,
-    ll._deepep_dispatch_send, ll._deepep_dispatch_recv,
-    ll._deepep_combine_send, ll._deepep_combine_recv,
-    ht._flat_dispatch_send, ht._flat_combine_send, ht._flat_combine_complete,
-    ht._hier_dispatch_send, ht._hier_combine_send, ht._hier_combine_complete,
-    ht.ht_dispatch_complete,
-    baseline.baseline_dispatch_send, baseline.baseline_dispatch_complete,
-    baseline.baseline_combine_send, baseline.baseline_combine_complete,
-]
-
-
-@pytest.mark.parametrize("fn", PHASE_FNS, ids=lambda f: f.__name__)
-def test_no_slot_arithmetic_in_phase_bodies(fn):
+def test_no_slot_arithmetic_in_phase_bodies():
     """Slot maps are computed exactly once per handle (in plan.build_plan);
-    dispatch/combine bodies must be pure data movement over plan fields."""
-    src = inspect.getsource(fn)
-    for banned in ("positions_by_dest", "cumsum", "argsort", "build_gather_map"):
-        assert banned not in src, (fn.__name__, banned)
-
-
-RECV_PHASE_FNS = [
-    ll._ncclep_dispatch_recv, ll._deepep_dispatch_recv,
-    ht._flat_dispatch_send, ht._hier_dispatch_send, ht.ht_dispatch_complete,
-]
+    dispatch/combine bodies must be pure data movement over plan fields.
+    The rule (function list + banned names) lives in analysis.contracts —
+    this is its test-suite anchor."""
+    from repro.analysis.contracts import run_rule
+    assert run_rule("phase-one-pass") == []
 
 
 def test_no_two_pass_recv_unpack():
     """Recv side of the one-pass invariant: no phase module performs a
     gather followed by a separate fp8 dequantization — every recv unpack
     goes through core.recv.unpack_recv, the single call site of the fused
-    recv_unpack kernel, and every dequant through core.recv."""
-    from repro.core import recv as recv_mod
-    for mod in (ll, ht, baseline):
-        assert "dequantize_fp8" not in inspect.getsource(mod), mod.__name__
-    for fn in RECV_PHASE_FNS:
-        assert "gather_rows" not in inspect.getsource(fn), fn.__name__
-    # the helper itself must be fused: kernel wrapper only, no two-pass gather
-    src = inspect.getsource(recv_mod)
-    assert "recv_unpack" in src and "gather_rows" not in src
+    recv_unpack kernel, and every dequant through core.recv. Shared rule:
+    analysis.contracts 'recv-one-pass'."""
+    from repro.analysis.contracts import run_rule
+    assert run_rule("recv-one-pass") == []
 
 
 def test_plan_built_once_at_handle_creation():
